@@ -1,0 +1,34 @@
+"""Paper Appendix B: hardware cost model of PAM vs standard multiply.
+
+Pure arithmetic over the Horowitz (2014) numbers in the paper's Table 4 —
+reproduced here so the derived ratios in the paper can be checked."""
+from __future__ import annotations
+
+from .common import emit
+
+# [energy pJ, area um^2]
+COST = {
+    ("int32", "add"): (0.1, 137), ("int8", "add"): (0.03, 36),
+    ("float32", "add"): (0.9, 4184), ("float16", "add"): (0.4, 1360),
+    ("float32", "mul"): (3.7, 7700), ("float16", "mul"): (1.1, 1640),
+}
+
+
+def main():
+    pam_e, pam_a = 2 * COST[("int32", "add")][0], 2 * COST[("int32", "add")][1]
+    for fmt in ("float32", "float16"):
+        me, ma = COST[(fmt, "mul")]
+        emit(f"appb/pam_vs_{fmt}_mul", 0.0,
+             f"energy={pam_e/me:.1%} area={pam_a/ma:.1%} "
+             f"(paper: {'5.4%/3.6%' if fmt == 'float32' else '18%/17%'})")
+    # multiply-accumulate including the f32 accumulation
+    for fmt, accf in (("float32", "float32"), ("float16", "float32")):
+        me, ma = COST[(fmt, "mul")]
+        ae, aa = COST[(accf, "add")]
+        emit(f"appb/pam_mac_vs_{fmt}_mac", 0.0,
+             f"energy={(pam_e+ae)/(me+ae):.1%} area={(pam_a+aa)/(ma+aa):.1%} "
+             f"(paper: {'24%/38%' if fmt == 'float32' else '55%/77%'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Shared benchmark harness: tiny-scale training runs that reproduce the
+paper's comparisons on synthetic data (no IWSLT/ImageNet in this container).
+
+Every benchmark keeps the paper's discipline: hyperparameters are IDENTICAL
+between baseline and PA variants — the paper's central "drop-in" claim.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.data import DataConfig, SyntheticLM
+from repro.train import TrainConfig, make_train_step
+
+TINY_LM = ModelConfig(
+    name="bench-lm", family="decoder", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_head=16, d_ff=128, vocab_size=64, max_seq_len=64,
+    norm="layernorm", activation="relu", mlp_gated=False,
+    param_dtype="float32", compute_dtype="float32", remat="none",
+    label_smoothing=0.1)   # the paper's IWSLT loss uses smoothing 0.1
+
+OPT = OptConfig(peak_lr=3e-3, b1=0.9, b2=0.98, weight_decay=1e-4,
+                warmup_steps=5, total_steps=80)
+DATA = DataConfig(vocab_size=64, seq_len=32, global_batch=8, seed=7)
+
+
+def train_lm(cfg: ModelConfig, steps: int = 80, data: DataConfig = DATA,
+             opt: OptConfig = OPT, seed: int = 0):
+    """Train and return (final_loss_avg_last10, losses)."""
+    model = build_model(cfg)
+    stream = SyntheticLM(data)
+    step = jax.jit(make_train_step(model, opt))
+    params = model.init(jax.random.PRNGKey(seed))
+    st = init_opt_state(params, opt)
+    losses = []
+    for i in range(steps):
+        b = jax.tree.map(jnp.asarray, stream.batch(i))
+        params, st, m = step(params, st, b)
+        losses.append(float(m["loss"]))
+    return float(np.mean(losses[-10:])), losses
+
+
+def timeit_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

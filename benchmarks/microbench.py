@@ -1,0 +1,37 @@
+"""Microbenchmarks: us/call for the core PA ops on this host (CPU; the
+Pallas kernels run in interpret mode here, so their numbers measure the
+reference semantics, not TPU performance)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pam_value, paexp2_value, PAConfig, pa_matmul
+from .common import emit, timeit_us
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+
+    f = jax.jit(pam_value)
+    emit("micro/pam_eltwise_1M", timeit_us(f, x, y), "bit-exact jnp path")
+    f = jax.jit(paexp2_value)
+    emit("micro/paexp2_1M", timeit_us(f, x), "bit-exact jnp path")
+
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    pa = PAConfig(mode="matmul", deriv="approx")
+    f = jax.jit(lambda u, v: pa_matmul(u, v, pa))
+    us_pa = timeit_us(f, a, b, iters=5)
+    f2 = jax.jit(lambda u, v: u @ v)
+    us_std = timeit_us(f2, a, b)
+    emit("micro/pam_matmul_256", us_pa,
+         f"vs_std_matmul={us_std:.1f}us slowdown={us_pa/us_std:.0f}x "
+         "(paper App. E: 4-20x on GPU; hw support removes this)")
+
+
+if __name__ == "__main__":
+    main()

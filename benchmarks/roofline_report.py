@@ -1,0 +1,32 @@
+"""Deliverable (g): roofline terms per (arch x shape) from the dry-run
+artifacts. Emits one CSV row per cell; full table in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import analyse_cell
+from .common import emit
+
+
+def main():
+    dd = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    rows = 0
+    for path in sorted(glob.glob(os.path.join(dd, "*__16x16.json"))):
+        cell = json.load(open(path))
+        r = analyse_cell(cell)
+        if r is None:
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+             f"collective={r['collective_s']:.3f}s dominant={r['dominant']} "
+             f"mfu_bound={r['mfu_bound']:.2%}")
+        rows += 1
+    if rows == 0:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    main()

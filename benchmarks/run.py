@@ -1,0 +1,47 @@
+"""Benchmark suite — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+  fig2_error        — Fig. 2 / §2.7 error surface + compensation
+  table2_vision     — Table 2 (DeiT-Tiny vision, PA-matmul vs baseline)
+  table3_components — Table 3 (per-op exact/approx bwd + cumulative)
+  table5_archs      — Table 5 (architecture sweep)
+  table6_mantissa   — Table 6 / App. D (narrow mantissas)
+  appb_cost         — Appendix B hardware cost model
+  microbench        — us/call of core ops on this host
+  roofline_report   — deliverable (g): per-cell roofline terms
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (fig2_error, appb_cost, table6_mantissa, table3_components,
+               table5_archs, table2_vision, microbench, roofline_report)
+
+MODULES = [
+    ("fig2_error", fig2_error), ("appb_cost", appb_cost),
+    ("microbench", microbench), ("table6_mantissa", table6_mantissa),
+    ("table3_components", table3_components), ("table5_archs", table5_archs),
+    ("table2_vision", table2_vision), ("roofline_report", roofline_report),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR")
+            traceback.print_exc()
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

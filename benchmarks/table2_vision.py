@@ -1,0 +1,100 @@
+"""Paper Table 2 analogue: DeiT-Tiny-style ViT, baseline vs PA-matmul.
+
+ImageNet/CIFAR are unavailable offline; we train a reduced DeiT-shaped
+backbone (patch frontend stubbed as an embedding of quantised patches) on a
+synthetic separable vision task: class = argmax over class-template dot
+products with additive noise. The comparison mirrors the paper: identical
+hyperparameters, PA-matmul vs standard, report accuracy."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig, pa_cross_entropy, pa_matmul
+from repro.models.common import ModelConfig, meta, init_params, norm, norm_meta, stack_layers
+from repro.models.transformer import block_meta, block_apply
+from repro.optim import OptConfig, init_opt_state, adamw_update
+from .common import emit
+
+N_CLASSES, N_PATCH, D = 10, 16, 48
+CFG = ModelConfig(name="deit-bench", family="decoder", n_layers=2, d_model=D,
+                  n_heads=3, n_kv_heads=3, d_head=16, d_ff=96, vocab_size=10,
+                  norm="layernorm", activation="gelu", mlp_gated=False,
+                  param_dtype="float32", compute_dtype="float32", remat="none")
+
+
+def vit_meta(cfg):
+    return {"patch_proj": meta((N_PATCH, cfg.d_model), (None, "embed"), cfg=cfg),
+            "cls": meta((1, cfg.d_model), (None, "embed"), cfg=cfg),
+            "layers": stack_layers(block_meta(cfg), cfg.n_layers),
+            "final_norm": norm_meta(cfg),
+            "head": meta((cfg.d_model, N_CLASSES), ("embed", None), cfg=cfg)}
+
+
+def vit_apply(params, patches, cfg):
+    b = patches.shape[0]
+    h = pa_matmul(patches, params["patch_proj"], cfg.pa)       # (B, P, d)
+    # the decoder block is causal -> put the readout token LAST so it
+    # attends to every patch (a causal ViT; DeiT semantics preserved)
+    h = jnp.concatenate([h, jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))], 1)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1], dtype=jnp.int32)[None], (b, h.shape[1]))
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda x: x[i], params["layers"])
+        h, _, _ = block_apply(h, lp, cfg, positions, jnp.bool_(True), None)
+    h = norm(h[:, -1], params["final_norm"], cfg)
+    return pa_matmul(h, params["head"], cfg.pa)
+
+
+_TEMPLATES = np.random.default_rng(1234).standard_normal(
+    (N_CLASSES, 8 * N_PATCH)).astype(np.float32)   # FIXED class prototypes
+
+
+def make_data(rng, n):
+    y = rng.integers(0, N_CLASSES, n)
+    x = _TEMPLATES[y] + 2.5 * rng.standard_normal((n, 8 * N_PATCH)).astype(np.float32)
+    return x.reshape(n, N_PATCH, 8), y
+
+
+def run(pa: PAConfig, steps=250):
+    rng = np.random.default_rng(0)
+    xte, yte = make_data(np.random.default_rng(99), 512)
+    cfg = CFG.replace(pa=pa)
+    # patches projected by a small fixed stub first: pad 8 -> N_PATCH dims
+    proj = np.random.default_rng(1).standard_normal((8, N_PATCH)).astype(np.float32) / 3
+
+    params = init_params(jax.random.PRNGKey(0), vit_meta(cfg))
+    opt = OptConfig(peak_lr=3e-3, warmup_steps=20, total_steps=steps,
+                    weight_decay=0.05, b2=0.999)
+    st = init_opt_state(params, opt)
+
+    def loss_fn(p, x, y):
+        logits = vit_apply(p, jnp.asarray(x @ proj), cfg)
+        return pa_cross_entropy(logits, jnp.asarray(y), cfg.pa,
+                                label_smoothing=0.1)
+
+    @jax.jit
+    def step(p, st, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, st, _ = adamw_update(p, g, st, opt, pa=cfg.pa)
+        return p, st, l
+
+    for i in range(steps):
+        x, y = make_data(np.random.default_rng(i + 10), 64)
+        params, st, l = step(params, st, x, y)
+
+    logits = vit_apply(params, jnp.asarray(xte @ proj), cfg)
+    return float((np.asarray(jnp.argmax(logits, -1)) == yte).mean())
+
+
+def main():
+    acc_base = run(PAConfig(mode="off"))
+    acc_pa = run(PAConfig(mode="matmul", deriv="approx"))
+    emit("table2/vit_baseline", 0.0, f"test_acc={acc_base:.3f}")
+    emit("table2/vit_pa_matmul", 0.0,
+         f"test_acc={acc_pa:.3f} delta={acc_pa-acc_base:+.3f} "
+         f"(paper: +0.2% CIFAR10 / +0.0% ImageNet)")
+
+
+if __name__ == "__main__":
+    main()

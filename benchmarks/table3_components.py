@@ -1,0 +1,52 @@
+"""Paper Table 3: per-component PA replacement with exact vs approximate
+backward passes, plus the cumulative column, on a small LM task.
+
+The paper's finding to reproduce: approx bwd is better (or equal) for
+MATMUL / SOFTMAX / LAYERNORM; exact bwd is better for the LOSS; everything
+combined (incl. PA optimizer) trains with only a minor gap.
+"""
+from __future__ import annotations
+
+from repro.core import PAConfig
+from .common import TINY_LM, train_lm, emit
+
+STEPS = 70
+
+
+def run(pa: PAConfig, tag: str):
+    final, _ = train_lm(TINY_LM.replace(pa=pa), steps=STEPS)
+    return final
+
+
+def main():
+    base = run(PAConfig(mode="off"), "baseline")
+    emit("table3/baseline", 0.0, f"final_loss={base:.4f}")
+
+    # matmul-only, exact vs approx bwd (mode="matmul" leaves nonlinears std)
+    for deriv in ("exact", "approx"):
+        f = run(PAConfig(mode="matmul", deriv=deriv), f"matmul/{deriv}")
+        emit(f"table3/matmul_{deriv}", 0.0,
+             f"final_loss={f:.4f} delta={f-base:+.4f}")
+
+    # full nonlinear stack with each deriv (softmax+norm+activations)
+    for deriv in ("exact", "approx"):
+        f = run(PAConfig(mode="full", deriv=deriv, loss_deriv="exact",
+                         pa_optimizer=False), f"nonlin/{deriv}")
+        emit(f"table3/softmax_norm_{deriv}", 0.0,
+             f"final_loss={f:.4f} delta={f-base:+.4f}")
+
+    # loss deriv ablation (paper: exact wins for the loss)
+    for ld in ("exact", "approx"):
+        f = run(PAConfig(mode="full", deriv="approx", loss_deriv=ld,
+                         pa_optimizer=False), f"loss/{ld}")
+        emit(f"table3/loss_{ld}", 0.0, f"final_loss={f:.4f} delta={f-base:+.4f}")
+
+    # optimizer (paper §2.6) and the fully multiplication-free cumulative row
+    f = run(PAConfig(mode="full", deriv="approx", loss_deriv="exact",
+                     pa_optimizer=True), "cumulative")
+    emit("table3/cumulative_fully_pa", 0.0,
+         f"final_loss={f:.4f} delta={f-base:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

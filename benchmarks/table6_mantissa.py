@@ -1,0 +1,24 @@
+"""Paper Table 6 / Appendix D: PAM with narrowed mantissas.
+
+Claim to reproduce: float32(23) ~ bfloat(7) ~ 4-bit mantissa; 3 bits
+degrades noticeably."""
+from __future__ import annotations
+
+from repro.core import PAConfig
+from .common import TINY_LM, train_lm, emit
+
+STEPS = 70
+
+
+def main():
+    base, _ = train_lm(TINY_LM, steps=STEPS)
+    emit("table6/float32_baseline", 0.0, f"final_loss={base:.4f}")
+    for bits in (23, 7, 4, 3, 2):
+        pa = PAConfig(mode="matmul", deriv="approx", mantissa_bits=bits)
+        f, _ = train_lm(TINY_LM.replace(pa=pa), steps=STEPS)
+        emit(f"table6/pam_mantissa_{bits}", 0.0,
+             f"final_loss={f:.4f} delta={f-base:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

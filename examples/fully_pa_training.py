@@ -1,0 +1,73 @@
+"""The paper's headline result (§3.4): FULLY multiplication-free training.
+
+Forward pass, backward pass and the AdamW update all run on piecewise-affine
+ops (PAM / padiv / paexp2 / palog2 / pasqrt) — no float multiplications
+anywhere in the training process. This script trains the same tiny LM three
+ways and prints the loss trajectories side by side:
+
+    baseline      — standard float arithmetic
+    pa-matmul     — paper §3.2 (matmuls only)
+    fully-pa      — paper §3.4 (everything incl. optimizer)
+
+Run:  PYTHONPATH=src python examples/fully_pa_training.py [--steps 120]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.data import DataConfig, SyntheticLM
+from repro.train import make_train_step
+
+CFG = ModelConfig(name="fullypa", family="decoder", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=64,
+                  max_seq_len=64, param_dtype="float32",
+                  compute_dtype="float32", remat="none", label_smoothing=0.1)
+
+MODES = {
+    "baseline": PAConfig(mode="off"),
+    "pa-matmul": PAConfig(mode="matmul", deriv="approx"),
+    "fully-pa": PAConfig(mode="full", deriv="approx", loss_deriv="exact",
+                         pa_optimizer=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    data = SyntheticLM(DataConfig(vocab_size=64, seq_len=32, global_batch=8,
+                                  seed=1))
+    opt = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=args.steps,
+                    b2=0.98, weight_decay=1e-4)
+    print(f"data-process entropy floor: {data.entropy_floor():.3f} nats\n")
+
+    curves = {}
+    for name, pa in MODES.items():
+        model = build_model(CFG.replace(pa=pa))
+        step = jax.jit(make_train_step(model, opt))
+        params = model.init(jax.random.PRNGKey(0))
+        st = init_opt_state(params, opt)
+        losses = []
+        for i in range(args.steps):
+            b = jax.tree.map(jnp.asarray, data.batch(i))
+            params, st, m = step(params, st, b)
+            losses.append(float(m["loss"]))
+        curves[name] = losses
+        print(f"{name:10s} first={losses[0]:.3f} final={losses[-1]:.3f}")
+
+    print("\nstep      " + "  ".join(f"{n:>10s}" for n in curves))
+    for i in range(0, args.steps, max(1, args.steps // 10)):
+        print(f"{i:5d}     " + "  ".join(f"{curves[n][i]:10.3f}" for n in curves))
+    gap = curves["fully-pa"][-1] - curves["baseline"][-1]
+    print(f"\nfully-PA vs baseline final-loss gap: {gap:+.3f} "
+          "(paper: -0.9 BLEU on IWSLT14 — small, same-ballpark degradation)")
+
+
+if __name__ == "__main__":
+    main()

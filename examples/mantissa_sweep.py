@@ -1,0 +1,58 @@
+"""Appendix D: how narrow can the PAM mantissa go? (4 bits fine, 3 marginal)
+
+Sweeps mantissa_bits for PA-matmul training and prints final losses.
+
+Run:  PYTHONPATH=src python examples/mantissa_sweep.py [--steps 150]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.data import DataConfig, SyntheticLM
+from repro.train import make_train_step
+
+CFG = ModelConfig(name="mant", family="decoder", n_layers=3, d_model=96,
+                  n_heads=6, n_kv_heads=3, d_head=16, d_ff=192, vocab_size=96,
+                  max_seq_len=64, param_dtype="float32",
+                  compute_dtype="float32", remat="none")
+
+
+def run(bits, steps):
+    pa = (PAConfig(mode="off") if bits is None else
+          PAConfig(mode="matmul", deriv="approx", mantissa_bits=bits))
+    model = build_model(CFG.replace(pa=pa))
+    data = SyntheticLM(DataConfig(vocab_size=96, seq_len=48, global_batch=8,
+                                  seed=2, determinism=0.85))
+    opt = OptConfig(peak_lr=3e-3, warmup_steps=10, total_steps=steps)
+    step = jax.jit(make_train_step(model, opt))
+    params = model.init(jax.random.PRNGKey(0))
+    st = init_opt_state(params, opt)
+    last = []
+    for i in range(steps):
+        b = jax.tree.map(jnp.asarray, data.batch(i))
+        params, st, m = step(params, st, b)
+        if i >= steps - 10:
+            last.append(float(m["loss"]))
+    return sum(last) / len(last)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    base = run(None, args.steps)
+    print(f"{'float32 baseline':22s} final_loss={base:.4f}")
+    for bits in (23, 7, 4, 3, 2):
+        f = run(bits, args.steps)
+        tag = {23: "(float32)", 7: "(bfloat16)", 4: "", 3: "", 2: ""}[bits]
+        print(f"PAM mantissa={bits:2d} {tag:11s} final_loss={f:.4f} "
+              f"delta={f-base:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

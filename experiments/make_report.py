@@ -1,0 +1,87 @@
+"""Assemble EXPERIMENTS.md tables from the dry-run / perf artifacts."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.roofline import analyse_cell  # noqa: E402
+
+DD = os.path.dirname(__file__)
+
+
+def load(d):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(DD, d, "*.json"))):
+        c = json.load(open(p))
+        cells[(c["arch"], c["shape"], c.get("mesh", "?"))] = c
+    return cells
+
+
+def dryrun_table():
+    cells = load("dryrun")
+    rows = ["| arch | shape | mesh | status | params | compile s | peak GiB/dev "
+            "| collective MiB/dev/step |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), c in sorted(cells.items()):
+        if c["status"] == "skip":
+            rows.append(f"| {a} | {s} | {m} | {c['reason']} | | | | |")
+            continue
+        rows.append(
+            f"| {a} | {s} | {m} | ok | {c['params_total']/1e9:.2f}B "
+            f"| {c.get('compile_s', 0)} "
+            f"| {c['memory']['peak_per_device_gib']:.1f} "
+            f"| {c['collectives'].get('total_bytes', 0)/2**20:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(d="dryrun", opt=None):
+    cells = load(d)
+    optc = load(opt) if opt else {}
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | MFU bound | peak GiB |")
+    rows = [hdr, "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), c in sorted(cells.items()):
+        if m != "16x16" or c["status"] != "ok":
+            continue
+        r = analyse_cell(c)
+        if r is None:
+            continue
+        line = (f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+                f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.2%} "
+                f"| {r['peak_gib']:.1f} |")
+        o = optc.get((a, s, m))
+        if o and o.get("status") == "ok":
+            ro = analyse_cell(o)
+            if ro:
+                line += (f" -> opt: {ro['mfu_bound']:.2%} @ {ro['peak_gib']:.1f} GiB")
+        rows.append(line)
+    return "\n".join(rows)
+
+
+def perf_log_table():
+    rows = ["| tag | compute s | memory s | collective s | dominant | MFU bound "
+            "| peak GiB |", "|---|---|---|---|---|---|---|"]
+    path = os.path.join(DD, "perf_log.jsonl")
+    if not os.path.exists(path):
+        return "(no perf log)"
+    for line in open(path):
+        r = json.loads(line)
+        rows.append(
+            f"| {r['tag']} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['mfu_bound']:.2%} | {r['peak_gib']:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("### dryrun\n" + dryrun_table())
+    if which in ("roofline", "all"):
+        print("\n### roofline\n" + roofline_table())
+    if which in ("roofline_opt",):
+        print(roofline_table("dryrun", "dryrun_opt"))
+    if which in ("perf", "all"):
+        print("\n### perf\n" + perf_log_table())

@@ -1,0 +1,125 @@
+"""Fault-tolerant checkpointing: atomic npz shards + integrity manifest.
+
+Design (1000+-node posture):
+  * atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` to
+    ``step_<step>`` — a partially-written checkpoint is never visible, so a
+    preemption mid-save can't corrupt the restore path;
+  * integrity: a JSON manifest stores per-leaf shape/dtype/crc32; restore
+    verifies before handing params to the trainer;
+  * async: saves run on a background thread (training continues through the
+    serialisation); ``wait()`` joins before the next save or exit;
+  * resumable: ``latest_step`` + deterministic data pipeline give
+    restart-from-preemption with zero replayed-state bookkeeping;
+  * multi-host: each process saves only its addressable shards under
+    ``proc<k>``; this container is single-process, so k=0.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        arrays = [np.asarray(x) for x in leaves]   # device -> host copy here
+
+        def work():
+            tmp = os.path.join(self.dir, f"tmp.{step}")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": []}
+            np.savez(os.path.join(tmp, "proc0.npz"),
+                     **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+            for i, a in enumerate(arrays):
+                manifest["leaves"].append({
+                    "i": i, "shape": list(a.shape), "dtype": str(a.dtype),
+                    "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF,
+                })
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                import shutil
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d{10})", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of ``like``; optionally device_put with
+        the given sharding tree (resharding across mesh changes = elastic
+        restart)."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "proc0.npz"))
+        leaves, treedef = _flatten(like)
+        assert len(leaves) == len(manifest["leaves"]), "tree structure changed"
+        out = []
+        for i in range(len(leaves)):
+            a = data[f"leaf_{i}"]
+            ref = manifest["leaves"][i]
+            got = zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+            if got != ref["crc32"]:
+                raise IOError(f"checkpoint leaf {i} failed crc32 integrity check")
+            out.append(a)
+        tree = treedef.unflatten(out)
+        if shardings is not None:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like, shardings)

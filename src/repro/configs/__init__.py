@@ -1,0 +1,77 @@
+"""Architecture configs — one module per assigned arch + the paper's own."""
+from __future__ import annotations
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from .base import SHAPES, ShapeCell, LONG_OK, skip_reason, reduce_for_smoke
+
+from . import (llama3_2_1b, olmo_1b, smollm_135m, h2o_danube3_4b, rwkv6_7b,
+               whisper_tiny, kimi_k2_1t_a32b, qwen3_moe_235b_a22b, hymba_1_5b,
+               llama3_2_vision_90b, transformer_iwslt, deit_tiny)
+
+ARCHS = {
+    "llama3.2-1b": llama3_2_1b.CONFIG,
+    "olmo-1b": olmo_1b.CONFIG,
+    "smollm-135m": smollm_135m.CONFIG,
+    "h2o-danube-3-4b": h2o_danube3_4b.CONFIG,
+    "rwkv6-7b": rwkv6_7b.CONFIG,
+    "whisper-tiny": whisper_tiny.CONFIG,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b.CONFIG,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "llama-3.2-vision-90b": llama3_2_vision_90b.CONFIG,
+    # the paper's own models
+    "transformer-iwslt": transformer_iwslt.CONFIG,
+    "deit-tiny": deit_tiny.CONFIG,
+}
+
+ASSIGNED = [k for k in ARCHS if k not in ("transformer-iwslt", "deit-tiny")]
+
+
+def get_config(arch: str, *, pa: PAConfig | None = None, **overrides) -> ModelConfig:
+    cfg = ARCHS[arch]
+    if pa is not None:
+        cfg = cfg.replace(pa=pa)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str, *, pa: PAConfig | None = None) -> ModelConfig:
+    return reduce_for_smoke(get_config(arch, pa=pa))
+
+
+# ---------------------------------------------------------------------------
+# Optimized profiles (§Perf): semantics-preserving wins confirmed by the
+# hillclimb (see EXPERIMENTS.md §Perf and experiments/perf_log.jsonl).
+#  * hybrid MoE dispatch     — bit-exact: index-gather dispatch (local on the
+#                              (expert x data) grid) + reduction-combine
+#                              (scatter-add partials + one all-reduce instead
+#                              of gathering the full expert buffer)
+#  * fused/chunked SSM scan  — bit-exact, kills the (B,S,d_in,N) tensors
+#  * seq-sharded attn scores — rescues TP-indivisible head counts
+#  * banded SWA              — S*2w instead of S*S score tensors
+#  * scale-in-q              — scale the (S,Dh) query, not (S,S) scores
+# ---------------------------------------------------------------------------
+
+_SEQ_SHARD_ARCHS = {"smollm-135m", "hymba-1.5b", "whisper-tiny", "deit-tiny"}
+_BANDED_ARCHS = {"h2o-danube-3-4b"}
+
+
+def get_optimized_config(arch: str, *, pa: PAConfig | None = None,
+                         **overrides) -> ModelConfig:
+    """The arch config with all confirmed semantics-preserving perf wins."""
+    import dataclasses
+    cfg = get_config(arch, pa=pa)
+    kw = {"attn_scale_in_q": True}
+    if arch in _SEQ_SHARD_ARCHS:
+        kw["attn_score_seq_shard"] = True
+    if arch in _BANDED_ARCHS:
+        kw["attn_local_banded"] = True
+    if cfg.ssm is not None:
+        kw["ssm_fused_scan"] = True
+        kw["ssm_time_chunk"] = 256
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, dispatch="hybrid")
+    kw.update(overrides)
+    return cfg.replace(**kw)

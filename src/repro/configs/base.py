@@ -1,0 +1,60 @@
+"""Config helpers: shape cells, reduced smoke variants, registry plumbing."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.common import ModelConfig, MoEConfig, SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    phase: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic context handling: O(1)-state SSM/hybrid or a
+# bounded rolling SWA cache. Pure full-attention archs skip it (DESIGN.md).
+LONG_OK = {"rwkv6-7b", "hymba-1.5b", "h2o-danube-3-4b"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in LONG_OK:
+        if arch == "whisper-tiny":
+            return "SKIP(enc-dec: 448-token decoder by design)"
+        return "SKIP(pure full-attention: 500k dense KV excluded by assignment)"
+    return None
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Same family/structure, tiny dims — runs a CPU step in milliseconds."""
+    kw = dict(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+        vocab_size=128, max_seq_len=128, param_dtype="float32",
+        compute_dtype="float32", remat="none", fsdp=False,
+        n_enc_layers=2 if cfg.n_enc_layers else 0, enc_seq_len=16,
+        num_image_tokens=8,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = MoEConfig(num_experts=8, top_k=2, d_expert=32,
+                              capacity_factor=cfg.moe.capacity_factor)
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMConfig(state_size=8, conv_size=4, expand=2)
+    if cfg.sliding_window is not None:
+        kw["sliding_window"] = 32
+        kw["global_layers"] = tuple(i for i in cfg.global_layers if i < 2)
+    if cfg.family == "vision_lm":
+        kw["n_layers"] = 4
+        kw["cross_attn_every"] = 2
+    if cfg.family == "rwkv":
+        kw["n_kv_heads"] = 4
+    return cfg.replace(**kw)

@@ -1,0 +1,12 @@
+"""The paper's DeiT-Tiny analogue: 12L d=192 3H ViT backbone (paper §3.1).
+The patch frontend is stubbed with precomputed patch embeddings; used by
+benchmarks/table2_vision.py for the PA-matmul vision experiment."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deit-tiny", family="decoder",
+    n_layers=12, d_model=192, n_heads=3, n_kv_heads=3, d_head=64,
+    d_ff=768, vocab_size=1000, max_seq_len=256,
+    norm="layernorm", activation="gelu", mlp_gated=False,
+    param_dtype="float32", compute_dtype="float32",
+)

@@ -1,0 +1,11 @@
+"""h2o-danube-3-4b [dense] — 24L d=3840 32H (GQA kv=8) d_ff=10240 V=32000.
+llama+mistral mix with sliding-window attention. [arXiv:2401.16818]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="decoder",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_head=120,
+    d_ff=10240, vocab_size=32000, max_seq_len=131072,
+    norm="rmsnorm", activation="silu", mlp_gated=True,
+    rope_theta=10000.0, sliding_window=4096, global_layers=(),
+)

@@ -1,0 +1,13 @@
+"""hymba-1.5b [hybrid] — 32L d=1600 25H (GQA kv=5) d_ff=5504 V=32001,
+ssm_state=16, parallel attn+mamba heads, SWA except 3 global layers.
+[arXiv:2411.13676; hf]"""
+from repro.models.common import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_head=64,
+    d_ff=5504, vocab_size=32001, max_seq_len=1048576,
+    norm="rmsnorm", activation="silu", mlp_gated=True,
+    rope_theta=10000.0, sliding_window=1024, global_layers=(0, 15, 31),
+    ssm=SSMConfig(state_size=16, conv_size=4, expand=2),
+)

@@ -1,0 +1,14 @@
+"""kimi-k2-1t-a32b [moe] — 61L d=7168 64H (GQA kv=8) V=163840,
+MoE 384 experts top-8, expert d_ff=2048 (paper-table trillion-param MoE).
+[arXiv:2501.kimi2; unverified]. FSDP on: 1T params need ZeRO-3 sharding."""
+from repro.models.common import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", family="decoder",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_head=128,
+    d_ff=2048, vocab_size=163840, max_seq_len=131072,
+    norm="rmsnorm", activation="silu", mlp_gated=True,
+    rope_theta=50000.0, fsdp=True,
+    moe=MoEConfig(num_experts=384, top_k=8, d_expert=2048,
+                  capacity_factor=1.25),
+)

@@ -1,0 +1,11 @@
+"""llama3.2-1b [dense] — 16L d=2048 32H (GQA kv=8) d_ff=8192 V=128256.
+[hf:meta-llama/Llama-3.2-1B; unverified]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b", family="decoder",
+    n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8, d_head=64,
+    d_ff=8192, vocab_size=128256, max_seq_len=131072,
+    norm="rmsnorm", activation="silu", mlp_gated=True,
+    rope_theta=500000.0, tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""llama-3.2-vision-90b [vlm] — 100L d=8192 64H (GQA kv=8) d_ff=28672
+V=128256; cross-attn image layers every 5th layer (80 self + 20 cross).
+Vision frontend is a STUB: input_specs provides patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]. FSDP on (90B)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vision_lm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+    d_ff=28672, vocab_size=128256, max_seq_len=131072,
+    norm="rmsnorm", activation="silu", mlp_gated=True,
+    rope_theta=500000.0, cross_attn_every=5, num_image_tokens=4096,
+    fsdp=True,
+)

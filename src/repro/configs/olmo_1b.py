@@ -1,0 +1,11 @@
+"""olmo-1b [dense] — 16L d=2048 16H (GQA kv=16) d_ff=8192 V=50304.
+Non-parametric LayerNorm per OLMo. [arXiv:2402.00838; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="decoder",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_head=128,
+    d_ff=8192, vocab_size=50304, max_seq_len=4096,
+    norm="layernorm_nonparam", activation="silu", mlp_gated=True,
+    rope_theta=10000.0, tie_embeddings=True,
+)

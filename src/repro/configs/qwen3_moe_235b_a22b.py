@@ -1,0 +1,14 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d=4096 64H (GQA kv=4) V=151936,
+MoE 128 experts top-8, expert d_ff=1536, q/k norm.
+[hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.models.common import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="decoder",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, d_head=128,
+    d_ff=1536, vocab_size=151936, max_seq_len=131072,
+    norm="rmsnorm", activation="silu", mlp_gated=True, qk_norm=True,
+    rope_theta=1000000.0, fsdp=True,
+    moe=MoEConfig(num_experts=128, top_k=8, d_expert=1536,
+                  capacity_factor=1.25),
+)

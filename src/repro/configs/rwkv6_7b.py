@@ -1,0 +1,10 @@
+"""rwkv6-7b [ssm] — Finch: 32L d=4096 attention-free, d_ff=14336 V=65536.
+Data-dependent decay. [arXiv:2404.05892; hf]. Head size 64 -> 64 heads."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="rwkv",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, d_head=64,
+    d_ff=14336, vocab_size=65536, max_seq_len=1048576,
+    norm="layernorm", activation="relu", mlp_gated=False,
+)

@@ -1,0 +1,11 @@
+"""smollm-135m [dense] — 30L d=576 9H (GQA kv=3) d_ff=1536 V=49152.
+[hf:HuggingFaceTB/SmolLM-135M; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="decoder",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3, d_head=64,
+    d_ff=1536, vocab_size=49152, max_seq_len=8192,
+    norm="rmsnorm", activation="silu", mlp_gated=True,
+    rope_theta=10000.0, tie_embeddings=True,
+)

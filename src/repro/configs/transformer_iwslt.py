@@ -1,0 +1,12 @@
+"""The paper's own IWSLT14 DE-EN model: 6+6 enc-dec, d=512, 4H, d_ff=1024,
+ReLU, label smoothing 0.1 (paper §3.1). Used by the paper-claims benchmarks
+at reduced scale on synthetic data (no IWSLT in this container)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="transformer-iwslt", family="encdec",
+    n_layers=6, n_enc_layers=6, d_model=512, n_heads=4, n_kv_heads=4,
+    d_head=128, d_ff=1024, vocab_size=10000, max_seq_len=512, enc_seq_len=128,
+    norm="layernorm", activation="relu", mlp_gated=False, attn_bias=True,
+    label_smoothing=0.1, param_dtype="float32", compute_dtype="float32",
+)

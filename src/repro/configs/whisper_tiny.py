@@ -1,0 +1,12 @@
+"""whisper-tiny [audio] — enc-dec, 4L d=384 6H d_ff=1536 V=51865.
+Conv frontend is a STUB: input_specs provides 1500 precomputed frame
+embeddings; the LM shape seq_len applies to the decoder. [arXiv:2212.04356]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, n_enc_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_head=64, d_ff=1536, vocab_size=51865, max_seq_len=32768,
+    enc_seq_len=1500, norm="layernorm", activation="gelu", mlp_gated=False,
+    attn_bias=True,
+)

@@ -1,0 +1,23 @@
+"""Core piecewise-affine arithmetic (the paper's contribution, in JAX)."""
+from .modes import PAConfig, OFF, PA_MATMUL, PA_FULL
+from . import floatbits
+from .pam import (pam, padiv, paexp2, palog2, paexp, palog, pasqrt, parecip,
+                  pam_value, padiv_value, paexp2_value, palog2_value,
+                  pam_compensated, pam_exact_dfactor, padiv_exact_dfactor,
+                  ALPHA_MEAN, ALPHA_MINMAX)
+from .matmul import pa_matmul, pa_linear, pa_elementwise_mul
+from .nn import (pa_softmax, pa_logsumexp, pa_layernorm, pa_rmsnorm,
+                 pa_sigmoid, pa_tanh, pa_silu, pa_gelu, pa_relu, pa_softplus,
+                 pa_cross_entropy, ACTIVATIONS)
+
+__all__ = [
+    "PAConfig", "OFF", "PA_MATMUL", "PA_FULL", "floatbits",
+    "pam", "padiv", "paexp2", "palog2", "paexp", "palog", "pasqrt", "parecip",
+    "pam_value", "padiv_value", "paexp2_value", "palog2_value",
+    "pam_compensated", "pam_exact_dfactor", "padiv_exact_dfactor",
+    "ALPHA_MEAN", "ALPHA_MINMAX",
+    "pa_matmul", "pa_linear", "pa_elementwise_mul",
+    "pa_softmax", "pa_logsumexp", "pa_layernorm", "pa_rmsnorm",
+    "pa_sigmoid", "pa_tanh", "pa_silu", "pa_gelu", "pa_relu", "pa_softplus",
+    "pa_cross_entropy", "ACTIVATIONS",
+]

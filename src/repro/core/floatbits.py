@@ -1,0 +1,118 @@
+"""Bit-level float32 helpers underlying all piecewise-affine (PA) arithmetic.
+
+Everything in this module operates on IEEE-754 float32 via ``int32`` bit
+manipulation (``lax.bitcast_convert_type``). These are the primitives from
+which PAM (piecewise affine multiplication, Kosson & Jaggi 2023 / Mogami 2020)
+and its relatives are assembled.
+
+Layout of a float32:  [ S(1) | E(8) | M(23) ]   value = (-1)^S 2^(E-127) (1+M/2^23)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Bit-field constants (int32 domain).
+# ---------------------------------------------------------------------------
+SIGN_MASK = np.int32(-(2**31))          # 0x80000000
+MAG_MASK = np.int32(0x7FFFFFFF)         # exponent+mantissa magnitude bits
+EXP_MASK = np.int32(0x7F800000)
+MAN_MASK = np.int32(0x007FFFFF)
+MAN_BITS = 23
+EXP_BIAS = 127
+BIAS_SHIFTED = np.int32(EXP_BIAS << MAN_BITS)      # 0x3F800000 == bits of 1.0f
+MIN_NORM = np.int32(1 << MAN_BITS)                 # smallest normal magnitude
+MAX_FINITE = np.int32(0x7F7FFFFF)                  # largest finite magnitude
+INF_BITS = np.int32(0x7F800000)
+
+
+def bits(x: jax.Array) -> jax.Array:
+    """float32 -> int32 bit pattern."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+
+
+def floats(i: jax.Array) -> jax.Array:
+    """int32 bit pattern -> float32."""
+    return jax.lax.bitcast_convert_type(i.astype(jnp.int32), jnp.float32)
+
+
+def sign_bits(x: jax.Array) -> jax.Array:
+    return bits(x) & SIGN_MASK
+
+
+def magnitude_bits(x: jax.Array) -> jax.Array:
+    return bits(x) & MAG_MASK
+
+
+def exponent(x: jax.Array) -> jax.Array:
+    """Unbiased exponent E (int32). Denormals/zero report -127."""
+    return ((bits(x) & EXP_MASK) >> MAN_BITS) - EXP_BIAS
+
+
+def mantissa_field(x: jax.Array) -> jax.Array:
+    """Raw 23-bit mantissa field as int32."""
+    return bits(x) & MAN_MASK
+
+
+def mantissa_frac(x: jax.Array) -> jax.Array:
+    """Mantissa fraction M in [0, 1) as float32 (exact: power-of-two scale)."""
+    return mantissa_field(x).astype(jnp.float32) * np.float32(2.0**-MAN_BITS)
+
+
+def compose(sign: jax.Array, unbiased_exp: jax.Array, man_field: jax.Array) -> jax.Array:
+    """Assemble a float32 from sign bits (already in position), unbiased
+    exponent (int32) and mantissa field (int32). Clamps exponent to the
+    finite range; underflow flushes to zero (bf16-style, paper §2.2)."""
+    e = unbiased_exp + EXP_BIAS
+    mag = (e << MAN_BITS) | (man_field & MAN_MASK)
+    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, MAX_FINITE))
+    return floats(sign | mag)
+
+
+def pow2(k: jax.Array) -> jax.Array:
+    """Exact 2**k as float32 from an int32 exponent, clamped to finite range."""
+    e = jnp.clip(k + EXP_BIAS, 1, 254)
+    return floats(e.astype(jnp.int32) << MAN_BITS)
+
+
+def pow2_mul(x: jax.Array, k) -> jax.Array:
+    """Exact multiply of ``x`` by 2**k via exponent arithmetic (an int add on
+    the bit pattern — multiplication-free and lossless unless it over/underflows).
+    ``k`` may be a python int or an int32 array broadcastable to ``x``."""
+    x = jnp.asarray(x, jnp.float32)
+    i = bits(x)
+    k = jnp.asarray(k, jnp.int32)
+    sign = i & SIGN_MASK
+    mag = (i & MAG_MASK) + (k << MAN_BITS)
+    mag = jnp.where(mag < MIN_NORM, 0, jnp.minimum(mag, MAX_FINITE))
+    out = floats(sign | mag)
+    # preserve zeros / non-finite inputs
+    return jnp.where((x == 0) | ~jnp.isfinite(x), x, out)
+
+
+def mantissa_round(x: jax.Array, keep_bits: int) -> jax.Array:
+    """Round float32 to ``keep_bits`` mantissa bits (round-to-nearest-even).
+
+    This simulates the narrow-mantissa formats of the paper's Appendix D
+    (7 bits == bfloat16, 4 bits still trains, 3 bits degrades). Exponent
+    range is unchanged (like bfloat16 vs float32). NaN/Inf pass through.
+    """
+    if keep_bits >= MAN_BITS:
+        return jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    s = MAN_BITS - keep_bits
+    i = bits(x)
+    mag = i & MAG_MASK
+    half = np.int32((1 << (s - 1)) - 1)
+    odd = (mag >> s) & 1
+    mag = (mag + half + odd) & np.int32(~((1 << s) - 1))
+    mag = jnp.minimum(mag, MAX_FINITE)
+    out = floats((i & SIGN_MASK) | mag)
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def is_pow2(x: jax.Array) -> jax.Array:
+    """True where |x| is an exact power of two (zero mantissa, normal)."""
+    return (mantissa_field(x) == 0) & jnp.isfinite(x) & (x != 0)

@@ -1,0 +1,194 @@
+"""PA matrix multiplication (paper §3.2) — the framework's hot path.
+
+``pa_matmul(a, b, pa=...)`` mirrors ``jnp.matmul`` semantics
+(a: (..., M, K) @ b: (..., K, N), broadcastable batch dims) and routes by
+``PAConfig``:
+
+  * ``mode`` off        -> ``jnp.matmul`` (baseline)
+  * ``impl`` "jnp"      -> bit-exact PAM contraction, K-chunked ``lax.scan``
+  * ``impl`` "pallas"   -> Pallas TPU kernel (kernels/pam_matmul)
+  * ``impl`` "hw"       -> ``jnp.matmul`` stand-in for a PAM-MXU (identical
+                           dataflow/sharding; scalar semantics standard) —
+                           used by the full-scale dry-run / roofline.
+
+Backward pass implements the paper's Table 1 at matrix granularity:
+approx: dA = g ·̂ Bᵀ, dB = Aᵀ ·̂ g (PAM matmuls); exact: the power-of-two
+factor contraction, multiplication-free via PAM-by-pow2.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import floatbits as fb
+from .pam import (pam_value as _pam_value_op, pam_exact_dfactor as _pam_dfactor,
+                  ALPHA_MEAN as _ALPHA_MEAN, _unbroadcast)
+from .modes import PAConfig
+
+# Max elements materialised per chunk in the broadcast (M, c, N) product.
+_CHUNK_TARGET = 1 << 22
+
+
+def _f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+def _chunk_size(m: int, k: int, n: int) -> int:
+    return max(1, min(k, _CHUNK_TARGET // max(1, m * n)))
+
+
+def _swap(x):
+    return jnp.swapaxes(x, -1, -2)
+
+
+def _pam_matmul_value(a, b):
+    """Bit-exact PAM matmul; chunked scan over the contraction axis."""
+    a, b = _f32(a), _f32(b)
+    m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
+    c = _chunk_size(m, k, n)
+
+    def partial(ac, bc):
+        # ac: (..., M, c), bc: (..., c, N) -> (..., M, N)
+        prod = _pam_value_op(ac[..., :, :, None], bc[..., None, :, :])
+        return jnp.sum(prod, axis=-2)
+
+    if k <= c:
+        return partial(a, b)
+
+    nchunks = -(-k // c)
+    pad = nchunks * c - k
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+    # (..., M, nchunks, c) -> (nchunks, ..., M, c)
+    a_ch = jnp.moveaxis(a.reshape(a.shape[:-1] + (nchunks, c)), -2, 0)
+    b_ch = jnp.moveaxis(b.reshape(b.shape[:-2] + (nchunks, c, b.shape[-1])), -3, 0)
+
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    acc0 = jnp.zeros(batch + (m, n), jnp.float32)
+
+    def body(acc, xs):
+        ac, bc = xs
+        return acc + partial(ac, bc), ()
+
+    acc, _ = jax.lax.scan(body, acc0, (a_ch, b_ch))
+    return acc
+
+
+def _exact_grad_a(a, b, g):
+    """dA[..., m, k] = sum_n pam(dfactor(a[m,k], b[k,n]), g[m,n]) — chunked
+    over n. dfactor is the signed power-of-two from paper Table 1."""
+    a, b, g = _f32(a), _f32(b), _f32(g)
+    m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
+    c = _chunk_size(m, k, n)
+
+    def partial(bc, gc):
+        # a: (..., M, K) ; bc: (..., K, c) ; gc: (..., M, c)
+        f = _pam_dfactor(a[..., :, :, None], bc[..., None, :, :])
+        return jnp.sum(_pam_value_op(f, gc[..., :, None, :]), axis=-1)
+
+    if n <= c:
+        return partial(b, g)
+    nchunks = -(-n // c)
+    pad = nchunks * c - n
+    if pad:
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, 0), (0, pad)])
+        g = jnp.pad(g, [(0, 0)] * (g.ndim - 2) + [(0, 0), (0, pad)])
+    b_ch = jnp.moveaxis(b.reshape(b.shape[:-1] + (nchunks, c)), -2, 0)
+    g_ch = jnp.moveaxis(g.reshape(g.shape[:-1] + (nchunks, c)), -2, 0)
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    acc0 = jnp.zeros(batch + (m, k), jnp.float32)
+
+    def body(acc, xs):
+        bc, gc = xs
+        return acc + partial(bc, gc), ()
+
+    acc, _ = jax.lax.scan(body, acc0, (b_ch, g_ch))
+    return acc
+
+
+def _exact_grad_b(a, b, g):
+    """dB[..., k, n] = sum_m pam(dfactor(b[k,n], a[m,k]), g[m,n])."""
+    # Reuse _exact_grad_a through transposition: dB = (dA of (Bᵀ, Aᵀ, gᵀ))ᵀ.
+    return _swap(_exact_grad_a(_swap(b), _swap(a), _swap(g)))
+
+
+def _round_inputs(a, b, mantissa_bits):
+    if mantissa_bits is not None:
+        a = fb.mantissa_round(a, mantissa_bits)
+        b = fb.mantissa_round(b, mantissa_bits)
+    return a, b
+
+
+@functools.lru_cache(maxsize=None)
+def _build(deriv: str, impl: str, mantissa_bits, compensate: bool):
+    """Build a custom_vjp PAM matmul for a static numeric configuration."""
+
+    if impl == "pallas":
+        from repro.kernels.pam_matmul import ops as _kops
+
+        def value(a, b):
+            a, b = _round_inputs(_f32(a), _f32(b), mantissa_bits)
+            return _kops.pam_matmul(a, b)
+    else:
+        def value(a, b):
+            a, b = _round_inputs(_f32(a), _f32(b), mantissa_bits)
+            return _pam_matmul_value(a, b)
+
+    def post(y):
+        if compensate:
+            return _pam_value_op(y, _ALPHA_MEAN)
+        return y
+
+    @jax.custom_vjp
+    def mm(a, b):
+        return post(value(a, b))
+
+    def fwd(a, b):
+        return post(value(a, b)), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        if deriv == "exact" and impl != "hw":
+            da = _exact_grad_a(a, b, g)
+            db = _exact_grad_b(a, b, g)
+        else:
+            da = value(g, _swap(b))
+            db = value(_swap(a), g)
+        return (_unbroadcast(da, jnp.shape(a)),
+                _unbroadcast(db, jnp.shape(b)))
+
+    mm.defvjp(fwd, bwd)
+    return mm
+
+
+def pa_matmul(a, b, pa: PAConfig):
+    """Matrix multiply under the given numeric mode (mirrors jnp.matmul).
+
+    The "hw" backend is the PAM-MXU dataflow stand-in (DESIGN.md §3): a
+    native dot with standard AD — identical HLO structure, shardings and
+    collectives to what PAM hardware would execute."""
+    if not pa.matmul_is_pa or pa.impl == "hw":
+        return jnp.matmul(a, b)
+    return _build(pa.deriv, pa.impl, pa.mantissa_bits, pa.compensate)(a, b)
+
+
+def pa_linear(x, w, bias, pa: PAConfig):
+    """y = x @ w (+ bias). The bias add is a float add — free in PA terms."""
+    y = pa_matmul(x, w, pa)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def pa_elementwise_mul(a, b, pa: PAConfig, deriv: str | None = None):
+    """Elementwise multiply under the numeric mode (used by gates, RoPE,
+    scalar gains, optimizer-style updates inside models)."""
+    if pa.mode == "off" or pa.impl == "hw" or not pa.nonlin_is_pa:
+        return a * b
+    a, b = _round_inputs(_f32(a), _f32(b), pa.mantissa_bits)
+    from .pam import pam as _pam
+    return _pam(a, b, deriv or pa.deriv)

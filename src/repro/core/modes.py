@@ -1,0 +1,82 @@
+"""Numeric-mode configuration: which ops run piecewise-affine, which backward
+pass variant they use, and which execution backend realises them.
+
+This is the single switch a model/config flips to move between:
+  * baseline training (``mode="off"``)            — the paper's baselines,
+  * PA matmuls only (``mode="matmul"``)           — paper §3.2,
+  * fully multiplication-free (``mode="full"``)   — paper §3.4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+MODES = ("off", "matmul", "full")
+DERIVS = ("exact", "approx")
+IMPLS = ("jnp", "pallas", "hw")
+
+
+@dataclasses.dataclass(frozen=True)
+class PAConfig:
+    """Piecewise-affine numerics configuration.
+
+    Attributes:
+      mode: "off" (standard float ops), "matmul" (PA matrix multiplications
+        only — paper §3.2), "full" (every op incl. softmax/norm/loss/optimizer
+        — paper §3.4).
+      deriv: backward-pass variant for matmul/softmax/norm ("approx" is the
+        paper's best configuration, Table 3).
+      loss_deriv: backward variant for the loss ("exact" is the paper's best).
+      impl: execution backend.
+        "jnp"    — bit-exact pure-JAX (int32 bit manipulation); CPU-runnable.
+        "pallas" — bit-exact Pallas TPU kernels (VPU); interpretable on CPU.
+        "hw"     — hypothetical PAM-MXU stand-in: lax.dot_general dataflow,
+                   used for full-scale sharding dry-runs & roofline. The HLO
+                   graph (shardings, collectives, memory) is identical to what
+                   PAM hardware would execute; scalar semantics are standard.
+      mantissa_bits: simulate narrow-mantissa inputs (Appendix D). None = 23.
+      compensate: apply the §2.7 alpha-compensation PAM after matmuls.
+      pa_optimizer: run the optimizer update in PA arithmetic (paper §2.6).
+        Follows ``mode=="full"`` unless explicitly set.
+    """
+
+    mode: str = "off"
+    deriv: str = "approx"
+    loss_deriv: str = "exact"
+    impl: str = "jnp"
+    mantissa_bits: Optional[int] = None
+    compensate: bool = False
+    pa_optimizer: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.deriv not in DERIVS or self.loss_deriv not in DERIVS:
+            raise ValueError(f"deriv must be one of {DERIVS}")
+        if self.impl not in IMPLS:
+            raise ValueError(f"impl must be one of {IMPLS}, got {self.impl!r}")
+        if self.mantissa_bits is not None and not (1 <= self.mantissa_bits <= 23):
+            raise ValueError("mantissa_bits must be in [1, 23]")
+
+    # -- Convenience predicates -------------------------------------------
+    @property
+    def matmul_is_pa(self) -> bool:
+        return self.mode in ("matmul", "full")
+
+    @property
+    def nonlin_is_pa(self) -> bool:
+        return self.mode == "full"
+
+    @property
+    def optimizer_is_pa(self) -> bool:
+        if self.pa_optimizer is not None:
+            return self.pa_optimizer
+        return self.mode == "full"
+
+    def replace(self, **kw) -> "PAConfig":
+        return dataclasses.replace(self, **kw)
+
+
+OFF = PAConfig(mode="off")
+PA_MATMUL = PAConfig(mode="matmul")
+PA_FULL = PAConfig(mode="full")

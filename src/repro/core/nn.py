@@ -1,0 +1,216 @@
+"""Piecewise-affine network operations (paper §2.3–§2.4, §3.3).
+
+Each function takes a ``PAConfig`` and dispatches between the standard float
+implementation (``mode`` != "full" or the ``hw`` dataflow stand-in) and the
+fully piecewise-affine composition built from ``core.pam`` primitives. The PA
+paths backpropagate through their defining PA graphs, so the exact/approx
+derivative choice of the underlying ops propagates (paper §2.5).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .pam import (pam, padiv, paexp2, palog2, pasqrt, parecip)
+
+class _P:  # namespace preserving call sites; avoids pkg-attr rebinding issues
+    pam = staticmethod(pam); padiv = staticmethod(padiv)
+    paexp2 = staticmethod(paexp2); palog2 = staticmethod(palog2)
+    pasqrt = staticmethod(pasqrt); parecip = staticmethod(parecip)
+P = _P
+from .modes import PAConfig
+
+_LOG2E = np.float32(1.4426950408889634)
+_LN2 = np.float32(0.6931471805599453)
+_MASK_VALUE = np.float32(-1e30)
+
+
+def _pa_active(pa: PAConfig) -> bool:
+    return pa.nonlin_is_pa and pa.impl != "hw"
+
+
+# ---------------------------------------------------------------------------
+# Softmax & friends.
+# ---------------------------------------------------------------------------
+
+def pa_softmax(x, pa: PAConfig, axis: int = -1, where=None):
+    """Softmax; in PA mode computed as paexp2/Σ with PA division (§3.3)."""
+    if where is not None:
+        x = jnp.where(where, x, _MASK_VALUE)
+    if not _pa_active(pa):
+        return jax.nn.softmax(x, axis=axis)
+    d = pa.deriv
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = P.paexp2(P.pam(x - m, _LOG2E, d), d)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return P.padiv(e, s, d)
+
+
+def pa_logsumexp(x, pa: PAConfig, axis: int = -1, deriv=None):
+    if not _pa_active(pa):
+        return jax.scipy.special.logsumexp(x, axis=axis)
+    d = deriv or pa.deriv
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    s = jnp.sum(P.paexp2(P.pam(x - m, _LOG2E, d), d), axis=axis, keepdims=True)
+    out = P.pam(P.palog2(s, d), _LN2, d) + m
+    return jnp.squeeze(out, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation layers.
+# ---------------------------------------------------------------------------
+
+def pa_layernorm(x, gamma, beta, pa: PAConfig, eps: float = 1e-5):
+    """LayerNorm; pass gamma=None/beta=None for the non-parametric variant
+    (OLMo). PA path: PAM squares, pasqrt, PA reciprocal (§3.3)."""
+    n = x.shape[-1]
+    if not _pa_active(pa):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        xc = x - mu
+        var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True)
+        y = xc * jax.lax.rsqrt(var + eps)
+    else:
+        d = pa.deriv
+        inv_n = np.float32(1.0 / n)          # compile-time constant
+        mu = P.pam(jnp.sum(x, axis=-1, keepdims=True), inv_n, d)
+        xc = x - mu
+        var = P.pam(jnp.sum(P.pam(xc, xc, d), axis=-1, keepdims=True), inv_n, d)
+        y = P.padiv(xc, P.pasqrt(var + np.float32(eps), d), d)
+    if gamma is not None:
+        y = _scale(y, gamma, pa)
+    if beta is not None:
+        y = y + beta
+    return y
+
+
+def pa_rmsnorm(x, gamma, pa: PAConfig, eps: float = 1e-6):
+    """RMSNorm (llama-family). PA path mirrors pa_layernorm without mean."""
+    n = x.shape[-1]
+    if not _pa_active(pa):
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps)
+    else:
+        d = pa.deriv
+        inv_n = np.float32(1.0 / n)
+        var = P.pam(jnp.sum(P.pam(x, x, d), axis=-1, keepdims=True), inv_n, d)
+        y = P.padiv(x, P.pasqrt(var + np.float32(eps), d), d)
+    if gamma is not None:
+        y = _scale(y, gamma, pa)
+    return y
+
+
+def _scale(y, gamma, pa: PAConfig):
+    if not _pa_active(pa):
+        return y * gamma
+    return P.pam(y, gamma, pa.deriv)
+
+
+# ---------------------------------------------------------------------------
+# Activations.
+# ---------------------------------------------------------------------------
+
+def pa_sigmoid(x, pa: PAConfig):
+    if not _pa_active(pa):
+        return jax.nn.sigmoid(x)
+    d = pa.deriv
+    return P.parecip(np.float32(1.0) + P.paexp2(P.pam(-x, _LOG2E, d), d), d)
+
+
+def pa_tanh(x, pa: PAConfig):
+    if not _pa_active(pa):
+        return jnp.tanh(x)
+    d = pa.deriv
+    # tanh(x) = 2*sigmoid(2x) - 1; the *2 / 2x are exact pow2 scales.
+    from . import floatbits as fb
+    s = pa_sigmoid(fb.pow2_mul(x, 1), pa)
+    return fb.pow2_mul(s, 1) - np.float32(1.0)
+
+
+def pa_silu(x, pa: PAConfig):
+    if not _pa_active(pa):
+        return jax.nn.silu(x)
+    return P.pam(x, pa_sigmoid(x, pa), pa.deriv)
+
+
+def pa_gelu(x, pa: PAConfig):
+    """tanh-approximation GELU, fully PA in PA mode."""
+    if not _pa_active(pa):
+        return jax.nn.gelu(x)
+    d = pa.deriv
+    c0 = np.float32(0.7978845608)   # sqrt(2/pi)
+    c1 = np.float32(0.044715)
+    x3 = P.pam(P.pam(x, x, d), x, d)
+    inner = P.pam(c0, x + P.pam(c1, x3, d), d)
+    from . import floatbits as fb
+    half_x = fb.pow2_mul(x, -1)
+    return P.pam(half_x, np.float32(1.0) + pa_tanh(inner, pa), d)
+
+
+def pa_relu(x, pa: PAConfig):
+    del pa  # max(x, 0) is already piecewise affine and multiplication-free.
+    return jnp.maximum(x, 0.0)
+
+
+def pa_softplus(x, pa: PAConfig):
+    if not _pa_active(pa):
+        return jax.nn.softplus(x)
+    d = pa.deriv
+    return P.pam(P.palog2(np.float32(1.0) + P.paexp2(P.pam(x, _LOG2E, d), d), d), _LN2, d)
+
+
+ACTIVATIONS = {
+    "relu": pa_relu,
+    "gelu": pa_gelu,
+    "silu": pa_silu,
+    "sigmoid": pa_sigmoid,
+    "tanh": pa_tanh,
+}
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+def pa_cross_entropy(logits, labels, pa: PAConfig, label_smoothing: float = 0.0,
+                     where=None):
+    """Softmax cross-entropy with label smoothing (paper's loss, §3.3).
+
+    In PA mode the log-sum-exp and all scalings are PA ops, using
+    ``pa.loss_deriv`` (the paper found *exact* derivatives better here).
+    Returns mean loss over unmasked positions.
+    """
+    v = logits.shape[-1]
+    ls = float(label_smoothing)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+
+    if not _pa_active(pa):
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        nll = lse - tgt
+        if ls > 0.0:
+            smooth = lse - jnp.mean(logits, axis=-1)
+            nll = (1.0 - ls) * nll + ls * smooth
+    else:
+        d = pa.loss_deriv
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        z = logits - m
+        s = jnp.sum(P.paexp2(P.pam(z, _LOG2E, d), d), axis=-1)
+        lse = P.pam(P.palog2(s, d), _LN2, d) + m[..., 0]
+        nll = lse - tgt
+        if ls > 0.0:
+            # smooth = lse - mean(logits); the mean is a PAM by the 1/V constant.
+            inv_v = np.float32(1.0 / v)
+            smooth = lse - P.pam(jnp.sum(logits, axis=-1), inv_v, d)
+            nll = P.pam(np.float32(1.0 - ls), nll, d) + P.pam(np.float32(ls), smooth, d)
+
+    if where is not None:
+        w = where.astype(nll.dtype)
+        if not _pa_active(pa):
+            return jnp.sum(nll * w) / jnp.sum(w)
+        # Masking weights are 0/1 -> the PAM is exact here.
+        num = jnp.sum(P.pam(nll, w, pa.loss_deriv))
+        return P.padiv(num, jnp.sum(w), pa.loss_deriv)
+    if not _pa_active(pa):
+        return jnp.mean(nll)
+    count = np.float32(1.0 / np.prod(nll.shape))
+    return P.pam(jnp.sum(nll), count, pa.loss_deriv)

@@ -1,0 +1,294 @@
+"""Piecewise-affine scalar operations (paper §2.2–§2.5).
+
+All ops are bit-exact implementations of the paper's definitions:
+
+  * ``pam``    — A ·̂ B, int32 addition of bit patterns (Mogami's trick)
+  * ``padiv``  — A ÷̂ B, int32 subtraction of bit patterns
+  * ``paexp2`` / ``palog2`` — Mitchell's piecewise-affine exp2/log2
+  * ``paexp`` / ``palog`` / ``pasqrt`` — derived via the base-2 pair
+
+Each op is a ``jax.custom_vjp`` pair per derivative type (paper Table 1):
+``deriv="exact"`` uses the true (piecewise-constant, power-of-two) derivative
+of the PA function; ``deriv="approx"`` mimics the analytic derivative of the
+op being approximated, evaluated with PA arithmetic. Both backward passes are
+themselves multiplication-free (power-of-two scales are exact under PAM).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import floatbits as fb
+
+_LOG2E = np.float32(1.4426950408889634)   # log2(e)
+_LN2 = np.float32(0.6931471805599453)     # ln(2)
+
+# ---------------------------------------------------------------------------
+# Raw (non-differentiable) forward values.
+# ---------------------------------------------------------------------------
+
+def _f32(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+def pam_value(a, b):
+    """Bit-exact PAM forward: sign-XOR, int32 magnitude add, re-bias, clamp."""
+    a, b = _f32(a), _f32(b)
+    ai, bi = fb.bits(a), fb.bits(b)
+    sign = (ai ^ bi) & fb.SIGN_MASK
+    mag = (ai & fb.MAG_MASK) + (bi & fb.MAG_MASK) - fb.BIAS_SHIFTED
+    # int32 wraps in the intermediate cancel (mod-2^32); a final value below
+    # -BIAS can only come from a true exponent overflow (>= 2^31) -> clamp,
+    # while [-BIAS, MIN_NORM) is a genuine underflow -> flush. The two
+    # negative ranges are disjoint (hypothesis-found edge case).
+    ovf = mag < -fb.BIAS_SHIFTED
+    mag = jnp.where(mag < fb.MIN_NORM, 0, jnp.minimum(mag, fb.MAX_FINITE))
+    mag = jnp.where(ovf, fb.MAX_FINITE, mag)
+    out = fb.floats(sign | mag)
+    zero = (a == 0) | (b == 0)
+    inf = jnp.isinf(a) | jnp.isinf(b)
+    out = jnp.where(zero, fb.floats(sign), out)                # signed zero
+    out = jnp.where(inf, fb.floats(sign | fb.INF_BITS), out)   # signed inf
+    nan = jnp.isnan(a) | jnp.isnan(b) | (inf & zero)           # 0 * inf -> nan
+    return jnp.where(nan, jnp.float32(jnp.nan), out)
+
+
+def padiv_value(a, b):
+    """Bit-exact PA division: int32 magnitude subtract, re-bias, clamp."""
+    a, b = _f32(a), _f32(b)
+    ai, bi = fb.bits(a), fb.bits(b)
+    sign = (ai ^ bi) & fb.SIGN_MASK
+    mag = (ai & fb.MAG_MASK) - (bi & fb.MAG_MASK) + fb.BIAS_SHIFTED
+    # same disjoint-ranges overflow test as pam_value
+    ovf = mag < -fb.BIAS_SHIFTED
+    mag = jnp.where(mag < fb.MIN_NORM, 0, jnp.minimum(mag, fb.MAX_FINITE))
+    mag = jnp.where(ovf, fb.MAX_FINITE, mag)
+    out = fb.floats(sign | mag)
+    out = jnp.where(a == 0, fb.floats(sign), out)                      # 0/b
+    out = jnp.where(b == 0, fb.floats(sign | fb.INF_BITS), out)        # a/0
+    out = jnp.where(jnp.isinf(a), fb.floats(sign | fb.INF_BITS), out)  # inf/b
+    out = jnp.where(jnp.isinf(b), fb.floats(sign), out)                # a/inf
+    nan = (jnp.isnan(a) | jnp.isnan(b)
+           | ((a == 0) & (b == 0))
+           | (jnp.isinf(a) & jnp.isinf(b)))
+    return jnp.where(nan, jnp.float32(jnp.nan), out)
+
+
+def paexp2_value(a):
+    """paexp2(A) = 2^floor(A) * (1 + A - floor(A))   (paper Eq. 9)."""
+    a = _f32(a)
+    # Clamp the range used for bit manipulation: anything <= -150 underflows
+    # to 0 and anything >= 128 overflows to inf regardless, and the clamp
+    # keeps floor()/int conversion well-defined for +-inf / huge mask values.
+    ac = jnp.clip(a, -16384.0, 16384.0)
+    n = jnp.floor(ac)
+    f = ac - n                                  # in [0, 1): pure float subtract
+    man = jnp.round(f * np.float32(2.0**fb.MAN_BITS)).astype(jnp.int32)
+    carry = man >> fb.MAN_BITS                  # f rounded up to exactly 1.0
+    out = fb.compose(jnp.int32(0), n.astype(jnp.int32) + carry,
+                     man & fb.MAN_MASK)
+    out = jnp.where(a >= 128.0, jnp.float32(jnp.inf), out)
+    return jnp.where(jnp.isnan(a), jnp.float32(jnp.nan), out)
+
+
+def palog2_value(a):
+    """palog2(A) = E_A + M_A for A > 0  (paper Eq. 10).
+
+    Computed as (bits(A) - bits(1.0)) * 2^-23 — an int subtract and an exact
+    power-of-two scale (multiplication-free)."""
+    a = _f32(a)
+    out = (fb.bits(a) - fb.BIAS_SHIFTED).astype(jnp.float32) * np.float32(2.0**-fb.MAN_BITS)
+    out = jnp.where(a == 0, -jnp.float32(jnp.inf), out)
+    out = jnp.where(a < 0, jnp.float32(jnp.nan), out)
+    return jnp.where(jnp.isnan(a), jnp.float32(jnp.nan), out)
+
+
+# -- Exact-derivative scale factors (all signed powers of two) --------------
+
+def _pam_carry(a, b):
+    """1{M_A + M_B >= 1} as int32."""
+    return ((fb.mantissa_field(a) + fb.mantissa_field(b)) >> fb.MAN_BITS).astype(jnp.int32)
+
+
+def pam_exact_dfactor(a, b):
+    """d(A ·̂ B)/dA = (-1)^{S_B} 2^{E_B + 1{M_A+M_B>=1}} (paper Table 1)."""
+    k = fb.exponent(b) + _pam_carry(a, b)
+    mag = jnp.clip(k + fb.EXP_BIAS, 1, 254) << fb.MAN_BITS
+    out = fb.floats(fb.sign_bits(b) | mag)
+    return jnp.where(b == 0, jnp.float32(0), out)
+
+
+def _padiv_borrow(a, b):
+    """1{M_A - M_B < 0} as int32."""
+    return (fb.mantissa_field(a) < fb.mantissa_field(b)).astype(jnp.int32)
+
+
+def padiv_exact_dfactor(a, b):
+    """d(A ÷̂ B)/dA = (-1)^{S_B} 2^{-E_B - 1{M_A-M_B<0}}."""
+    k = -fb.exponent(b) - _padiv_borrow(a, b)
+    mag = jnp.clip(k + fb.EXP_BIAS, 1, 254) << fb.MAN_BITS
+    return fb.floats(fb.sign_bits(b) | mag)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring.
+# ---------------------------------------------------------------------------
+
+def _unbroadcast(g, shape):
+    if g.shape == tuple(shape):
+        return g
+    ndiff = g.ndim - len(shape)
+    if ndiff:
+        g = g.sum(axis=tuple(range(ndiff)))
+    axes = tuple(i for i, (gs, s) in enumerate(zip(g.shape, shape)) if s == 1 and gs != 1)
+    if axes:
+        g = g.sum(axis=axes, keepdims=True)
+    return g.reshape(shape)
+
+
+def _make_binary(value_fn, da_fn, db_fn, name):
+    @jax.custom_vjp
+    def op(a, b):
+        return value_fn(a, b)
+
+    def fwd(a, b):
+        return value_fn(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        return (_unbroadcast(da_fn(a, b, g), jnp.shape(a)),
+                _unbroadcast(db_fn(a, b, g), jnp.shape(b)))
+
+    op.defvjp(fwd, bwd)
+    op.__name__ = name
+    return op
+
+
+def _make_unary(value_fn, da_fn, name):
+    @jax.custom_vjp
+    def op(a):
+        return value_fn(a)
+
+    def fwd(a):
+        return value_fn(a), a
+
+    def bwd(a, g):
+        return (_unbroadcast(da_fn(a, g), jnp.shape(a)),)
+
+    op.defvjp(fwd, bwd)
+    op.__name__ = name
+    return op
+
+
+# Backward rules, paper Table 1. All grads are evaluated with value-level PA
+# ops so the backward pass itself is multiplication-free.
+_pam_exact = _make_binary(
+    pam_value,
+    lambda a, b, g: pam_value(pam_exact_dfactor(a, b), g),
+    lambda a, b, g: pam_value(pam_exact_dfactor(b, a), g),
+    "pam_exact")
+
+_pam_approx = _make_binary(
+    pam_value,
+    lambda a, b, g: pam_value(b, g),
+    lambda a, b, g: pam_value(a, g),
+    "pam_approx")
+
+_padiv_exact = _make_binary(
+    padiv_value,
+    lambda a, b, g: pam_value(padiv_exact_dfactor(a, b), g),
+    lambda a, b, g: jnp.negative(padiv_value(pam_value(a, g), pam_value(b, b))),
+    "padiv_exact")
+
+_padiv_approx = _make_binary(
+    padiv_value,
+    lambda a, b, g: padiv_value(g, b),
+    lambda a, b, g: jnp.negative(padiv_value(pam_value(a, g), pam_value(b, b))),
+    "padiv_approx")
+
+_paexp2_exact = _make_unary(
+    paexp2_value,
+    lambda a, g: fb.pow2_mul(g, jnp.floor(jnp.clip(a, -16384.0, 16384.0)).astype(jnp.int32)),
+    "paexp2_exact")
+
+_paexp2_approx = _make_unary(
+    paexp2_value,
+    lambda a, g: pam_value(pam_value(paexp2_value(a), _LN2), g),
+    "paexp2_approx")
+
+_palog2_exact = _make_unary(
+    palog2_value,
+    lambda a, g: fb.pow2_mul(g, jnp.negative(fb.exponent(a))),
+    "palog2_exact")
+
+_palog2_approx = _make_unary(
+    palog2_value,
+    lambda a, g: padiv_value(g, pam_value(a, _LN2)),
+    "palog2_approx")
+
+_BY_DERIV = {
+    ("pam", "exact"): _pam_exact, ("pam", "approx"): _pam_approx,
+    ("padiv", "exact"): _padiv_exact, ("padiv", "approx"): _padiv_approx,
+    ("paexp2", "exact"): _paexp2_exact, ("paexp2", "approx"): _paexp2_approx,
+    ("palog2", "exact"): _palog2_exact, ("palog2", "approx"): _palog2_approx,
+}
+
+
+# ---------------------------------------------------------------------------
+# Public API.
+# ---------------------------------------------------------------------------
+
+def pam(a, b, deriv: str = "approx"):
+    """Piecewise-affine multiplication A ·̂ B (paper Eq. 5–8)."""
+    return _BY_DERIV[("pam", deriv)](_f32(a), _f32(b))
+
+
+def padiv(a, b, deriv: str = "approx"):
+    """Piecewise-affine division A ÷̂ B (paper Eq. 14–17)."""
+    return _BY_DERIV[("padiv", deriv)](_f32(a), _f32(b))
+
+
+def paexp2(a, deriv: str = "approx"):
+    """Piecewise-affine 2**A (paper Eq. 9)."""
+    return _BY_DERIV[("paexp2", deriv)](_f32(a))
+
+
+def palog2(a, deriv: str = "approx"):
+    """Piecewise-affine log2(A), A > 0 (paper Eq. 10)."""
+    return _BY_DERIV[("palog2", deriv)](_f32(a))
+
+
+def paexp(a, deriv: str = "approx"):
+    """paexp(A) = paexp2(log2(e) ·̂ A)  (paper Eq. 18)."""
+    return paexp2(pam(_f32(a), _LOG2E, deriv), deriv)
+
+
+def palog(a, deriv: str = "approx"):
+    """palog(A) = palog2(A) ÷̂ log2(e)  (paper Eq. 19)."""
+    return padiv(palog2(a, deriv), _LOG2E, deriv)
+
+
+def pasqrt(a, deriv: str = "approx"):
+    """pasqrt(A) = paexp2(palog2(A) ÷̂ 2)  (paper Eq. 20). The ÷2 is an exact
+    power-of-two scale."""
+    return paexp2(fb.pow2_mul(palog2(a, deriv), -1), deriv)
+
+
+def parecip(a, deriv: str = "approx"):
+    """1 ÷̂ A — reciprocal as PA division."""
+    return padiv(jnp.float32(1.0), _f32(a), deriv)
+
+
+# §2.7 error compensation: pam(pam(a, b), alpha) reduces the mean/worst-case
+# relative error. ALPHA_MEAN zeroes the *mean* relative error over uniformly
+# distributed mantissas (numerically integrated); ALPHA_MINMAX centres the
+# error band [-1/9, 0] -> [-1/17, +1/17].
+ALPHA_MEAN = np.float32(1.0396729)     # 1 / E[pam(a,b)/(ab)], measured over
+                                       # uniform mantissas (see benchmarks)
+ALPHA_MINMAX = np.float32(18.0 / 17.0)
+
+
+def pam_compensated(a, b, alpha=ALPHA_MEAN, deriv: str = "approx"):
+    """PAM with a constant corrective PAM (paper §2.7)."""
+    return pam(pam(a, b, deriv), jnp.float32(alpha), deriv)

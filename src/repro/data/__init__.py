@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, SyntheticLM, ShardedIterator
+
+__all__ = ["DataConfig", "SyntheticLM", "ShardedIterator"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+pam_matmul      — VMEM-tiled bit-exact PAM matrix multiply (VPU; DESIGN.md §3)
+pam_eltwise     — fused elementwise pam/padiv/paexp2/palog2
+pa_softmax      — fused row softmax in PA arithmetic
+flash_attention — online-softmax attention (kills the S*S HBM traffic the
+                  roofline identified as the training memory bottleneck)
+
+Each kernel ships ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle);
+all are validated in interpret mode on CPU against their oracles
+(tests/test_kernels.py). EXAMPLE.md retained from the scaffold.
+"""

@@ -1,0 +1,26 @@
+"""Public wrapper: GQA-aware flash attention over (B, S, H, Dh) layouts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bh
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128):
+    """q: (B, S, Hq, Dh), k/v: (B, T, Hkv, Dh) with Hq % Hkv == 0."""
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+    o = flash_attention_bh(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                           interpret=_INTERPRET)
+    return o.reshape(b, hq, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (BH, S, Dh), k/v: (BH, T, Dh) -> (BH, S, Dh)."""
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(q.shape[-1])
+    if causal:
+        ss, tt = q.shape[1], k.shape[1]
+        mask = jnp.arange(tt)[None] <= jnp.arange(ss)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import pa_softmax
+from .ref import pa_softmax_ref
+
+__all__ = ["pa_softmax", "pa_softmax_ref"]

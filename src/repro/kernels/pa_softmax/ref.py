@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: the core library's PA softmax composition."""
+import jax.numpy as jnp
+from repro.core.pam import pam_value, padiv_value, paexp2_value
+import numpy as np
+
+_LOG2E = np.float32(1.4426950408889634)
+
+
+def pa_softmax_ref(x):
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = paexp2_value(pam_value(x - m, _LOG2E))
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    return padiv_value(e, s)

@@ -1,0 +1,3 @@
+from .ops import pam, padiv, paexp2, palog2
+
+__all__ = ["pam", "padiv", "paexp2", "palog2"]

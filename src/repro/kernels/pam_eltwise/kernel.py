@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused elementwise PA ops (pam / padiv / paexp2 / palog2).
+
+One VMEM-tiled elementwise pass over flattened operands — the TPU analogue
+of the paper's elementwise CUDA kernels. Tiles are (8, 1024) f32 = 32 KB per
+operand: sublane-aligned (8) x lane-aligned (1024 = 8*128), three live tiles
+(a, b, out) < 100 KB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SIGN = np.int32(-(2**31))
+_MAG = np.int32(0x7FFFFFFF)
+_BIAS = np.int32(127 << 23)
+_MIN_NORM = np.int32(1 << 23)
+_MAX_FINITE = np.int32(0x7F7FFFFF)
+
+_ROWS, _COLS = 8, 1024
+_TILE = _ROWS * _COLS
+
+
+def _pam(a, b):
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
+    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where((a == 0.0) | (b == 0.0), 0.0, out)
+
+
+def _padiv(a, b):
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) - (bi & _MAG) + _BIAS
+    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where(a == 0.0, 0.0, out)
+
+
+def _paexp2(a):
+    ac = jnp.clip(a, -16384.0, 16384.0)
+    n = jnp.floor(ac)
+    f = ac - n
+    man = jnp.round(f * np.float32(2.0**23)).astype(jnp.int32)
+    carry = man >> 23
+    e = n.astype(jnp.int32) + carry + 127
+    mag = (e << 23) | (man & np.int32(0x7FFFFF))
+    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, _MAX_FINITE))
+    out = jax.lax.bitcast_convert_type(mag, jnp.float32)
+    return jnp.where(a >= 128.0, jnp.float32(jnp.inf), out)
+
+
+def _palog2(a):
+    i = jax.lax.bitcast_convert_type(a, jnp.int32)
+    return (i - _BIAS).astype(jnp.float32) * np.float32(2.0**-23)
+
+
+_BINARY = {"pam": _pam, "padiv": _padiv}
+_UNARY = {"paexp2": _paexp2, "palog2": _palog2}
+
+
+def _bin_kernel(a_ref, b_ref, o_ref, *, op):
+    o_ref[...] = _BINARY[op](a_ref[...], b_ref[...])
+
+
+def _un_kernel(a_ref, o_ref, *, op):
+    o_ref[...] = _UNARY[op](a_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def eltwise_binary(a, b, *, op: str = "pam", interpret: bool = True):
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    a = jnp.broadcast_to(a.astype(jnp.float32), shape).reshape(-1)
+    b = jnp.broadcast_to(b.astype(jnp.float32), shape).reshape(-1)
+    n = a.size
+    npad = -(-n // _TILE) * _TILE
+    av = jnp.pad(a, (0, npad - n)).reshape(-1, _COLS)
+    bv = jnp.pad(b, (0, npad - n)).reshape(-1, _COLS)
+    out = pl.pallas_call(
+        functools.partial(_bin_kernel, op=op),
+        grid=(av.shape[0] // _ROWS,),
+        in_specs=[pl.BlockSpec((_ROWS, _COLS), lambda i: (i, 0)),
+                  pl.BlockSpec((_ROWS, _COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_ROWS, _COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(av.shape, jnp.float32),
+        interpret=interpret,
+    )(av, bv)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def eltwise_unary(a, *, op: str = "paexp2", interpret: bool = True):
+    shape = a.shape
+    a = a.astype(jnp.float32).reshape(-1)
+    n = a.size
+    npad = -(-n // _TILE) * _TILE
+    av = jnp.pad(a, (0, npad - n)).reshape(-1, _COLS)
+    out = pl.pallas_call(
+        functools.partial(_un_kernel, op=op),
+        grid=(av.shape[0] // _ROWS,),
+        in_specs=[pl.BlockSpec((_ROWS, _COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_ROWS, _COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(av.shape, jnp.float32),
+        interpret=interpret,
+    )(av)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracles for the elementwise PA kernels — the core library ops."""
+from repro.core.pam import pam_value, padiv_value, paexp2_value, palog2_value
+
+REFS = {
+    "pam": pam_value,
+    "padiv": padiv_value,
+    "paexp2": paexp2_value,
+    "palog2": palog2_value,
+}

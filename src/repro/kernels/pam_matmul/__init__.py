@@ -1,0 +1,4 @@
+from .ops import pam_matmul
+from .ref import pam_matmul_ref
+
+__all__ = ["pam_matmul", "pam_matmul_ref"]

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: PAM matrix multiplication (the paper's hot path,
+adapted from CUDA to the TPU memory hierarchy — DESIGN.md §3).
+
+The MXU multiplies natively and cannot execute the bit-level PAM algorithm,
+so the kernel runs on the **VPU** (8x128 int lanes): for each k in the
+K-block it broadcasts the int32 bit patterns of an A column against a B row,
+performs the magnitude-add/re-bias/clamp, bitcasts back and accumulates in a
+float32 VMEM scratch block. Grid is (M/bm, N/bn, K/bk) with the K dimension
+innermost so each (i, j) output tile's accumulator lives in VMEM across all
+K steps (classic Pallas matmul pipelining; HBM traffic is the standard
+(bm*bk + bk*bn) per K-step).
+
+Default tile (128, 128, 512): VMEM = a(128*512*4) + b(512*128*4) + acc+out
+(2*128*128*4) ~= 0.65 MB — far under the ~16 MB/core budget, and 128 tiles
+keep both the lane (128) and sublane (8) dims hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_SIGN = np.int32(-(2**31))
+_MAG = np.int32(0x7FFFFFFF)
+_BIAS = np.int32(127 << 23)
+_MIN_NORM = np.int32(1 << 23)
+_MAX_FINITE = np.int32(0x7F7FFFFF)
+
+
+def _pam_tile(a_col, b_row):
+    """PAM outer product of a (bm, 1) column and a (1, bn) row -> (bm, bn)."""
+    ai = jax.lax.bitcast_convert_type(a_col, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b_row, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
+    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where((a_col == 0.0) | (b_row == 0.0), 0.0, out)
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, bk: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]            # (bm, bk) f32 in VMEM
+    b = b_ref[...]            # (bk, bn) f32 in VMEM
+
+    def body(k, acc):
+        return acc + _pam_tile(a[:, k][:, None], b[k, :][None, :])
+
+    acc_ref[...] = jax.lax.fori_loop(0, bk, body, acc_ref[...])
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _out():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pam_matmul_2d(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512,
+                  interpret: bool = True):
+    """Bit-exact PAM matmul for 2D f32 operands. Pads to tile multiples
+    (PAM(0, x) == 0, so zero padding is exact)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = (-(-m // bm_) * bm_, -(-n // bn_) * bn_, -(-k // bk_) * bk_)
+    a = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk_, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

@@ -1,0 +1,39 @@
+"""Jitted public wrapper: nd-batched PAM matmul backed by the Pallas kernel.
+
+Handles jnp.matmul-style shapes: a (..., M, K) @ b (..., K, N) with
+broadcastable batch dims. Batch dims map onto vmapped pallas_call; the
+common LM case (x @ W, W unbatched) collapses leading dims into M instead —
+one big 2D kernel launch, the layout the TPU pipeline likes best.
+
+On CPU the kernel runs in interpret mode (bit-exact semantics, Python
+execution); on a real TPU set ``interpret=False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import pam_matmul_2d
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def pam_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    kw = dict(bm=bm, bn=bn, bk=bk, interpret=_INTERPRET)
+
+    if a.ndim == 2 and b.ndim == 2:
+        return pam_matmul_2d(a, b, **kw)
+    if b.ndim == 2:
+        lead = a.shape[:-1]
+        out = pam_matmul_2d(a.reshape(-1, a.shape[-1]), b, **kw)
+        return out.reshape(*lead, b.shape[-1])
+
+    # batched b: broadcast batch dims and vmap the 2D kernel
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a = jnp.broadcast_to(a, batch + a.shape[-2:]).reshape((-1,) + a.shape[-2:])
+    b = jnp.broadcast_to(b, batch + b.shape[-2:]).reshape((-1,) + b.shape[-2:])
+    f = jax.vmap(lambda x, y: pam_matmul_2d(x, y, **kw))
+    out = f(a, b)
+    return out.reshape(batch + out.shape[-2:])

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the PAM matmul kernel (bit-exact by construction)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.pam import pam_value
+
+
+def pam_matmul_ref(a, b):
+    """(M, K) @ (K, N) with PAM scalar products, f32 accumulation."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    prod = pam_value(a[:, :, None], b[None, :, :])     # (M, K, N)
+    return jnp.sum(prod, axis=1)

@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, multi-pod dry-run, training, serving,
+roofline analysis. ``dryrun`` must be imported first in its own process —
+it pins XLA_FLAGS before jax initialisation."""

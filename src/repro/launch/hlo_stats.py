@@ -1,0 +1,87 @@
+"""Parse collective traffic out of compiled HLO text (for §Roofline).
+
+cost_analysis() does not attribute collective bytes, so we regex the module:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes ring-model bytes-on-the-wire per device:
+
+    all-reduce        2 (g-1)/g * bytes      (reduce-scatter + all-gather)
+    all-gather          (g-1)/g * result_bytes
+    reduce-scatter      (g-1)/g * operand_bytes (= result*g)
+    all-to-all          (g-1)/g * bytes
+    collective-permute  bytes
+
+where g is the replica-group size parsed from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+    re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> Dict:
+    """Returns {kind: {"count": n, "bytes": wire_bytes_per_device}} plus a
+    "total_bytes" entry. Skips `-done` halves of async pairs."""
+    out: Dict = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None or "-done(" in line:
+            continue
+        kind = m.group("kind")
+        g = _group_size(line, default_group)
+        if g <= 1 and kind != "collective-permute":
+            continue
+        result_bytes = _shape_bytes(m.group("shape"))
+        frac = (g - 1) / g if g > 1 else 1.0
+        if kind == "all-reduce":
+            wire = 2.0 * frac * result_bytes
+        elif kind == "all-gather":
+            wire = frac * result_bytes
+        elif kind == "reduce-scatter":
+            wire = frac * result_bytes * g
+        elif kind == "all-to-all":
+            wire = frac * result_bytes
+        else:  # collective-permute
+            wire = float(result_bytes)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += wire
+    total = sum(v["bytes"] for v in out.values())
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = total
+    return result

@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) single-pod cell, derives the three per-step roofline
+terms on TPU v5e constants:
+
+    compute    = HLO_flops_per_chip / 197e12        [s]
+    memory     = HLO_bytes_per_chip / 819e9         [s]
+    collective = wire_bytes_per_chip / 50e9         [s]  (ring model, 1 link)
+
+cost_analysis() counts scan bodies once (verified in this container), so
+per-chip totals are reconstructed from the unrolled depth-1/-2 variants:
+
+    total(L) = depth1 + (L - 1) * (depth2 - depth1)
+
+and cross-checked against the scanned full compile. MODEL_FLOPS uses
+6*N_active*D for training and 2*N_active*D for inference forward passes;
+the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/duplication waste.
+
+The PAM-hardware view: a PAM-MXU replaces multiplier PEs with int-adders at
+(conservatively) iso-throughput — the *time* roofline is unchanged while MAC
+energy drops ~4x (Appendix B); with the freed area spent on more PEs the
+compute term scales by 1/pam_speedup (reported at 2x as the density-scaled
+scenario).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+_LAYERS = {  # scanned layer count per arch (superblocks for vision)
+    "llama3.2-1b": 16, "olmo-1b": 16, "smollm-135m": 30,
+    "h2o-danube-3-4b": 24, "rwkv6-7b": 32, "whisper-tiny": 4,
+    "kimi-k2-1t-a32b": 61, "qwen3-moe-235b-a22b": 94, "hymba-1.5b": 32,
+    "llama-3.2-vision-90b": 20,
+}
+
+
+def _extrapolate(cell: dict, key_chain) -> Optional[float]:
+    def get(d):
+        for k in key_chain:
+            d = d.get(k, {})
+        return d if isinstance(d, (int, float)) else None
+    if "depth1" not in cell or "depth2" not in cell:
+        return get(cell)
+    d1, d2 = get(cell["depth1"]), get(cell["depth2"])
+    if d1 is None or d2 is None:
+        return get(cell)
+    layers = _LAYERS[cell["arch"]]
+    return d1 + (layers - 1) * (d2 - d1)
+
+
+def model_flops(cell: dict) -> float:
+    """Global model flops for the step (6ND train / 2ND inference fwd)."""
+    n = cell.get("params_active", 0)
+    shape = cell["shape"]
+    if shape.startswith("train"):
+        tokens = 256 * 4096
+        return 6.0 * n * tokens
+    if shape.startswith("prefill"):
+        return 2.0 * n * 32 * 32768
+    if shape == "decode_32k":
+        return 2.0 * n * 128          # one token per sequence
+    return 2.0 * n * 1                # long_500k: batch 1
+
+
+def analyse_cell(cell: dict, pam_speedup: float = 2.0) -> Optional[dict]:
+    if cell.get("status") != "ok":
+        return None
+    chips = cell["chips"]
+    flops = _extrapolate(cell, ("cost", "flops"))
+    bytes_ = _extrapolate(cell, ("cost", "bytes_accessed"))
+    coll = _extrapolate(cell, ("collectives", "total_bytes"))
+    mf = model_flops(cell)
+    compute = flops / PEAK_FLOPS
+    memory = bytes_ / HBM_BW
+    collective = coll / ICI_BW
+    dom = max((compute, "compute"), (memory, "memory"),
+              (collective, "collective"))
+    bound = max(compute, memory, collective)
+    mf_time = mf / (chips * PEAK_FLOPS)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dom[1],
+        "model_flops": mf,
+        "hlo_flops_per_chip": flops,
+        "useful_ratio": mf / (chips * flops) if flops else 0.0,
+        "mfu_bound": mf_time / bound if bound else 0.0,
+        "peak_gib": cell["memory"]["peak_per_device_gib"],
+        "pam_compute_s": compute / pam_speedup,
+        "pam_dominant": max((compute / pam_speedup, "compute"),
+                            (memory, "memory"),
+                            (collective, "collective"))[1],
+    }
+
+
+_SUGGEST = {
+    "compute": "reduce recompute (remat policy) / shed non-model flops",
+    "memory": "cut HBM traffic: fuse, narrow dtypes, smaller logits/loss "
+              "materialisation, microbatch",
+    "collective": "reshard to shrink per-layer all-reduce volume / overlap "
+                  "TP collectives with compute / compress cross-pod grads",
+}
+
+
+def render(rows, fmt="md"):
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful flops ratio | MFU bound | peak GiB/dev | PAM-hw dominant |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['mfu_bound']:.2%} | {r['peak_gib']:.1f} "
+            f"| {r['pam_dominant']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dryrun_dir, "*16x16.json"))):
+        if "2x16x16" in os.path.basename(path):
+            continue
+        cell = json.load(open(path))
+        r = analyse_cell(cell)
+        if r:
+            r["suggestion"] = _SUGGEST[r["dominant"]]
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(render(rows))
+
+
+if __name__ == "__main__":
+    main()

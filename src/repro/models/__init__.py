@@ -1,0 +1,5 @@
+from .common import ModelConfig, MoEConfig, SSMConfig, ParamMeta, init_params, abstract_params
+from .registry import Model, build_model
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "ParamMeta",
+           "init_params", "abstract_params", "Model", "build_model"]

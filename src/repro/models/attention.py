@@ -1,0 +1,260 @@
+"""GQA self-attention, sliding-window attention, cross-attention, KV caches.
+
+Cache design (used by decode shapes incl. the 500k long-context cells):
+a cache is ``{"k": (B, Smax, Hkv, Dh), "v": ..., "kpos": (Smax,)}`` where
+``kpos`` records the absolute position stored in each slot (-1 = empty).
+Writes go to slot ``pos % Smax`` — for full-attention archs Smax covers the
+whole context; for sliding-window archs Smax == window, giving a rolling
+buffer whose memory is O(window), the sub-quadratic property that makes
+``long_500k`` runnable. Masking reads kpos, so both layouts share one code
+path. Cache seq dims are sharded over the model axis when kv-head sharding
+is impossible (GQA kv < TP) — KV-cache sequence parallelism.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_matmul, pa_softmax
+from .common import (ModelConfig, meta, norm_meta, norm, linear, scale_const,
+                     emul, apply_rope, rope_tables)
+
+
+def attn_meta(cfg: ModelConfig, cross: bool = False):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": meta((d, hq * dh), ("embed", "heads"), cfg=cfg),
+        "wk": meta((d, hkv * dh), ("embed", "kv"), cfg=cfg),
+        "wv": meta((d, hkv * dh), ("embed", "kv"), cfg=cfg),
+        "wo": meta((hq * dh, d), ("heads", "embed"), cfg=cfg, scale=1.0),
+    }
+    if cfg.attn_bias:
+        p["bq"] = meta((hq * dh,), ("heads",), init="zeros", cfg=cfg)
+        p["bk"] = meta((hkv * dh,), ("kv",), init="zeros", cfg=cfg)
+        p["bv"] = meta((hkv * dh,), ("kv",), init="zeros", cfg=cfg)
+        p["bo"] = meta((d,), ("act_embed",), init="zeros", cfg=cfg)
+    if cfg.qk_norm:
+        p["q_norm"] = norm_meta(cfg, dh)
+        p["k_norm"] = norm_meta(cfg, dh)
+    if cross:
+        p["gate"] = meta((1,), (None,), init="zeros", cfg=cfg)
+    return p
+
+
+def init_cache_meta(cfg: ModelConfig, batch: int, max_len: int, layers: int,
+                    dtype=None):
+    """Abstract KV cache for `layers` stacked layers."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    smax = max_len if cfg.sliding_window is None else min(max_len, cfg.sliding_window)
+    dtype = dtype or cfg.cdtype
+    return {
+        "k": meta((layers, batch, smax, hkv, dh),
+                  ("layers", "cache_batch", "cache_seq", "cache_kv", None),
+                  dtype=dtype, init="zeros", cfg=cfg),
+        "v": meta((layers, batch, smax, hkv, dh),
+                  ("layers", "cache_batch", "cache_seq", "cache_kv", None),
+                  dtype=dtype, init="zeros", cfg=cfg),
+        # -1 marks empty slots: the position-based mask rejects them, so an
+        # uninitialised cache can never be attended to.
+        "kpos": meta((layers, smax), ("layers", "cache_seq"),
+                     dtype=jnp.int32, init="neg1", cfg=cfg),
+    }
+
+
+def _qkv(h, p, cfg: ModelConfig):
+    b, s, _ = h.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(h, p["wq"], cfg, p.get("bq")).reshape(b, s, hq, dh)
+    k = linear(h, p["wk"], cfg, p.get("bk")).reshape(b, s, hkv, dh)
+    v = linear(h, p["wv"], cfg, p.get("bv")).reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = norm(q, p["q_norm"], cfg)
+        k = norm(k, p["k_norm"], cfg)
+    q = constrain(q, ("batch", None, "act_heads", None))
+    k = constrain(k, ("batch", None, "cache_kv", None))
+    v = constrain(v, ("batch", None, "cache_kv", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Grouped scaled-dot-product attention.
+    q: (B,S,Hq,Dh) k,v: (B,T,Hkv,Dh) mask: (B,1,S,T) or (1,1,S,T)."""
+    b, s, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if cfg.attn_scale_in_q:
+        # §Perf: apply 1/sqrt(dh) on the (S, Dh) query instead of the much
+        # larger (S, T) score tensor.
+        q = scale_const(q, 1.0 / np.sqrt(dh), cfg)
+    qh = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, s, dh)
+    kh = k.transpose(0, 2, 3, 1)[:, :, None]          # (B,Hkv,1,Dh,T)
+    vh = v.transpose(0, 2, 1, 3)[:, :, None]          # (B,Hkv,1,T,Dh)
+    scores = pa_matmul(qh, kh, cfg.pa)                # (B,Hkv,G,S,T)
+    if cfg.attn_score_seq_shard and s > 1:
+        # §Perf: row-parallel attention — when head counts don't divide the
+        # model axis (hymba: 25 heads vs TP=16), shard the query-seq dim of
+        # the quadratic score tensor instead of leaving it replicated.
+        scores = constrain(scores, ("batch", "cache_kv", "act_heads",
+                                    "act_seq", None))
+    sdt = jnp.dtype(cfg.attn_softmax_dtype)
+    scores = scores.astype(sdt)
+    if not cfg.attn_scale_in_q:
+        scores = scale_const(scores, 1.0 / np.sqrt(dh), cfg)
+    if cfg.attn_mask_mode == "additive":
+        # §Perf: one fused add of a precomputed bias vs a select per use.
+        bias = jnp.where(mask[:, :, None], sdt.type(0), sdt.type(-1e30))
+        probs = pa_softmax(scores + bias, cfg.pa).astype(q.dtype)
+    else:
+        probs = pa_softmax(scores, cfg.pa, where=mask[:, :, None]).astype(q.dtype)
+    out = pa_matmul(probs, vh, cfg.pa)                # (B,Hkv,G,S,Dh)
+    return out.reshape(b, hq, s, dh).transpose(0, 2, 1, 3)
+
+
+def _banded_sdpa(q, k, v, positions, window: int, cfg: ModelConfig):
+    """Sliding-window attention over contiguous blocks (§Perf, beyond-paper):
+    each query block of `w` attends to its own + previous block (2w band)
+    instead of the full S keys — score bytes drop from S*S to S*2w.
+    Requires static window, all-SWA layers, contiguous positions, S % w == 0.
+    """
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    w = window
+    nb = s // w
+    qb = q.reshape(b, nb, w, hq, dh)
+    pad = [(0, 0), (w, 0)] + [(0, 0)] * 2
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+    idx = jnp.arange(nb)[:, None] * w + jnp.arange(2 * w)[None]     # (nb, 2w)
+    kb = kp[:, idx]                                                  # (B,nb,2w,Hkv,dh)
+    vb = vp[:, idx]
+    qpb = positions[:1].reshape(1, nb, w)
+    kpb = jnp.pad(positions[:1], ((0, 0), (w, 0)), constant_values=-1)[:, idx]
+    mask = causal_mask(qpb, kpb, w)                                  # (1,nb,w,2w)
+
+    g = hq // hkv
+    qh = qb.transpose(0, 1, 3, 2, 4).reshape(b, nb, hkv, g, w, dh)
+    kh = kb.transpose(0, 1, 3, 4, 2)[:, :, :, None]                 # (B,nb,Hkv,1,dh,2w)
+    vh = vb.transpose(0, 1, 3, 2, 4)[:, :, :, None]                 # (B,nb,Hkv,1,2w,dh)
+    if cfg.attn_scale_in_q:
+        qh = scale_const(qh, 1.0 / np.sqrt(dh), cfg)
+    scores = pa_matmul(qh, kh, cfg.pa)                               # (B,nb,Hkv,G,w,2w)
+    if cfg.attn_score_seq_shard:
+        scores = constrain(scores, ("batch", "act_seq", "cache_kv",
+                                    "act_heads", None, None))
+    sdt = jnp.dtype(cfg.attn_softmax_dtype)
+    scores = scores.astype(sdt)
+    if not cfg.attn_scale_in_q:
+        scores = scale_const(scores, 1.0 / np.sqrt(dh), cfg)
+    probs = pa_softmax(scores, cfg.pa,
+                       where=mask[:, :, None, None]).astype(q.dtype)
+    out = pa_matmul(probs, vh, cfg.pa)                               # (B,nb,Hkv,G,w,dh)
+    out = out.reshape(b, nb, hq, w, dh).transpose(0, 1, 3, 2, 4)
+    return out.reshape(b, s, hq, dh)
+
+
+def causal_mask(q_pos, k_pos, window: Optional[int]):
+    """(..., S, T) boolean mask from absolute positions."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    m &= k_pos[..., None, :] >= 0
+    if window is not None:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m
+
+
+def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
+                   is_global=None, cache=None, layer_cache=None):
+    """Self-attention over h (B,S,d).
+
+    If ``layer_cache`` (one layer's {"k","v","kpos"}) is given, keys/values
+    are merged into it (prefill: S>=1 writes; decode: S==1) and the updated
+    cache is returned alongside the output.
+    """
+    b, s, _ = h.shape
+    q, k, v = _qkv(h, p, cfg)
+    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta, jnp.float32)
+    q = apply_rope(q, cos, sin, cfg)
+    k = apply_rope(k, cos, sin, cfg)
+
+    win = window if window is not None else cfg.sliding_window
+    if is_global is not None:
+        # per-layer scalar flag (hybrid archs): global layers see everything
+        eff_win = jnp.where(is_global, jnp.iinfo(jnp.int32).max // 2,
+                            jnp.int32(win if win else jnp.iinfo(jnp.int32).max // 2))
+    else:
+        eff_win = win
+
+    new_cache = None
+    if layer_cache is not None:
+        smax = layer_cache["k"].shape[1]
+        if s >= smax:
+            # prefill longer than the rolling window: only the last `smax`
+            # keys survive. Shapes guarantee alignment (S % window == 0),
+            # so slot 0 corresponds to pos % smax == 0.
+            kc = k[:, -smax:].astype(layer_cache["k"].dtype)
+            vc = v[:, -smax:].astype(layer_cache["v"].dtype)
+            kp = positions[0, -smax:].astype(jnp.int32)
+        else:
+            start = positions[0, 0]                   # contiguous writes
+            slot = jnp.mod(start, smax)
+            kc = jax.lax.dynamic_update_slice(layer_cache["k"], k.astype(layer_cache["k"].dtype),
+                                              (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
+            vc = jax.lax.dynamic_update_slice(layer_cache["v"], v.astype(layer_cache["v"].dtype),
+                                              (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
+            kp = jax.lax.dynamic_update_slice(layer_cache["kpos"], positions[0].astype(jnp.int32),
+                                              (slot,))
+        kc = constrain(kc, ("cache_batch", "cache_seq", "cache_kv", None))
+        vc = constrain(vc, ("cache_batch", "cache_seq", "cache_kv", None))
+        new_cache = {"k": kc, "v": vc, "kpos": kp}
+        if s >= smax:
+            # the step itself attends in-context (full causal/SWA over S)
+            k_all, v_all = k, v
+            k_pos = positions[:1]
+        else:
+            k_all, v_all = kc.astype(q.dtype), vc.astype(q.dtype)
+            k_pos = kp[None]
+    else:
+        k_all, v_all = k, v
+        k_pos = positions[:1]
+
+    use_banded = (cfg.attn_local_banded and cfg.sliding_window is not None
+                  and not cfg.global_layers and s > cfg.sliding_window
+                  and s % cfg.sliding_window == 0
+                  and (layer_cache is None
+                       or s >= layer_cache["k"].shape[1]))
+    if use_banded:
+        out = _banded_sdpa(q, k, v, positions, cfg.sliding_window, cfg)
+    else:
+        if isinstance(eff_win, (int, type(None))):
+            mask = causal_mask(positions[:1], k_pos, eff_win)[:, None]
+        else:
+            m = causal_mask(positions[:1], k_pos, None)
+            m &= (positions[:1, :, None] - k_pos[:, None, :]) < eff_win
+            mask = m[:, None]
+        out = _sdpa(q, k_all, v_all, mask, cfg)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = linear(out, p["wo"], cfg, p.get("bo"))
+    return constrain(out, ("batch", None, "act_embed")), new_cache
+
+
+def cross_attention(h, ctx, p, cfg: ModelConfig, gated: bool = False):
+    """Cross-attention: queries from h (B,S,d), keys/values from ctx (B,T,d).
+    ``gated`` applies the Llama-3.2-vision tanh gate."""
+    b, s, _ = h.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(h, p["wq"], cfg, p.get("bq")).reshape(b, s, hq, dh)
+    k = linear(ctx, p["wk"], cfg, p.get("bk")).reshape(b, ctx.shape[1], hkv, dh)
+    v = linear(ctx, p["wv"], cfg, p.get("bv")).reshape(b, ctx.shape[1], hkv, dh)
+    if cfg.qk_norm:
+        q = norm(q, p["q_norm"], cfg)
+        k = norm(k, p["k_norm"], cfg)
+    mask = jnp.ones((1, 1, s, ctx.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, cfg).reshape(b, s, hq * dh)
+    out = linear(out, p["wo"], cfg, p.get("bo"))
+    if gated:
+        from repro.core import pa_tanh
+        out = emul(out, pa_tanh(p["gate"].astype(out.dtype), cfg.pa), cfg)
+    return constrain(out, ("batch", None, "act_embed"))

@@ -1,0 +1,247 @@
+"""Shared model machinery: configs, parameter metadata, init, and layer
+primitives (linear / embedding / norms / RoPE) that all route through the
+core PA arithmetic.
+
+Parameters are plain nested dicts. Their *structure* is defined once as a
+tree of ``ParamMeta`` (shape, dtype, logical axes, initializer); everything
+else — real init, abstract init for dry-runs, PartitionSpec trees — is
+derived from that single source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig, pa_matmul, pa_elementwise_mul
+from repro.core import nn as pann
+from repro.parallel.sharding import AxisRules, DEFAULT_RULES, FSDP_RULES
+
+
+# ---------------------------------------------------------------------------
+# Config.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    dispatch: str = "scatter"     # "gather": index-gather dispatch — zero
+                                  # token exchange on the (expert x data) grid
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 16
+    conv_size: int = 4
+    expand: int = 2
+    dt_rank: int = 0        # 0 -> ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "decoder"       # decoder | rwkv | hybrid | encdec | vision_lm
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 0               # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab_size: int = 256
+    max_seq_len: int = 2048
+    norm: str = "rmsnorm"         # rmsnorm | layernorm | layernorm_nonparam
+    activation: str = "silu"
+    mlp_gated: bool = True        # SwiGLU-style
+    rope_theta: float = 500000.0
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    qk_norm: bool = False         # Qwen3-style
+    sliding_window: Optional[int] = None
+    global_layers: Tuple[int, ...] = ()   # layers without the sliding window
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_seq_len: int = 1500       # whisper 30s of frames (modality stub)
+    # vision (llama3.2-vision)
+    cross_attn_every: int = 0     # insert a cross-attn layer every N layers
+    num_image_tokens: int = 4096
+    # numerics / memory
+    pa: PAConfig = PAConfig()
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"           # none | full | dots
+    fsdp: bool = False
+    scan_layers: bool = True
+    label_smoothing: float = 0.0
+    # perf knobs (§Perf hillclimbing levers)
+    attn_softmax_dtype: str = "float32"   # bfloat16 halves score traffic
+    loss_dtype: str = "float32"           # bfloat16 halves logit traffic
+    ssm_fused_scan: bool = False          # discretise inside the time scan
+    attn_mask_mode: str = "select"        # "additive": one add vs n selects
+    attn_scale_in_q: bool = False         # scale q (SxD) not scores (SxS)
+    attn_score_seq_shard: bool = False    # shard S_q of scores over model
+                                          # (rescues TP-indivisible heads)
+    ssm_time_chunk: int = 0               # remat the SSM scan per time chunk
+    attn_local_banded: bool = False       # SWA via banded blocks, not SxS+mask
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        # Bit-exact PA modes operate on float32 (the bit algorithm's domain;
+        # narrow formats are simulated by mantissa_bits, Appendix D).
+        if self.pa.matmul_is_pa and self.pa.impl != "hw":
+            return jnp.float32
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def rules(self) -> AxisRules:
+        return FSDP_RULES if self.fsdp else DEFAULT_RULES
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter metadata.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def abstract(self):
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def meta(shape, axes, dtype=None, init="normal", scale=1.0, cfg: ModelConfig = None):
+    dtype = dtype or (cfg.pdtype if cfg is not None else jnp.bfloat16)
+    return ParamMeta(tuple(int(s) for s in shape), tuple(axes), dtype, init, scale)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _init_leaf(key, m: ParamMeta):
+    if m.init == "zeros":
+        return jnp.zeros(m.shape, m.dtype)
+    if m.init == "neg1":
+        return jnp.full(m.shape, -1, m.dtype)
+    if m.init == "ones":
+        return jnp.ones(m.shape, m.dtype)
+    fan_in = m.shape[-2] if len(m.shape) >= 2 else m.shape[-1]
+    std = m.scale / math.sqrt(max(1, fan_in))
+    if m.init == "embed":
+        std = m.scale * 0.02
+    return (jax.random.normal(key, m.shape, jnp.float32) * std).astype(m.dtype)
+
+
+def init_params(rng, meta_tree):
+    """Materialise a ParamMeta tree into real parameters (deterministic:
+    each leaf's key is folded in from its tree path)."""
+    leaves, treedef = jax.tree.flatten(meta_tree, is_leaf=is_meta)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(k, m) for k, m in zip(keys, leaves)])
+
+
+def abstract_params(meta_tree):
+    return jax.tree.map(lambda m: m.abstract(), meta_tree, is_leaf=is_meta)
+
+
+def stack_layers(meta_tree, n: int):
+    """Add a leading stacked-layers dim to every leaf (for lax.scan)."""
+    return jax.tree.map(
+        lambda m: ParamMeta((n,) + m.shape, ("layers",) + m.axes, m.dtype,
+                            m.init, m.scale),
+        meta_tree, is_leaf=is_meta)
+
+
+# ---------------------------------------------------------------------------
+# Layer primitives (all PA-aware).
+# ---------------------------------------------------------------------------
+
+def linear(x, w, cfg: ModelConfig, bias=None):
+    y = pa_matmul(x.astype(cfg.cdtype), w.astype(cfg.cdtype), cfg.pa)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def scale_const(x, c: float, cfg: ModelConfig):
+    """Multiply by a trace-time constant under the numeric mode."""
+    pa = cfg.pa
+    if pa.nonlin_is_pa and pa.impl != "hw":
+        from repro.core import pam
+        return pam(x, np.float32(c), pa.deriv)
+    return x * jnp.asarray(c, x.dtype)
+
+
+def emul(a, b, cfg: ModelConfig, deriv=None):
+    """Elementwise multiply under the numeric mode."""
+    return pa_elementwise_mul(a, b, cfg.pa, deriv)
+
+
+def norm(x, p, cfg: ModelConfig):
+    """Dispatch on cfg.norm; p is the layer's norm param dict (may be {})."""
+    if cfg.norm == "rmsnorm":
+        return pann.pa_rmsnorm(x, p.get("scale"), cfg.pa)
+    gamma = p.get("scale") if cfg.norm == "layernorm" else None
+    beta = p.get("bias") if cfg.norm == "layernorm" else None
+    return pann.pa_layernorm(x, gamma, beta, cfg.pa)
+
+
+def norm_meta(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": meta((d,), ("act_embed",), init="ones", cfg=cfg)}
+    if cfg.norm == "layernorm":
+        return {"scale": meta((d,), ("act_embed",), init="ones", cfg=cfg),
+                "bias": meta((d,), ("act_embed",), init="zeros", cfg=cfg)}
+    return {}  # layernorm_nonparam (OLMo)
+
+
+def activation(x, cfg: ModelConfig):
+    return pann.ACTIVATIONS[cfg.activation](x, cfg.pa)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, head_dim: int, theta: float, dtype):
+    """cos/sin tables for the given positions: (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = (1.0 / theta) ** (np.arange(half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin, cfg: ModelConfig):
+    """x: (B, S, H, Dh). Rotation multiplies are PA ops in full mode."""
+    b, s, h, dh = x.shape
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[:, :, None, :]
+    sn = sin[:, :, None, :]
+    r1 = emul(x1, c, cfg) - emul(x2, sn, cfg)
+    r2 = emul(x2, c, cfg) + emul(x1, sn, cfg)
+    return jnp.concatenate([r1, r2], axis=-1)

@@ -1,0 +1,138 @@
+"""Hymba — hybrid-head architecture: attention heads and SSM (Mamba) heads
+process every token *in parallel* within each layer; branch outputs are
+normalised and averaged (mean fusion, per the Hymba paper). Most layers use
+sliding-window attention; cfg.global_layers stay global. The rolling window
+cache + O(1) SSM state keeps decode memory bounded -> runs ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_cross_entropy
+from .common import ModelConfig, meta, stack_layers, norm, norm_meta
+from .attention import attn_meta, self_attention, init_cache_meta
+from .mlp import mlp_meta, mlp
+from .ssm import ssm_meta, ssm_branch, ssm_cache_meta
+from .transformer import embed_tokens, lm_head, global_flags
+
+
+def hymba_block_meta(cfg: ModelConfig):
+    return {
+        "in_norm": norm_meta(cfg),
+        "attn": attn_meta(cfg),
+        "ssm": ssm_meta(cfg),
+        "attn_out_norm": norm_meta(cfg),
+        "ssm_out_norm": norm_meta(cfg),
+        "mlp_norm": norm_meta(cfg),
+        "mlp": mlp_meta(cfg),
+    }
+
+
+def hymba_meta(cfg: ModelConfig):
+    return {
+        "embed": meta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="embed", cfg=cfg),
+        "layers": stack_layers(hymba_block_meta(cfg), cfg.n_layers),
+        "final_norm": norm_meta(cfg),
+        "head": meta((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg=cfg),
+    }
+
+
+def cache_meta(cfg: ModelConfig, batch: int, max_len: int):
+    c = init_cache_meta(cfg, batch, max_len, cfg.n_layers)
+    c.update(ssm_cache_meta(cfg, batch, cfg.n_layers))
+    return c
+
+
+def hymba_block(h, lp, cfg: ModelConfig, positions, is_global, lc):
+    x = norm(h, lp["in_norm"], cfg)
+    attn_cache = ssm_cache = None
+    if lc is not None:
+        attn_cache = {k: lc[k] for k in ("k", "v", "kpos")}
+        ssm_cache = {k: lc[k] for k in ("ssm", "conv")}
+    a, new_attn = self_attention(x, lp["attn"], cfg, positions=positions,
+                                 is_global=is_global, layer_cache=attn_cache)
+    s, new_ssm = ssm_branch(x, lp["ssm"], cfg, layer_cache=ssm_cache)
+    # mean fusion of the two normalised branch outputs
+    fused = norm(a, lp["attn_out_norm"], cfg) + norm(s, lp["ssm_out_norm"], cfg)
+    from .common import scale_const
+    h = h + scale_const(fused, 0.5, cfg)
+    m = mlp(norm(h, lp["mlp_norm"], cfg), lp["mlp"], cfg)
+    h = constrain(h + m, ("batch", None, "act_embed"))
+    new_lc = None
+    if lc is not None:
+        new_lc = dict(new_attn)
+        new_lc.update(new_ssm)
+    return h, new_lc
+
+
+def backbone(params, h, cfg: ModelConfig, positions, cache=None):
+    flags = jnp.asarray(global_flags(cfg))
+
+    if cache is None:
+        def body(carry, xs):
+            lp, flag = xs
+            out, _ = hymba_block(carry, lp, cfg, positions, flag, None)
+            return out, ()
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, (params["layers"], flags))
+        else:
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda x: x[i], params["layers"])
+                h, _ = body(h, (lp, flags[i]))
+        return h, None
+
+    def body_c(carry, xs):
+        lp, lc, flag = xs
+        out, new_lc = hymba_block(carry, lp, cfg, positions, flag, lc)
+        return out, new_lc
+    if cfg.remat != "none":
+        body_c = jax.checkpoint(body_c)
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body_c, h, (params["layers"], cache, flags))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            lc = jax.tree.map(lambda x: x[i], cache)
+            h, nl = body_c(h, (lp, lc, flags[i]))
+            outs.append(nl)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, new_cache
+
+
+def logits_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = embed_tokens(params, tokens, cfg)
+    h, _ = backbone(params, h, cfg, positions)
+    return lm_head(params, h, cfg), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = logits_fn(params, batch, cfg)
+    return pa_cross_entropy(logits.astype(jnp.dtype(cfg.loss_dtype)), batch["labels"], cfg.pa,
+                            label_smoothing=cfg.label_smoothing,
+                            where=batch.get("mask"))
+
+
+def prefill_fn(params, batch, cache, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = embed_tokens(params, tokens, cfg)
+    h, new_cache = backbone(params, h, cfg, positions, cache)
+    return lm_head(params, h[:, -1:], cfg), new_cache
+
+
+def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    b = token.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+    h = embed_tokens(params, token, cfg)
+    h, new_cache = backbone(params, h, cfg, positions, cache)
+    return lm_head(params, h, cfg), new_cache

@@ -1,0 +1,28 @@
+"""Dense MLP blocks (gated SwiGLU-style and plain) — all matmuls PA-routed."""
+from __future__ import annotations
+
+from repro.parallel.sharding import constrain
+from .common import ModelConfig, meta, linear, activation, emul
+
+
+def mlp_meta(cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "w_up": meta((d, f), ("embed", "mlp"), cfg=cfg),
+        "w_down": meta((f, d), ("mlp", "embed"), cfg=cfg),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = meta((d, f), ("embed", "mlp"), cfg=cfg)
+    return p
+
+
+def mlp(h, p, cfg: ModelConfig):
+    up = linear(h, p["w_up"], cfg)
+    up = constrain(up, ("batch", None, "act_mlp"))
+    if cfg.mlp_gated:
+        gate = activation(linear(h, p["w_gate"], cfg), cfg)
+        up = emul(up, gate, cfg)
+    else:
+        up = activation(up, cfg)
+    out = linear(up, p["w_down"], cfg)
+    return constrain(out, ("batch", None, "act_embed"))

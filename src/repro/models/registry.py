@@ -1,0 +1,128 @@
+"""Model registry: one uniform ``Model`` handle per architecture family.
+
+Every family exposes the same functional surface, so the training loop,
+serving engine, dry-run and benchmarks are family-agnostic:
+
+    model.meta()                      -> ParamMeta tree
+    model.init(rng)                   -> params
+    model.abstract()                  -> ShapeDtypeStruct tree
+    model.pspecs(mesh)                -> PartitionSpec tree
+    model.loss(params, batch)         -> scalar
+    model.logits(params, batch)       -> (logits, aux)
+    model.cache_meta(batch, max_len)  -> ParamMeta tree
+    model.prefill(params, batch, cache) -> (logits, cache)
+    model.decode(params, cache, token, pos) -> (logits, cache)
+    model.input_specs(shape, phase)   -> abstract batch for dry-runs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import tree_pspecs, tree_shardings
+from .common import ModelConfig, init_params, abstract_params
+from . import transformer, rwkv, hymba, whisper, vision_lm
+
+_FAMILIES = {
+    "decoder": transformer,
+    "rwkv": rwkv,
+    "hybrid": hymba,
+    "encdec": whisper,
+    "vision_lm": vision_lm,
+}
+
+_META_FNS = {
+    "decoder": transformer.lm_meta,
+    "rwkv": rwkv.rwkv_meta,
+    "hybrid": hymba.hymba_meta,
+    "encdec": whisper.whisper_meta,
+    "vision_lm": vision_lm.vision_meta,
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def _mod(self):
+        return _FAMILIES[self.cfg.family]
+
+    # -- parameters ---------------------------------------------------------
+    def meta(self):
+        return _META_FNS[self.cfg.family](self.cfg)
+
+    def init(self, rng):
+        return init_params(rng, self.meta())
+
+    def abstract(self):
+        return abstract_params(self.meta())
+
+    def pspecs(self, mesh):
+        return tree_pspecs(self.meta(), mesh, self.cfg.rules)
+
+    def shardings(self, mesh):
+        return tree_shardings(self.meta(), mesh, self.cfg.rules)
+
+    # -- compute ------------------------------------------------------------
+    def loss(self, params, batch):
+        return self._mod.loss_fn(params, batch, self.cfg)
+
+    def logits(self, params, batch):
+        return self._mod.logits_fn(params, batch, self.cfg)
+
+    # -- serving ------------------------------------------------------------
+    def cache_meta(self, batch: int, max_len: int):
+        return self._mod.cache_meta(self.cfg, batch, max_len)
+
+    def cache_pspecs(self, batch: int, max_len: int, mesh):
+        return tree_pspecs(self.cache_meta(batch, max_len), mesh, self.cfg.rules)
+
+    def init_cache(self, batch: int, max_len: int):
+        return init_params(jax.random.PRNGKey(0), self.cache_meta(batch, max_len))
+
+    def prefill(self, params, batch, cache):
+        return self._mod.prefill_fn(params, batch, cache, self.cfg)
+
+    def decode(self, params, cache, token, pos):
+        return self._mod.decode_fn(params, cache, token, pos, self.cfg)
+
+    # -- dry-run inputs ------------------------------------------------------
+    def input_specs(self, batch: int, seq_len: int, phase: str = "train"):
+        """Abstract batch (ShapeDtypeStructs): the modality frontends of
+        [audio]/[vlm] archs are stubs that provide precomputed embeddings."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        if phase in ("train", "prefill"):
+            b = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), i32)}
+            if phase == "train":
+                b["labels"] = jax.ShapeDtypeStruct((batch, seq_len), i32)
+                b["mask"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.bool_)
+            if cfg.family == "encdec":
+                b["enc_embed"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.enc_seq_len, cfg.d_model), cfg.cdtype)
+            if cfg.family == "vision_lm":
+                b["img_embed"] = jax.ShapeDtypeStruct(
+                    (batch, cfg.num_image_tokens, cfg.d_model), cfg.cdtype)
+            return b
+        if phase == "decode":
+            return {"token": jax.ShapeDtypeStruct((batch, 1), i32)}
+        raise ValueError(phase)
+
+    def batch_pspecs(self, specs, mesh):
+        """PartitionSpecs for a batch dict (batch dim over DP axes)."""
+        from repro.parallel.sharding import spec_for
+        out = {}
+        for k, v in specs.items():
+            axes = ("batch",) + (None,) * (len(v.shape) - 1)
+            out[k] = spec_for(v.shape, axes, mesh, self.cfg.rules)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(cfg)

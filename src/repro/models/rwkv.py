@@ -1,0 +1,244 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Time-mix implements the RWKV6 WKV recurrence with per-head matrix state:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+where the decay w_t = exp(-exp(w0 + lora(x))) is *data-dependent* (the
+paper-defining feature of RWKV6). In full-PA mode the exps are paexp and all
+products PAM — the paper's technique composes cleanly with an attention-free
+arch (see DESIGN.md §Arch-applicability: no softmax exists to replace, but
+every matmul/lerp/decay is PA).
+
+Decode carries (token-shift states, per-head matrix state) — O(1) in context
+length, which is why rwkv6 runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_matmul, pa_sigmoid, pa_relu, pa_cross_entropy, paexp
+from .common import (ModelConfig, meta, stack_layers, norm, norm_meta, linear,
+                     emul)
+from .transformer import embed_tokens, lm_head
+
+_W_LORA = 64
+
+
+def _heads(cfg: ModelConfig):
+    dh = cfg.head_dim
+    return cfg.n_heads, dh
+
+
+def timemix_meta(cfg: ModelConfig):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    return {
+        "mu_r": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "mu_k": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "mu_v": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "mu_g": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "mu_w": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "w_r": meta((d, d), ("embed", "heads"), cfg=cfg),
+        "w_k": meta((d, d), ("embed", "heads"), cfg=cfg),
+        "w_v": meta((d, d), ("embed", "heads"), cfg=cfg),
+        "w_g": meta((d, d), ("embed", "heads"), cfg=cfg),
+        "w_o": meta((d, d), ("heads", "embed"), cfg=cfg),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "w_lora_a": meta((d, _W_LORA), ("embed", None), cfg=cfg),
+        "w_lora_b": meta((_W_LORA, d), (None, "heads"), cfg=cfg),
+        "u": meta((h, dh), ("heads", None), init="zeros", cfg=cfg),
+        "ln_x": norm_meta(cfg.replace(norm="layernorm"), dh),
+    }
+
+
+def channelmix_meta(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "mu_r": meta((d,), ("act_embed",), init="zeros", cfg=cfg),
+        "w_k": meta((d, f), ("embed", "mlp"), cfg=cfg),
+        "w_v": meta((f, d), ("mlp", "embed"), cfg=cfg),
+        "w_r": meta((d, d), ("embed", None), cfg=cfg),
+    }
+
+
+def rwkv_block_meta(cfg: ModelConfig):
+    return {"ln1": norm_meta(cfg), "tm": timemix_meta(cfg),
+            "ln2": norm_meta(cfg), "cm": channelmix_meta(cfg)}
+
+
+def rwkv_meta(cfg: ModelConfig):
+    return {
+        "embed": meta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="embed", cfg=cfg),
+        "ln_in": norm_meta(cfg),
+        "layers": stack_layers(rwkv_block_meta(cfg), cfg.n_layers),
+        "final_norm": norm_meta(cfg),
+        "head": meta((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg=cfg),
+    }
+
+
+def rwkv_cache_meta(cfg: ModelConfig, batch: int, layers: int):
+    h, dh = _heads(cfg)
+    return {
+        "state": meta((layers, batch, h, dh, dh),
+                      ("layers", "cache_batch", "cache_kv", None, None),
+                      dtype=jnp.float32, init="zeros", cfg=cfg),
+        "x_tm": meta((layers, batch, cfg.d_model),
+                     ("layers", "cache_batch", "act_embed"),
+                     dtype=cfg.cdtype, init="zeros", cfg=cfg),
+        "x_cm": meta((layers, batch, cfg.d_model),
+                     ("layers", "cache_batch", "act_embed"),
+                     dtype=cfg.cdtype, init="zeros", cfg=cfg),
+    }
+
+
+def _lerp(x, x_prev, mu, cfg):
+    # x + (x_prev - x) * mu  — the RWKV token-shift interpolation.
+    return x + emul(x_prev - x, mu.astype(x.dtype)[None, None], cfg)
+
+
+def _shift(x, x_last):
+    """Token shift: x_prev[t] = x[t-1], with x_last feeding position 0."""
+    return jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(x, p, cfg: ModelConfig, x_last, state0):
+    """x: (B,S,d). Returns (out, x_new_last, state_T)."""
+    b, s, d = x.shape
+    h, dh = _heads(cfg)
+    xp = _shift(x, x_last)
+
+    xr = _lerp(x, xp, p["mu_r"], cfg)
+    xk = _lerp(x, xp, p["mu_k"], cfg)
+    xv = _lerp(x, xp, p["mu_v"], cfg)
+    xg = _lerp(x, xp, p["mu_g"], cfg)
+    xw = _lerp(x, xp, p["mu_w"], cfg)
+
+    r = linear(xr, p["w_r"], cfg).reshape(b, s, h, dh)
+    k = linear(xk, p["w_k"], cfg).reshape(b, s, h, dh)
+    v = linear(xv, p["w_v"], cfg).reshape(b, s, h, dh)
+    g = linear(xg, p["w_g"], cfg)
+
+    # data-dependent decay in (0, 1)
+    from repro.core import pa_tanh
+    lora = linear(pa_tanh(linear(xw, p["w_lora_a"], cfg), cfg.pa), p["w_lora_b"], cfg)
+    wexp = p["w0"].astype(x.dtype)[None, None] + lora
+    if cfg.pa.nonlin_is_pa and cfg.pa.impl != "hw":
+        w = paexp(-paexp(wexp.astype(jnp.float32), cfg.pa.deriv), cfg.pa.deriv)
+    else:
+        w = jnp.exp(-jnp.exp(wexp.astype(jnp.float32)))
+    w = w.reshape(b, s, h, dh)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs                       # (B,h,dh) each
+        kv = emul(k_t[..., :, None], v_t[..., None, :], cfg)      # (B,h,dh,dh)
+        y_t = jnp.sum(emul(r_t[..., :, None],
+                           state + emul(u[None, :, :, None], kv, cfg), cfg), axis=-2)
+        state = emul(w_t[..., :, None], state, cfg) + kv
+        return state, y_t
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), w))
+    state_t, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # (B,S,h,dh)
+
+    from repro.core import pa_layernorm, pa_silu
+    y = pa_layernorm(y, p["ln_x"]["scale"], p["ln_x"]["bias"], cfg.pa).astype(x.dtype)
+    y = y.reshape(b, s, d)
+    y = emul(y, pa_silu(g, cfg.pa), cfg)
+    out = linear(y, p["w_o"], cfg)
+    return constrain(out, ("batch", None, "act_embed")), x[:, -1], state_t
+
+
+def channel_mix(x, p, cfg: ModelConfig, x_last):
+    xp = _shift(x, x_last)
+    xk = _lerp(x, xp, p["mu_k"], cfg)
+    xr = _lerp(x, xp, p["mu_r"], cfg)
+    kk = pa_relu(linear(xk, p["w_k"], cfg), cfg.pa)
+    kk = emul(kk, kk, cfg)                            # relu(x)^2
+    vv = linear(kk, p["w_v"], cfg)
+    rr = pa_sigmoid(linear(xr, p["w_r"], cfg), cfg.pa)
+    return constrain(emul(rr, vv, cfg), ("batch", None, "act_embed")), x[:, -1]
+
+
+def rwkv_block(h, lp, cfg: ModelConfig, lc):
+    a, x_tm, state = time_mix(norm(h, lp["ln1"], cfg), lp["tm"], cfg,
+                              lc["x_tm"], lc["state"])
+    h = h + a
+    c, x_cm = channel_mix(norm(h, lp["ln2"], cfg), lp["cm"], cfg, lc["x_cm"])
+    h = h + c
+    return h, {"state": state, "x_tm": x_tm.astype(lc["x_tm"].dtype),
+               "x_cm": x_cm.astype(lc["x_cm"].dtype)}
+
+
+def _empty_cache(cfg, b):
+    h, dh = _heads(cfg)
+    z = {"state": jnp.zeros((cfg.n_layers, b, h, dh, dh), jnp.float32),
+         "x_tm": jnp.zeros((cfg.n_layers, b, cfg.d_model), cfg.cdtype),
+         "x_cm": jnp.zeros((cfg.n_layers, b, cfg.d_model), cfg.cdtype)}
+    return z
+
+
+def backbone(params, h, cfg: ModelConfig, cache=None):
+    b = h.shape[0]
+    cache_in = cache if cache is not None else _empty_cache(cfg, b)
+
+    def body(carry, xs):
+        lp, lc = xs
+        out, new_lc = rwkv_block(carry, lp, cfg, lc)
+        return out, new_lc
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache_in))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            lc = jax.tree.map(lambda x: x[i], cache_in)
+            h, nl = body(h, (lp, lc))
+            outs.append(nl)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, (new_cache if cache is not None else None)
+
+
+def logits_fn(params, batch, cfg: ModelConfig):
+    h = embed_tokens(params, batch["tokens"], cfg)
+    h = norm(h, params["ln_in"], cfg)
+    h, _ = backbone(params, h, cfg)
+    return lm_head(params, h, cfg), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = logits_fn(params, batch, cfg)
+    return pa_cross_entropy(logits.astype(jnp.dtype(cfg.loss_dtype)), batch["labels"], cfg.pa,
+                            label_smoothing=cfg.label_smoothing,
+                            where=batch.get("mask"))
+
+
+def cache_meta(cfg: ModelConfig, batch: int, max_len: int):
+    del max_len  # O(1) state — the whole point for long_500k
+    return rwkv_cache_meta(cfg, batch, cfg.n_layers)
+
+
+def prefill_fn(params, batch, cache, cfg: ModelConfig):
+    h = embed_tokens(params, batch["tokens"], cfg)
+    h = norm(h, params["ln_in"], cfg)
+    h, new_cache = backbone(params, h, cfg, cache)
+    return lm_head(params, h[:, -1:], cfg), new_cache
+
+
+def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    del pos  # stateful recurrence — position-free
+    h = embed_tokens(params, token, cfg)
+    h = norm(h, params["ln_in"], cfg)
+    h, new_cache = backbone(params, h, cfg, cache)
+    return lm_head(params, h, cfg), new_cache

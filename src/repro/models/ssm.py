@@ -1,0 +1,143 @@
+"""Selective SSM (Mamba-style) branch — used by the Hymba hybrid arch.
+
+Discretisation uses exp(); in full-PA mode that is ``paexp`` and every
+elementwise product is a PAM, so the recurrence itself is multiplication-
+free. The time recurrence is a ``lax.scan``; decode carries (ssm_state,
+conv_state) in the cache.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_softplus, pa_silu, paexp
+from .common import ModelConfig, meta, linear, emul
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, s.state_size, s.conv_size
+
+
+def ssm_meta(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, dt_rank, n, k = _dims(cfg)
+    return {
+        "w_in": meta((d, 2 * d_in), ("embed", "heads"), cfg=cfg),
+        "conv_w": meta((k, d_in), (None, "heads"), init="normal", scale=1.0, cfg=cfg),
+        "conv_b": meta((d_in,), ("heads",), init="zeros", cfg=cfg),
+        "w_x": meta((d_in, dt_rank + 2 * n), ("heads", None), cfg=cfg),
+        "w_dt": meta((dt_rank, d_in), (None, "heads"), cfg=cfg),
+        "dt_bias": meta((d_in,), ("heads",), init="zeros", cfg=cfg),
+        "a_log": meta((d_in, n), ("heads", "ssm"), init="zeros", cfg=cfg),
+        "d_skip": meta((d_in,), ("heads",), init="ones", cfg=cfg),
+        "w_out": meta((d_in, d), ("heads", "embed"), cfg=cfg),
+    }
+
+
+def ssm_cache_meta(cfg: ModelConfig, batch: int, layers: int):
+    d_in, _, n, k = _dims(cfg)
+    return {
+        "ssm": meta((layers, batch, d_in, n),
+                    ("layers", "cache_batch", "heads", None),
+                    dtype=jnp.float32, init="zeros", cfg=cfg),
+        "conv": meta((layers, batch, k - 1, d_in),
+                     ("layers", "cache_batch", None, "heads"),
+                     dtype=cfg.cdtype, init="zeros", cfg=cfg),
+    }
+
+
+def _conv1d(x, conv_state, w, b, cfg: ModelConfig):
+    """Depthwise causal conv over time as a sum of shifted PAM products.
+    x: (B,S,D); conv_state: (B,K-1,D) history. Returns (y, new_state)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B,S+K-1,D)
+    s = x.shape[1]
+    y = b.astype(x.dtype)[None, None]
+    y = sum(emul(xp[:, j:j + s], w[j][None, None].astype(x.dtype), cfg) for j in range(k)) + y
+    return y, xp[:, -(k - 1):]
+
+
+def ssm_branch(h, p, cfg: ModelConfig, layer_cache=None):
+    """h: (B,S,d) -> (out (B,S,d), new_cache or None)."""
+    b, s, d = h.shape
+    d_in, dt_rank, n, k = _dims(cfg)
+    xz = linear(h, p["w_in"], cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = constrain(x, ("batch", None, "act_heads"))
+
+    conv_state = (layer_cache["conv"] if layer_cache is not None
+                  else jnp.zeros((b, k - 1, d_in), x.dtype))
+    x, new_conv = _conv1d(x, conv_state, p["conv_w"], p["conv_b"], cfg)
+    x = pa_silu(x, cfg.pa)
+
+    proj = linear(x, p["w_x"], cfg)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = pa_softplus(linear(dt, p["w_dt"], cfg) + p["dt_bias"].astype(h.dtype), cfg.pa)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # (d_in, n)
+
+    dt_f = dt.astype(jnp.float32)
+    s0 = (layer_cache["ssm"] if layer_cache is not None
+          else jnp.zeros((b, d_in, n), jnp.float32))
+
+    def _exp(u):
+        if cfg.pa.nonlin_is_pa and cfg.pa.impl != "hw":
+            return paexp(u, cfg.pa.deriv)
+        return jnp.exp(u)
+
+    if cfg.ssm_fused_scan:
+        # §Perf: discretise per-step inside the scan — the (B,S,d_in,n)
+        # abar/bx tensors are never materialised in HBM (working set is
+        # (B,d_in,n) per step, loop-fused on TPU).
+        def step(state, xs):
+            dt_t, x_t, b_t, c_t = xs          # (B,din),(B,din),(B,n),(B,n)
+            ab_t = _exp(emul(dt_t[..., None], a[None], cfg))
+            bx_t = emul(emul(dt_t, x_t, cfg)[..., None], b_t[:, None, :], cfg)
+            state = emul(ab_t, state, cfg) + bx_t
+            y_t = jnp.sum(emul(state, c_t[:, None, :], cfg), axis=-1)
+            return state, y_t
+
+        xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                   for t in (dt_f, x.astype(jnp.float32), bmat, cmat))
+        tc = cfg.ssm_time_chunk
+        if tc and s > tc and s % tc == 0:
+            # §Perf: chunked selective scan — only chunk-boundary states are
+            # saved for backward; each chunk's per-step residuals are
+            # rematerialised. Residual memory S/tc smaller.
+            def chunk_body(state, xs_c):
+                return jax.lax.scan(step, state, xs_c)
+            chunk_body = jax.checkpoint(chunk_body)
+            xs_ch = tuple(t.reshape((s // tc, tc) + t.shape[1:]) for t in xs)
+            state, ys = jax.lax.scan(chunk_body, s0, xs_ch)
+            ys = ys.reshape((s,) + ys.shape[2:])
+        else:
+            state, ys = jax.lax.scan(step, s0, xs)
+    else:
+        # baseline: discretize up front (abar/bx materialised over S)
+        abar = _exp(emul(dt_f[..., None], a[None, None], cfg))     # (B,S,d_in,n)
+        bx = emul(emul(dt_f, x.astype(jnp.float32), cfg)[..., None],
+                  bmat.astype(jnp.float32)[..., None, :], cfg)     # (B,S,d_in,n)
+
+        def step(state, xs):
+            ab_t, bx_t, c_t = xs
+            state = emul(ab_t, state, cfg) + bx_t
+            y_t = jnp.sum(emul(state, c_t[:, None, :], cfg), axis=-1)
+            return state, y_t
+
+        xs = (jnp.moveaxis(abar, 1, 0), jnp.moveaxis(bx, 1, 0),
+              jnp.moveaxis(cmat.astype(jnp.float32), 1, 0))
+        state, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(h.dtype)                    # (B,S,d_in)
+    y = y + emul(x, p["d_skip"].astype(x.dtype)[None, None], cfg)
+    y = emul(y, pa_silu(z, cfg.pa), cfg)
+    out = linear(y, p["w_out"], cfg)
+    new_cache = None
+    if layer_cache is not None:
+        new_cache = {"ssm": state, "conv": new_conv.astype(layer_cache["conv"].dtype)}
+    return constrain(out, ("batch", None, "act_embed")), new_cache

@@ -1,0 +1,184 @@
+"""Decoder-only transformer LM (llama3.2 / olmo / smollm / danube / MoE archs).
+
+Layers are stacked along a leading dim and iterated with ``lax.scan`` (small
+HLO, fast multi-pod compiles, XLA-overlappable TP collectives); the scan body
+is optionally rematerialised. KV caches thread through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_matmul, pa_cross_entropy
+from .common import (ModelConfig, meta, stack_layers, norm, norm_meta, linear)
+from .attention import attn_meta, self_attention, init_cache_meta
+from .mlp import mlp_meta, mlp
+from .moe import moe_meta, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Parameter structure.
+# ---------------------------------------------------------------------------
+
+def block_meta(cfg: ModelConfig):
+    p = {"attn_norm": norm_meta(cfg), "attn": attn_meta(cfg),
+         "mlp_norm": norm_meta(cfg)}
+    if cfg.moe is not None:
+        p["moe"] = moe_meta(cfg)
+    else:
+        p["mlp"] = mlp_meta(cfg)
+    return p
+
+
+def lm_meta(cfg: ModelConfig):
+    p = {
+        "embed": meta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="embed", cfg=cfg),
+        "layers": stack_layers(block_meta(cfg), cfg.n_layers),
+        "final_norm": norm_meta(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = meta((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg=cfg)
+    return p
+
+
+def global_flags(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer bool: True where the layer attends globally (no SWA)."""
+    if cfg.sliding_window is None:
+        return np.ones((cfg.n_layers,), bool)
+    f = np.zeros((cfg.n_layers,), bool)
+    for i in cfg.global_layers:
+        f[i] = True
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+
+def block_apply(h, lp, cfg: ModelConfig, positions, is_global, layer_cache):
+    a, new_cache = self_attention(norm(h, lp["attn_norm"], cfg), lp["attn"], cfg,
+                                  positions=positions, is_global=is_global,
+                                  layer_cache=layer_cache)
+    h = h + a
+    m = norm(h, lp["mlp_norm"], cfg)
+    if cfg.moe is not None:
+        f, aux = moe_ffn(m, lp["moe"], cfg)
+    else:
+        f, aux = mlp(m, lp["mlp"], cfg), jnp.float32(0)
+    h = h + f
+    return constrain(h, ("batch", None, "act_embed")), new_cache, aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def backbone(params, h, cfg: ModelConfig, positions, cache=None):
+    """Scan h through all layers. Returns (h, new_cache, aux_sum)."""
+    flags = jnp.asarray(global_flags(cfg))
+    stacked = params["layers"]
+
+    if cache is None:
+        def body(carry, xs):
+            lp, flag = xs
+            out, _, aux = block_apply(carry, lp, cfg, positions, flag, None)
+            return out, aux
+        body = _maybe_remat(body, cfg)
+        if cfg.scan_layers:
+            h, auxs = jax.lax.scan(body, h, (stacked, flags))
+        else:
+            auxs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda x: x[i], stacked)
+                h, aux = body(h, (lp, flags[i]))
+                auxs.append(aux)
+            auxs = jnp.stack(auxs)
+        return h, None, jnp.sum(auxs)
+
+    def body_c(carry, xs):
+        lp, lc, flag = xs
+        out, new_lc, aux = block_apply(carry, lp, cfg, positions, flag, lc)
+        return out, (new_lc, aux)
+    body_c = _maybe_remat(body_c, cfg)
+    if cfg.scan_layers:
+        h, (new_cache, auxs) = jax.lax.scan(body_c, h, (stacked, cache, flags))
+    else:
+        new_layers, auxs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], stacked)
+            lc = jax.tree.map(lambda x: x[i], cache)
+            h, (nl, aux) = body_c(h, (lp, lc, flags[i]))
+            new_layers.append(nl)
+            auxs.append(aux)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+        auxs = jnp.stack(auxs)
+    return h, new_cache, jnp.sum(auxs)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    return constrain(h, ("batch", None, "act_embed"))
+
+
+def lm_head(params, h, cfg: ModelConfig):
+    h = norm(h, params["final_norm"], cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = pa_matmul(h, w.astype(h.dtype), cfg.pa)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Entry points.
+# ---------------------------------------------------------------------------
+
+def logits_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = embed_tokens(params, tokens, cfg)
+    h, _, aux = backbone(params, h, cfg, positions)
+    return lm_head(params, h, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = logits_fn(params, batch, cfg)
+    loss = pa_cross_entropy(logits.astype(jnp.dtype(cfg.loss_dtype)), batch["labels"], cfg.pa,
+                            label_smoothing=cfg.label_smoothing,
+                            where=batch.get("mask"))
+    return loss + aux.astype(loss.dtype)
+
+
+def cache_meta(cfg: ModelConfig, batch: int, max_len: int):
+    return init_cache_meta(cfg, batch, max_len, cfg.n_layers)
+
+
+def prefill_fn(params, batch, cache, cfg: ModelConfig):
+    """Run the prompt through the model, filling `cache`. Returns logits of
+    the final position and the filled cache."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    h = embed_tokens(params, tokens, cfg)
+    h, new_cache, _ = backbone(params, h, cfg, positions, cache)
+    logits = lm_head(params, h[:, -1:], cfg)
+    return logits, new_cache
+
+
+def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    """One decode step: token (B,1) at scalar position `pos`."""
+    b = token.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+    h = embed_tokens(params, token, cfg)
+    h, new_cache, _ = backbone(params, h, cfg, positions, cache)
+    logits = lm_head(params, h, cfg)
+    return logits, new_cache

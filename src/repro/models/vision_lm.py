@@ -1,0 +1,161 @@
+"""Llama-3.2-Vision-style VLM backbone: a decoder LM with gated cross-attn
+layers interleaved every ``cross_attn_every`` layers (100L = 80 self + 20
+cross for the 90B config). The vision frontend is a stub per the assignment:
+``input_specs()`` provides precomputed patch embeddings
+(B, num_image_tokens, d_model).
+
+Layers scan over "superblocks" of (cross_attn_every-1) self layers + 1 cross
+layer; self layers within a superblock are a static inner loop over the
+stacked sub-dim so the whole model remains one compact scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_cross_entropy
+from .common import ModelConfig, meta, stack_layers, norm, norm_meta
+from .attention import attn_meta, self_attention, cross_attention, init_cache_meta
+from .mlp import mlp_meta, mlp
+from .transformer import embed_tokens, lm_head, block_meta as self_block_meta
+
+
+def _split(cfg: ModelConfig):
+    every = cfg.cross_attn_every
+    assert every >= 2 and cfg.n_layers % every == 0
+    n_blocks = cfg.n_layers // every
+    return n_blocks, every - 1  # (superblocks, self layers per superblock)
+
+
+def xblock_meta(cfg: ModelConfig):
+    return {"xattn_norm": norm_meta(cfg), "xattn": attn_meta(cfg, cross=True),
+            "mlp_norm": norm_meta(cfg), "mlp": mlp_meta(cfg)}
+
+
+def vision_meta(cfg: ModelConfig):
+    n_blocks, n_self = _split(cfg)
+    return {
+        "embed": meta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="embed", cfg=cfg),
+        "blocks": {
+            "selfs": stack_layers(stack_layers(self_block_meta(cfg), n_self), n_blocks),
+            "cross": stack_layers(xblock_meta(cfg), n_blocks),
+        },
+        "final_norm": norm_meta(cfg),
+        "head": meta((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg=cfg),
+    }
+
+
+def cache_meta(cfg: ModelConfig, batch: int, max_len: int):
+    n_blocks, n_self = _split(cfg)
+    c = init_cache_meta(cfg, batch, max_len, n_blocks)
+    # nest sub-layer dim: (n_blocks, n_self, ...)
+    c = jax.tree.map(
+        lambda m: meta((n_blocks, n_self) + m.shape[1:],
+                       ("layers", None) + m.axes[1:], dtype=m.dtype,
+                       init="zeros", cfg=cfg),
+        c, is_leaf=lambda x: hasattr(x, "axes"))
+    # cached image embeddings feeding the cross-attn layers during decode
+    c["img"] = meta((batch, cfg.num_image_tokens, cfg.d_model),
+                    ("cache_batch", None, "act_embed"),
+                    dtype=cfg.cdtype, init="zeros", cfg=cfg)
+    return c
+
+
+def _superblock(h, bp, cfg, positions, img, bc):
+    from .transformer import block_apply
+    n_self = bp["selfs"]["attn"]["wq"].shape[0]
+    new_subcaches = []
+    for j in range(n_self):
+        lp = jax.tree.map(lambda x: x[j], bp["selfs"])
+        lc = jax.tree.map(lambda x: x[j], bc) if bc is not None else None
+        h, new_lc, _ = block_apply(h, lp, cfg, positions, jnp.bool_(True), lc)
+        new_subcaches.append(new_lc)
+    xp = bp["cross"]
+    xa = cross_attention(norm(h, xp["xattn_norm"], cfg), img, xp["xattn"], cfg,
+                         gated=True)
+    h = h + xa
+    m = mlp(norm(h, xp["mlp_norm"], cfg), xp["mlp"], cfg)
+    h = constrain(h + m, ("batch", None, "act_embed"))
+    nc = None
+    if bc is not None:
+        nc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_subcaches)
+    return h, nc
+
+
+def backbone(params, h, cfg: ModelConfig, positions, img, cache=None):
+    n_blocks, _ = _split(cfg)
+    if cache is None:
+        def body(carry, bp):
+            out, _ = _superblock(carry, bp, cfg, positions, img, None)
+            return out, ()
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, params["blocks"])
+        else:
+            for i in range(n_blocks):
+                h, _ = body(h, jax.tree.map(lambda x: x[i], params["blocks"]))
+        return h, None
+
+    def body_c(carry, xs):
+        bp, bc = xs
+        return _superblock(carry, bp, cfg, positions, img, bc)
+    if cfg.remat != "none":
+        body_c = jax.checkpoint(body_c)
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body_c, h, (params["blocks"], cache))
+    else:
+        outs = []
+        for i in range(n_blocks):
+            bp = jax.tree.map(lambda x: x[i], params["blocks"])
+            bc = jax.tree.map(lambda x: x[i], cache)
+            h, nc = body_c(h, (bp, bc))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, new_cache
+
+
+def logits_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    img = constrain(batch["img_embed"].astype(cfg.cdtype), ("batch", None, "act_embed"))
+    h = embed_tokens(params, tokens, cfg)
+    h, _ = backbone(params, h, cfg, positions, img)
+    return lm_head(params, h, cfg), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = logits_fn(params, batch, cfg)
+    return pa_cross_entropy(logits.astype(jnp.dtype(cfg.loss_dtype)), batch["labels"], cfg.pa,
+                            label_smoothing=cfg.label_smoothing,
+                            where=batch.get("mask"))
+
+
+def prefill_fn(params, batch, cache, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    img = constrain(batch["img_embed"].astype(cfg.cdtype), ("batch", None, "act_embed"))
+    kv = {k: cache[k] for k in ("k", "v", "kpos")}
+    h = embed_tokens(params, tokens, cfg)
+    h, new_kv = backbone(params, h, cfg, positions, img, kv)
+    logits = lm_head(params, h[:, -1:], cfg)
+    new_cache = dict(new_kv)
+    new_cache["img"] = img.astype(cache["img"].dtype)
+    return logits, new_cache
+
+
+def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    b = token.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+    img = cache["img"].astype(cfg.cdtype)
+    kv = {k: cache[k] for k in ("k", "v", "kpos")}
+    h = embed_tokens(params, token, cfg)
+    h, new_kv = backbone(params, h, cfg, positions, img, kv)
+    logits = lm_head(params, h, cfg)
+    new_cache = dict(new_kv)
+    new_cache["img"] = cache["img"]
+    return logits, new_cache

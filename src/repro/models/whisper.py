@@ -1,0 +1,189 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+Per the assignment, the conv frontend is stubbed: ``input_specs()`` provides
+precomputed frame embeddings (B, enc_seq_len, d) — 1500 frames = 30 s.
+Encoder: bidirectional self-attn + GELU MLP, sinusoidal positions.
+Decoder: causal self-attn + cross-attn + MLP, learned positions.
+The LM shape's ``seq_len`` applies to the decoder (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+from repro.core import pa_cross_entropy
+from .common import ModelConfig, meta, stack_layers, norm, norm_meta
+from .attention import (attn_meta, self_attention, cross_attention,
+                        init_cache_meta, _sdpa)
+from .mlp import mlp_meta, mlp
+from .transformer import lm_head
+
+
+def enc_block_meta(cfg):
+    return {"attn_norm": norm_meta(cfg), "attn": attn_meta(cfg),
+            "mlp_norm": norm_meta(cfg), "mlp": mlp_meta(cfg)}
+
+
+def dec_block_meta(cfg):
+    return {"attn_norm": norm_meta(cfg), "attn": attn_meta(cfg),
+            "xattn_norm": norm_meta(cfg), "xattn": attn_meta(cfg, cross=True),
+            "mlp_norm": norm_meta(cfg), "mlp": mlp_meta(cfg)}
+
+
+def whisper_meta(cfg: ModelConfig):
+    return {
+        "embed": meta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="embed", cfg=cfg),
+        "dec_pos": meta((cfg.max_seq_len, cfg.d_model), (None, "embed"),
+                        init="embed", cfg=cfg),
+        "enc_layers": stack_layers(enc_block_meta(cfg), cfg.n_enc_layers),
+        "enc_norm": norm_meta(cfg),
+        "layers": stack_layers(dec_block_meta(cfg), cfg.n_layers),
+        "final_norm": norm_meta(cfg),
+    }
+
+
+def _sinusoid(length, d, dtype):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], -1), dtype)
+
+
+def encode_input(params, batch, cfg: ModelConfig):
+    """Stub modality frontend: precomputed frame embeddings ("enc_embed"),
+    or token ids ("enc_tokens") for text enc-dec (the paper's IWSLT model)."""
+    if "enc_embed" in batch:
+        return batch["enc_embed"]
+    return jnp.take(params["embed"], batch["enc_tokens"], axis=0)
+
+
+def encode(params, enc_embed, cfg: ModelConfig):
+    b, t, _ = enc_embed.shape
+    h = enc_embed.astype(cfg.cdtype) + _sinusoid(t, cfg.d_model, cfg.cdtype)[None]
+    h = constrain(h, ("batch", None, "act_embed"))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(carry, lp):
+        x = norm(carry, lp["attn_norm"], cfg)
+        # bidirectional: huge window + all positions visible
+        a, _ = self_attention(x, lp["attn"], cfg, positions=positions,
+                              window=None, is_global=jnp.bool_(True))
+        carry = carry + a
+        m = mlp(norm(carry, lp["mlp_norm"], cfg), lp["mlp"], cfg)
+        return constrain(carry + m, ("batch", None, "act_embed")), ()
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    else:
+        for i in range(cfg.n_enc_layers):
+            h, _ = body(h, jax.tree.map(lambda x: x[i], params["enc_layers"]))
+    return norm(h, params["enc_norm"], cfg)
+
+
+def _embed_dec(params, tokens, start_pos, cfg):
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], start_pos, s, axis=0).astype(cfg.cdtype)
+    positions = start_pos + jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return constrain(h + pos_emb[None], ("batch", None, "act_embed")), positions
+
+
+def decode_stack(params, h, enc_out, cfg: ModelConfig, positions, cache=None):
+    def blk(carry, lp, lc):
+        x = norm(carry, lp["attn_norm"], cfg)
+        a, new_lc = self_attention(x, lp["attn"], cfg, positions=positions,
+                                   layer_cache=lc)
+        carry = carry + a
+        xa = cross_attention(norm(carry, lp["xattn_norm"], cfg), enc_out,
+                             lp["xattn"], cfg)
+        carry = carry + xa
+        m = mlp(norm(carry, lp["mlp_norm"], cfg), lp["mlp"], cfg)
+        return constrain(carry + m, ("batch", None, "act_embed")), new_lc
+
+    if cache is None:
+        def body(carry, lp):
+            out, _ = blk(carry, lp, None)
+            return out, ()
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                h, _ = body(h, jax.tree.map(lambda x: x[i], params["layers"]))
+        return h, None
+
+    def body_c(carry, xs):
+        lp, lc = xs
+        return blk(carry, lp, lc)
+    if cfg.remat != "none":
+        body_c = jax.checkpoint(body_c)
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body_c, h, (params["layers"], cache))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            lc = jax.tree.map(lambda x: x[i], cache)
+            h, nl = body_c(h, (lp, lc))
+            outs.append(nl)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, new_cache
+
+
+def logits_fn(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, encode_input(params, batch, cfg), cfg)
+    h, positions = _embed_dec(params, batch["tokens"], jnp.int32(0), cfg)
+    h, _ = decode_stack(params, h, enc_out, cfg, positions)
+    h = norm(h, params["final_norm"], cfg)
+    from repro.core import pa_matmul
+    logits = pa_matmul(h, params["embed"].T.astype(h.dtype), cfg.pa)
+    return constrain(logits, ("batch", None, "vocab")), jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, _ = logits_fn(params, batch, cfg)
+    return pa_cross_entropy(logits.astype(jnp.dtype(cfg.loss_dtype)), batch["labels"], cfg.pa,
+                            label_smoothing=cfg.label_smoothing,
+                            where=batch.get("mask"))
+
+
+def cache_meta(cfg: ModelConfig, batch: int, max_len: int):
+    c = init_cache_meta(cfg, batch, max_len, cfg.n_layers)
+    # cached encoder output for decode steps
+    c["enc_out"] = meta((batch, cfg.enc_seq_len, cfg.d_model),
+                        ("cache_batch", None, "act_embed"),
+                        dtype=cfg.cdtype, init="zeros", cfg=cfg)
+    return c
+
+
+def prefill_fn(params, batch, cache, cfg: ModelConfig):
+    enc_out = encode(params, encode_input(params, batch, cfg), cfg)
+    h, positions = _embed_dec(params, batch["tokens"], jnp.int32(0), cfg)
+    kv_cache = {k: cache[k] for k in ("k", "v", "kpos")}
+    h, new_kv = decode_stack(params, h, enc_out, cfg, positions, kv_cache)
+    h = norm(h, params["final_norm"], cfg)
+    from repro.core import pa_matmul
+    logits = pa_matmul(h[:, -1:], params["embed"].T.astype(h.dtype), cfg.pa)
+    new_cache = dict(new_kv)
+    new_cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+    return logits, new_cache
+
+
+def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    enc_out = cache["enc_out"].astype(cfg.cdtype)
+    h, positions = _embed_dec(params, token, jnp.asarray(pos, jnp.int32), cfg)
+    kv_cache = {k: cache[k] for k in ("k", "v", "kpos")}
+    h, new_kv = decode_stack(params, h, enc_out, cfg, positions, kv_cache)
+    h = norm(h, params["final_norm"], cfg)
+    from repro.core import pa_matmul
+    logits = pa_matmul(h, params["embed"].T.astype(h.dtype), cfg.pa)
+    new_cache = dict(new_kv)
+    new_cache["enc_out"] = cache["enc_out"]
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from .adamw import OptConfig, init_opt_state, adamw_update, lr_at, opt_state_meta
+
+__all__ = ["OptConfig", "init_opt_state", "adamw_update", "lr_at",
+           "opt_state_meta"]

@@ -1,0 +1,143 @@
+"""AdamW — standard and fully piecewise-affine (paper §2.6, Table 3 last row).
+
+The PA variant replaces every multiplication, division and square root in the
+update rule (including bias correction, which uses b^t = paexp2(t ·̂ palog2 b))
+with PA ops, so together with PA forward/backward passes training is fully
+multiplication-free. Moments can optionally be stored in bfloat16
+(mantissa-truncated) — a PAM-friendly memory optimisation (Appendix D shows
+>=4 mantissa bits suffice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig
+from repro.core.pam import (pam_value, padiv_value, paexp2_value,
+                            palog2_value, pasqrt as _pasqrt)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.98
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"     # "bfloat16" halves optimizer memory
+
+
+def lr_at(step, cfg: OptConfig):
+    """Scalar learning rate (one O(1) scalar computation per step)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1 - t)
+    else:
+        decay = 1.0
+    return cfg.peak_lr * warm * decay
+
+
+def init_opt_state(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_meta(meta_tree, cfg: OptConfig):
+    """ParamMeta tree for the optimizer state (for sharding/dry-run): moments
+    are sharded exactly like their parameters."""
+    from repro.models.common import ParamMeta
+    mdt = jnp.dtype(cfg.moment_dtype)
+    mom = jax.tree.map(
+        lambda m: ParamMeta(m.shape, m.axes, mdt, "zeros", 1.0),
+        meta_tree, is_leaf=lambda x: hasattr(x, "axes"))
+    return {"m": mom, "v": jax.tree.map(lambda m: m, mom,
+                                        is_leaf=lambda x: hasattr(x, "axes")),
+            "step": ParamMeta((), (), jnp.int32, "zeros", 1.0)}
+
+
+# ---------------------------------------------------------------------------
+# Standard update.
+# ---------------------------------------------------------------------------
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig,
+                 pa: Optional[PAConfig] = None, lr=None):
+    """One AdamW step. If ``pa`` is PA-active, the whole update is computed
+    with PA ops (value-level: the optimizer isn't differentiated through)."""
+    use_pa = pa is not None and pa.optimizer_is_pa and pa.impl != "hw"
+    step = state["step"] + 1
+    lr = lr_at(step, cfg) if lr is None else jnp.asarray(lr, jnp.float32)
+
+    if cfg.grad_clip > 0:
+        if use_pa:
+            gn = _pa_global_norm(grads)
+            scale = padiv_value(np.float32(cfg.grad_clip),
+                                jnp.maximum(gn, np.float32(cfg.grad_clip)))
+            grads = jax.tree.map(lambda g: pam_value(g.astype(jnp.float32), scale), grads)
+        else:
+            gn = _global_norm(grads)
+            scale = cfg.grad_clip / jnp.maximum(gn, cfg.grad_clip)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        gn = _global_norm(grads)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    t = step.astype(jnp.float32)
+    if use_pa:
+        bc1 = 1.0 - paexp2_value(pam_value(t, palog2_value(np.float32(cfg.b1))))
+        bc2 = 1.0 - paexp2_value(pam_value(t, palog2_value(np.float32(cfg.b2))))
+    else:
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        pf, m32, v32 = (x.astype(jnp.float32) for x in (p, m, v))
+        if use_pa:
+            m_new = pam_value(np.float32(cfg.b1), m32) + pam_value(np.float32(1 - cfg.b1), g)
+            v_new = pam_value(np.float32(cfg.b2), v32) + pam_value(np.float32(1 - cfg.b2),
+                                                                   pam_value(g, g))
+            mhat = padiv_value(m_new, bc1)
+            vhat = padiv_value(v_new, bc2)
+            upd_ = padiv_value(mhat, _pasqrt(vhat) + np.float32(cfg.eps))
+            new_p = pf - pam_value(lr, upd_) - pam_value(pam_value(lr, np.float32(cfg.weight_decay)), pf)
+        else:
+            m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+            upd_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+            new_p = pf - lr * upd_ - lr * cfg.weight_decay * pf
+        return (new_p.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def _pa_global_norm(grads):
+    sq = sum(jnp.sum(pam_value(g.astype(jnp.float32), g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    return _pasqrt(sq)

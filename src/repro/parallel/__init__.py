@@ -1,0 +1,7 @@
+from .sharding import (AxisRules, DEFAULT_RULES, FSDP_RULES, spec_for,
+                       named_sharding, batch_axes, constrain, tree_pspecs,
+                       tree_shardings)
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "FSDP_RULES", "spec_for",
+           "named_sharding", "batch_axes", "constrain", "tree_pspecs",
+           "tree_shardings"]

@@ -1,0 +1,155 @@
+"""Sharding rule engine: logical axis names -> mesh PartitionSpecs.
+
+Every parameter / activation dimension in the framework carries a *logical*
+axis name ("embed", "heads", "expert", ...). An ``AxisRules`` table maps each
+logical name to an ordered list of candidate physical mesh axes; ``spec_for``
+resolves them with two safety properties that make the same model definition
+valid on any mesh shape (elastic scaling):
+
+  * divisibility — a candidate axis is used only if it divides the dim size;
+  * uniqueness   — a mesh axis is consumed at most once per tensor, with
+    higher-priority logical axes resolved first (e.g. "kv" heads grab the
+    model axis before the cache "cache_seq" dim falls back to it).
+
+This is how DP ("batch" -> pod+data), TP ("heads"/"mlp"/"vocab" -> model),
+EP ("expert" -> model), FSDP ("embed" -> data) and KV-cache SP
+("cache_seq" -> model) are all expressed uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical-axis -> ordered candidate physical axes (+ priority)."""
+    table: Mapping[str, Sequence]          # name -> list of str|tuple[str,...]
+    priority: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    def candidates(self, name: Optional[str]):
+        if name is None:
+            return ()
+        return tuple(self.table.get(name, ()))
+
+    def prio(self, name: Optional[str]) -> int:
+        if name is None:
+            return 100
+        return self.priority.get(name, 50)
+
+    def with_overrides(self, **kw) -> "AxisRules":
+        t = dict(self.table)
+        t.update(kw)
+        return AxisRules(t, dict(self.priority))
+
+
+_BATCH = [("pod", "data"), ("data",), ()]
+
+DEFAULT_RULES = AxisRules(
+    table={
+        # activations
+        "batch": _BATCH,
+        "seq": [],
+        "act_embed": [],
+        "act_heads": ["model"],
+        "act_seq": ["model"],
+        "act_mlp": ["model"],
+        # parameters
+        "embed": [],                  # FSDP variant shards this over data
+        "vocab": ["model"],
+        "heads": ["model"],
+        "kv": ["model"],
+        "mlp": ["model"],
+        "expert": ["model"],
+        "expert_mlp": [],
+        "ssm": ["model"],
+        "layers": [],
+        # kv-cache
+        "cache_batch": _BATCH,
+        "cache_seq": ["model"],
+        "cache_kv": ["model"],
+    },
+    priority={"cache_kv": 1, "kv": 1, "heads": 1, "expert": 1, "vocab": 1,
+              "mlp": 2, "cache_seq": 5, "batch": 1, "cache_batch": 1,
+              "act_seq": 30},
+)
+
+# ZeRO-3-style: weight "embed" dims sharded over the data axis (gathered
+# per-layer inside the scan). Used for the >=90B configs.
+FSDP_RULES = DEFAULT_RULES.with_overrides(embed=[("data",)], expert_mlp=[("data",)])
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], mesh: Mesh,
+             rules: AxisRules = DEFAULT_RULES) -> P:
+    """Resolve logical axes to a PartitionSpec for this mesh (see module doc)."""
+    assert len(shape) == len(axes), (shape, axes)
+    result = [None] * len(shape)
+    used: set = set()
+    order = sorted(range(len(shape)), key=lambda i: rules.prio(axes[i]))
+    for i in order:
+        for cand in rules.candidates(axes[i]):
+            if isinstance(cand, str):
+                cand = (cand,)
+            cand = tuple(a for a in cand if a in mesh.axis_names)
+            if not cand:
+                if not rules.candidates(axes[i]):
+                    break
+                continue
+            if any(a in used for a in cand):
+                continue
+            if shape[i] % _axsize(mesh, cand) != 0:
+                continue
+            result[i] = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+    return P(*result)
+
+
+def named_sharding(mesh: Mesh, shape, axes, rules: AxisRules = DEFAULT_RULES):
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def constrain(x, axes, mesh: Optional[Mesh] = None,
+              rules: AxisRules = DEFAULT_RULES):
+    """with_sharding_constraint by logical axes; no-op outside a mesh ctx."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    s = named_sharding(mesh, x.shape, axes, rules)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def _current_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def tree_pspecs(meta_tree, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """ParamMeta tree -> PartitionSpec tree (see models.common.ParamMeta)."""
+    return jax.tree.map(
+        lambda m: spec_for(m.shape, m.axes, mesh, rules),
+        meta_tree, is_leaf=lambda m: hasattr(m, "axes"))
+
+
+def tree_shardings(meta_tree, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    return jax.tree.map(
+        lambda m: NamedSharding(mesh, spec_for(m.shape, m.axes, mesh, rules)),
+        meta_tree, is_leaf=lambda m: hasattr(m, "axes"))

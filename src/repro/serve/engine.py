@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + step-synchronous decode.
+
+The decode step is a single jitted function reused across steps (cache
+donated, so serving is allocation-stable). Sampling is greedy or
+temperature; temperature scaling is a PA op in full-PA mode so even the
+sampler is multiplication-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0        # 0 -> greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model, self.params, self.cfg = model, params, cfg
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+        self._prefill = jax.jit(model.prefill)
+
+    def _sample(self, logits, key):
+        logits = logits[:, -1].astype(jnp.float32)
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        pa = self.model.cfg.pa
+        if pa.nonlin_is_pa and pa.impl != "hw":
+            from repro.core import padiv
+            logits = padiv(logits, np.float32(self.cfg.temperature))
+        else:
+            logits = logits / self.cfg.temperature
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32):
+        """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
+        b, s = prompts.shape
+        cache = self.model.init_cache(b, self.cfg.max_len)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.model.cfg.family == "encdec":
+            batch["enc_embed"] = jnp.zeros(
+                (b, self.model.cfg.enc_seq_len, self.model.cfg.d_model),
+                self.model.cfg.cdtype)
+        if self.model.cfg.family == "vision_lm":
+            batch["img_embed"] = jnp.zeros(
+                (b, self.model.cfg.num_image_tokens, self.model.cfg.d_model),
+                self.model.cfg.cdtype)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out = []
+        tok = self._sample(logits, key)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok[:, None], s + i)
+            tok = self._sample(logits, sub)
+        return np.stack([np.asarray(t) for t in out], axis=1)

@@ -1,0 +1,5 @@
+from .step import TrainConfig, make_train_step, make_eval_step
+from .loop import LoopConfig, train
+
+__all__ = ["TrainConfig", "make_train_step", "make_eval_step", "LoopConfig",
+           "train"]

@@ -1,0 +1,76 @@
+"""Train-step factory: loss -> grads -> (optionally compressed) -> AdamW.
+
+Supports gradient accumulation over microbatches (a lax.scan, so the HLO
+stays compact at any accumulation depth) and mantissa-truncation gradient
+compression for the cross-pod (DCN) all-reduce — a PAM-native trick: the
+paper's Appendix D shows >=4 mantissa bits suffice, so shaving gradient
+mantissas before the slow inter-pod reduce is numerically in-distribution
+for PA training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig
+from repro.core.floatbits import mantissa_round
+from repro.models.registry import Model
+from repro.optim import OptConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    grad_compress_bits: Optional[int] = None    # e.g. 7 (bf16-equivalent)
+
+
+def _split_micro(batch, n):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    train_cfg: TrainConfig = TrainConfig()):
+    pa: PAConfig = model.cfg.pa
+
+    def train_step(params, opt_state, batch):
+        if train_cfg.microbatches > 1:
+            micro = _split_micro(batch, train_cfg.microbatches)
+
+            def acc(carry, mb):
+                loss_sum, gsum = carry
+                loss, g = jax.value_and_grad(model.loss)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return (loss_sum + loss, gsum), ()
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), micro)
+            inv = 1.0 / train_cfg.microbatches
+            loss = loss_sum * inv
+            grads = jax.tree.map(lambda g: g * inv, gsum)
+        else:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+
+        if train_cfg.grad_compress_bits is not None:
+            grads = jax.tree.map(
+                lambda g: mantissa_round(g.astype(jnp.float32),
+                                         train_cfg.grad_compress_bits), grads)
+
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg, pa=pa)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step

@@ -1,0 +1,97 @@
+"""Paper Table 1: exact and approximate derivative implementations."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (pam, padiv, paexp2, palog2, pam_value,
+                        pam_exact_dfactor, padiv_exact_dfactor)
+from repro.core import floatbits as fb
+
+
+def g(f, x):
+    return jax.grad(f)(jnp.float32(x))
+
+
+class TestPamDerivs:
+    def test_approx_is_other_operand_pam(self):
+        # d/dA [A pam B] ~ B (evaluated via PAM against the cotangent)
+        for a, b in [(1.3, 2.7), (-0.4, 3.3), (5.0, -0.125)]:
+            da = float(g(lambda x: pam(x, jnp.float32(b), "approx"), a))
+            assert da == float(pam_value(jnp.float32(b), jnp.float32(1.0)))
+
+    def test_exact_is_signed_power_of_two(self):
+        for a, b in [(1.3, 2.7), (-0.4, 3.3), (5.0, -0.125), (1.5, 1.5)]:
+            da = float(g(lambda x: pam(x, jnp.float32(b), "exact"), a))
+            assert da != 0
+            assert bool(fb.is_pow2(jnp.float32(abs(da))))
+            assert np.sign(da) == np.sign(b)
+
+    def test_exact_matches_finite_difference_within_segment(self):
+        # inside one affine segment the exact derivative IS the true slope
+        a, b = 1.3, 2.7
+        eps = 1e-3
+        f = lambda x: float(pam_value(jnp.float32(x), jnp.float32(b)))
+        fd = (f(a + eps) - f(a - eps)) / (2 * eps)
+        da = float(g(lambda x: pam(x, jnp.float32(b), "exact"), a))
+        np.testing.assert_allclose(da, fd, rtol=1e-3)
+
+    def test_exact_dfactor_formula(self):
+        # 2^(E_B + carry): a=1.5 (M=.5), b=3.0 (E=1, M=.5) -> carry=1 -> 4
+        f = pam_exact_dfactor(jnp.float32(1.5), jnp.float32(3.0))
+        assert float(f) == 4.0
+        # no carry: a=1.0 (M=0), b=3.0 -> 2^1 = 2
+        f = pam_exact_dfactor(jnp.float32(1.0), jnp.float32(3.0))
+        assert float(f) == 2.0
+
+
+class TestPadivDerivs:
+    def test_exact_matches_finite_difference_within_segment(self):
+        a, b = 1.3, 2.7
+        eps = 1e-3
+        from repro.core import padiv_value
+        f = lambda x: float(padiv_value(jnp.float32(x), jnp.float32(b)))
+        fd = (f(a + eps) - f(a - eps)) / (2 * eps)
+        da = float(g(lambda x: padiv(x, jnp.float32(b), "exact"), a))
+        np.testing.assert_allclose(da, fd, rtol=1e-3)
+
+    def test_dfactor_is_pow2(self):
+        f = padiv_exact_dfactor(jnp.float32(1.3), jnp.float32(2.7))
+        assert bool(fb.is_pow2(jnp.abs(f)))
+
+
+class TestExpLogDerivs:
+    def test_paexp2_exact_is_segment_slope(self):
+        from repro.core import paexp2_value
+        for a in [0.3, 1.7, -2.4]:
+            eps = 1e-3
+            f = lambda x: float(paexp2_value(jnp.float32(x)))
+            fd = (f(a + eps) - f(a - eps)) / (2 * eps)
+            da = float(g(lambda x: paexp2(x, "exact"), a))
+            np.testing.assert_allclose(da, fd, rtol=1e-3)
+
+    def test_palog2_exact_is_segment_slope(self):
+        from repro.core import palog2_value
+        for a in [1.3, 2.7, 100.0]:
+            eps = min(1e-3, a * 1e-4)
+            f = lambda x: float(palog2_value(jnp.float32(x)))
+            fd = (f(a + eps) - f(a - eps)) / (2 * eps)
+            da = float(g(lambda x: palog2(x, "exact"), a))
+            np.testing.assert_allclose(da, fd, rtol=1e-2)
+
+    def test_approx_close_to_true_derivative(self):
+        # approx derivative mimics d(2^x)/dx = ln2 * 2^x
+        for a in [0.3, 1.7, -2.4]:
+            da = float(g(lambda x: paexp2(x, "approx"), a))
+            true = np.log(2) * 2.0 ** a
+            np.testing.assert_allclose(da, true, rtol=0.15)
+
+
+class TestBackwardIsMultiplicationFree:
+    def test_exact_pam_grad_is_pam_of_pow2(self):
+        """The exact backward uses PAM against a power-of-two factor, which
+        is exact — so grad(sum(pam)) == dfactor elementwise."""
+        a = jnp.asarray(np.linspace(0.5, 4.0, 64), jnp.float32)
+        b = jnp.asarray(np.linspace(-3.0, 3.1, 64), jnp.float32)
+        da = jax.grad(lambda x: jnp.sum(pam(x, b, "exact")))(a)
+        expect = pam_exact_dfactor(a, b)
+        np.testing.assert_array_equal(np.asarray(da), np.asarray(expect))

@@ -1,0 +1,62 @@
+"""Deliverables (e)/(g) coverage: the dry-run CLI end-to-end (subprocess —
+it must own XLA_FLAGS before jax init) and the roofline math."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_dryrun_cli_end_to_end(tmp_path):
+    """Lower+compile one real cell on the 512-device multi-pod mesh in a
+    fresh process and verify the recorded artifact."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-tiny", "--shape", "decode_32k", "--multi-pod",
+         "--no-depth-variants", "--out", str(tmp_path)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    path = tmp_path / "whisper-tiny__decode_32k__2x16x16.json"
+    cell = json.loads(path.read_text())
+    assert cell["status"] == "ok"
+    assert cell["chips"] == 512
+    assert cell["memory"]["peak_per_device_gib"] > 0
+    assert cell["cost"]["flops"] > 0
+
+
+def test_roofline_analyse_cell_math():
+    from repro.launch.roofline import analyse_cell, PEAK_FLOPS, HBM_BW, ICI_BW
+    cell = {
+        "status": "ok", "arch": "llama3.2-1b", "shape": "train_4k",
+        "chips": 256, "params_active": int(1e9),
+        "memory": {"peak_per_device_gib": 10.0},
+        "cost": {"flops": 1e12, "bytes_accessed": 1e12},
+        "collectives": {"total_bytes": 1e11},
+        "depth1": {"cost": {"flops": 1e12, "bytes_accessed": 1e12},
+                   "collectives": {"total_bytes": 1e11},
+                   "memory": {"peak_per_device_gib": 10.0}},
+        "depth2": {"cost": {"flops": 2e12, "bytes_accessed": 2e12},
+                   "collectives": {"total_bytes": 2e11},
+                   "memory": {"peak_per_device_gib": 10.0}},
+    }
+    r = analyse_cell(cell)
+    # 16 layers -> total = d1 + 15*(d2-d1) = 16e12
+    assert abs(r["compute_s"] - 16e12 / PEAK_FLOPS) < 1e-9
+    assert abs(r["memory_s"] - 16e12 / HBM_BW) < 1e-9
+    assert abs(r["collective_s"] - 16e11 / ICI_BW) < 1e-9
+    assert r["dominant"] in ("compute", "memory", "collective")
+    # model flops: 6 * 1e9 * (256*4096) tokens
+    assert abs(r["model_flops"] - 6e9 * 256 * 4096) < 1
+    assert 0 < r["mfu_bound"] < 1
+
+
+def test_roofline_skips_failed_cells():
+    from repro.launch.roofline import analyse_cell
+    assert analyse_cell({"status": "fail"}) is None
+    assert analyse_cell({"status": "skip"}) is None

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.pam_matmul import pam_matmul, pam_matmul_ref
+from repro.kernels.pam_eltwise import ops as elt
+from repro.kernels.pam_eltwise.ref import REFS
+from repro.kernels.pa_softmax import pa_softmax, pa_softmax_ref
+
+
+class TestPamMatmulKernel:
+    @pytest.mark.parametrize("mkn", [
+        (4, 7, 5), (128, 128, 128), (130, 257, 65), (1, 1000, 3),
+        (16, 16, 16), (8, 513, 8),
+    ])
+    def test_shape_sweep_vs_oracle(self, rng, mkn):
+        m, k, n = mkn
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        b = rng.standard_normal((k, n)).astype(np.float32)
+        got = np.asarray(pam_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=32, bn=32, bk=64))
+        ref = np.asarray(pam_matmul_ref(a, b))
+        # products are bit-identical; only f32 accumulation ORDER differs
+        # between the K-blocked kernel and the single-sum oracle
+        np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float16])
+    def test_dtype_inputs(self, rng, dtype):
+        a = rng.standard_normal((16, 32)).astype(dtype)
+        b = rng.standard_normal((32, 8)).astype(dtype)
+        got = np.asarray(pam_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=8, bn=8, bk=16))
+        ref = np.asarray(pam_matmul_ref(np.float32(a), np.float32(b)))
+        np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+    def test_batched(self, rng):
+        a = rng.standard_normal((2, 3, 16, 24)).astype(np.float32)
+        b = rng.standard_normal((2, 3, 24, 8)).astype(np.float32)
+        got = np.asarray(pam_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=8, bn=8, bk=8))
+        for i in range(2):
+            for j in range(3):
+                ref = np.asarray(pam_matmul_ref(a[i, j], b[i, j]))
+                np.testing.assert_allclose(got[i, j], ref, rtol=2e-5, atol=2e-5)
+
+    def test_leading_dims_collapse(self, rng):
+        a = rng.standard_normal((3, 4, 8, 16)).astype(np.float32)
+        b = rng.standard_normal((16, 8)).astype(np.float32)
+        got = np.asarray(pam_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=16, bn=8, bk=16))
+        assert got.shape == (3, 4, 8, 8)
+        ref = np.asarray(pam_matmul_ref(a[1, 2], b))
+        np.testing.assert_allclose(got[1, 2], ref, rtol=2e-5, atol=2e-5)
+
+    def test_zeros_pad_exact(self):
+        """Padding correctness: PAM(0, x) == 0 exactly."""
+        a = np.zeros((5, 9), np.float32)
+        b = np.ones((9, 3), np.float32)
+        got = np.asarray(pam_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    bm=4, bn=4, bk=4))
+        np.testing.assert_array_equal(got, 0.0)
+
+
+class TestEltwiseKernels:
+    @pytest.mark.parametrize("op", ["pam", "padiv"])
+    def test_binary_vs_oracle(self, rng, op):
+        x = (rng.standard_normal(9999) * 10 ** rng.uniform(-5, 5, 9999)).astype(np.float32)
+        y = (rng.standard_normal(9999) * 10 ** rng.uniform(-5, 5, 9999)).astype(np.float32)
+        got = np.asarray(getattr(elt, op)(jnp.asarray(x), jnp.asarray(y)))
+        ref = np.asarray(REFS[op](jnp.asarray(x), jnp.asarray(y)))
+        np.testing.assert_array_equal(got, ref)
+
+    def test_paexp2_vs_oracle(self, rng):
+        x = rng.uniform(-100, 100, 5000).astype(np.float32)
+        got = np.asarray(elt.paexp2(jnp.asarray(x)))
+        ref = np.asarray(REFS["paexp2"](jnp.asarray(x)))
+        np.testing.assert_array_equal(got, ref)
+
+    def test_palog2_vs_oracle(self, rng):
+        x = np.abs(rng.standard_normal(5000)).astype(np.float32) + 1e-10
+        got = np.asarray(elt.palog2(jnp.asarray(x)))
+        ref = np.asarray(REFS["palog2"](jnp.asarray(x)))
+        np.testing.assert_array_equal(got, ref)
+
+    def test_nd_shapes(self, rng):
+        x = rng.standard_normal((3, 5, 7)).astype(np.float32)
+        y = rng.standard_normal((3, 5, 7)).astype(np.float32)
+        got = np.asarray(elt.pam(jnp.asarray(x), jnp.asarray(y)))
+        assert got.shape == (3, 5, 7)
+
+
+class TestSoftmaxKernel:
+    @pytest.mark.parametrize("shape", [(8, 128), (37, 129), (1, 4096), (200, 33)])
+    def test_vs_oracle(self, rng, shape):
+        x = rng.standard_normal(shape).astype(np.float32) * 3
+        got = np.asarray(pa_softmax(jnp.asarray(x)))
+        ref = np.asarray(pa_softmax_ref(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, ref)
+
+    def test_long_row_fallback(self, rng):
+        x = rng.standard_normal((4, 8192)).astype(np.float32)
+        got = np.asarray(pa_softmax(jnp.asarray(x)))
+        ref = np.asarray(pa_softmax_ref(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, ref)
+
+
+class TestFlashAttentionKernel:
+    """Flash (online-softmax) attention vs the quadratic oracle."""
+
+    @pytest.mark.parametrize("cfg", [
+        (2, 64, 32, 16, 16), (3, 100, 16, 32, 32), (1, 257, 64, 64, 64),
+        (2, 128, 8, 128, 128),
+    ])
+    def test_shape_sweep_vs_oracle(self, rng, cfg):
+        from repro.kernels.flash_attention import attention_ref
+        from repro.kernels.flash_attention.kernel import flash_attention_bh
+        bh, s, dh, bq, bk = cfg
+        q = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
+        got = np.asarray(flash_attention_bh(q, k, v, bq=bq, bk=bk,
+                                            interpret=True))
+        ref = np.asarray(attention_ref(q, k, v))
+        np.testing.assert_allclose(got, ref, atol=2e-5)
+
+    def test_gqa_wrapper(self, rng):
+        from repro.kernels.flash_attention import flash_attention
+        q = jnp.asarray(rng.standard_normal((2, 32, 8, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, 32, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, 32, 2, 16)), jnp.float32)
+        out = flash_attention(q, k, v, bq=16, bk=16)
+        assert out.shape == (2, 32, 8, 16)
+        assert bool(jnp.isfinite(out).all())
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, rng, dtype):
+        from repro.kernels.flash_attention import attention_ref
+        from repro.kernels.flash_attention.kernel import flash_attention_bh
+        q = jnp.asarray(rng.standard_normal((2, 64, 32)), dtype)
+        k = jnp.asarray(rng.standard_normal((2, 64, 32)), dtype)
+        v = jnp.asarray(rng.standard_normal((2, 64, 32)), dtype)
+        got = np.asarray(flash_attention_bh(q, k, v, bq=32, bk=32,
+                                            interpret=True), np.float32)
+        ref = np.asarray(attention_ref(q, k, v), np.float32)
+        np.testing.assert_allclose(got, ref, atol=2e-2)

@@ -1,0 +1,94 @@
+"""PA matmul front-end: value, gradients, modes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PAConfig, pa_matmul, pam_value
+from repro.core.matmul import _pam_matmul_value, _swap
+
+
+def oracle(a, b):
+    return np.asarray(jnp.sum(
+        pam_value(jnp.asarray(a)[..., :, :, None],
+                  jnp.asarray(b)[..., None, :, :]), axis=-2))
+
+
+@pytest.mark.parametrize("shape", [
+    ((4, 8), (8, 4)), ((1, 1), (1, 1)), ((3, 5000), (5000, 2)),
+    ((2, 3, 9, 17), (17, 7)), ((2, 1, 4, 6), (2, 5, 6, 3)),
+])
+def test_value_matches_oracle(rng, shape):
+    sa, sb = shape
+    a = rng.standard_normal(sa).astype(np.float32)
+    b = rng.standard_normal(sb).astype(np.float32)
+    got = np.asarray(_pam_matmul_value(jnp.asarray(a), jnp.asarray(b)))
+    want = oracle(np.broadcast_to(a, np.broadcast_shapes(sa[:-2], sb[:-2]) + sa[-2:]),
+                  np.broadcast_to(b, np.broadcast_shapes(sa[:-2], sb[:-2]) + sb[-2:]))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_error_vs_true_matmul_bounded(rng):
+    a = rng.standard_normal((32, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 16)).astype(np.float32)
+    pa = PAConfig(mode="matmul")
+    got = np.asarray(pa_matmul(jnp.asarray(a), jnp.asarray(b), pa))
+    # each scalar product has <= 11.1% magnitude error; the sum keeps the
+    # same one-sided bound in terms of the absolute-value sum
+    bound = np.abs(a) @ np.abs(b) / 9 + 1e-5
+    assert (np.abs(got - a @ b) <= bound).all()
+
+
+def test_approx_grads_are_pam_matmuls(rng):
+    a = rng.standard_normal((5, 7)).astype(np.float32)
+    b = rng.standard_normal((7, 3)).astype(np.float32)
+    pa = PAConfig(mode="matmul", deriv="approx")
+    da, db = jax.grad(lambda x, y: jnp.sum(pa_matmul(x, y, pa)),
+                      argnums=(0, 1))(jnp.asarray(a), jnp.asarray(b))
+    ones = jnp.ones((5, 3), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(da),
+                                  np.asarray(_pam_matmul_value(ones, _swap(jnp.asarray(b)))))
+    np.testing.assert_array_equal(np.asarray(db),
+                                  np.asarray(_pam_matmul_value(_swap(jnp.asarray(a)), ones)))
+
+
+def test_exact_grads_finite_and_correct_scalar(rng):
+    pa = PAConfig(mode="matmul", deriv="exact")
+    aa, bb = jnp.float32([[1.5]]), jnp.float32([[3.0]])
+    da = jax.grad(lambda x: pa_matmul(x, bb, pa)[0, 0])(aa)
+    db = jax.grad(lambda y: pa_matmul(aa, y, pa)[0, 0])(bb)
+    assert float(da[0, 0]) == 4.0     # 2^(E_b + carry) = 2^(1+1)
+    assert float(db[0, 0]) == 2.0     # 2^(E_a + carry) = 2^(0+1)
+    a = rng.standard_normal((6, 33)).astype(np.float32)
+    b = rng.standard_normal((33, 5)).astype(np.float32)
+    ga, gb = jax.grad(lambda x, y: jnp.sum(pa_matmul(x, y, pa)),
+                      argnums=(0, 1))(jnp.asarray(a), jnp.asarray(b))
+    assert bool(jnp.isfinite(ga).all() and jnp.isfinite(gb).all())
+
+
+def test_mantissa_bits_path(rng):
+    a = rng.standard_normal((8, 16)).astype(np.float32)
+    b = rng.standard_normal((16, 4)).astype(np.float32)
+    full = pa_matmul(jnp.asarray(a), jnp.asarray(b), PAConfig(mode="matmul"))
+    m4 = pa_matmul(jnp.asarray(a), jnp.asarray(b),
+                   PAConfig(mode="matmul", mantissa_bits=4))
+    m23 = pa_matmul(jnp.asarray(a), jnp.asarray(b),
+                    PAConfig(mode="matmul", mantissa_bits=23))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(m23))
+    assert not np.array_equal(np.asarray(full), np.asarray(m4))
+    np.testing.assert_allclose(np.asarray(m4), np.asarray(full), atol=0.5)
+
+
+def test_hw_mode_is_standard_dot(rng):
+    a = rng.standard_normal((8, 16)).astype(np.float32)
+    b = rng.standard_normal((16, 4)).astype(np.float32)
+    hw = pa_matmul(jnp.asarray(a), jnp.asarray(b),
+                   PAConfig(mode="full", impl="hw"))
+    np.testing.assert_allclose(np.asarray(hw), a @ b, rtol=1e-6)
+
+
+def test_off_mode(rng):
+    a = rng.standard_normal((8, 16)).astype(np.float32)
+    b = rng.standard_normal((16, 4)).astype(np.float32)
+    off = pa_matmul(jnp.asarray(a), jnp.asarray(b), PAConfig(mode="off"))
+    np.testing.assert_allclose(np.asarray(off), a @ b, rtol=1e-6)

@@ -1,0 +1,112 @@
+"""PA network ops (paper §3.3): softmax, norms, activations, loss."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (PAConfig, OFF, pa_softmax, pa_logsumexp, pa_layernorm,
+                        pa_rmsnorm, pa_cross_entropy, ACTIVATIONS)
+
+FULL = PAConfig(mode="full", deriv="approx", loss_deriv="exact")
+
+
+class TestSoftmax:
+    def test_rows_sum_near_one(self, rng):
+        x = jnp.asarray(rng.standard_normal((64, 33)), jnp.float32)
+        s = pa_softmax(x, FULL)
+        np.testing.assert_allclose(np.asarray(jnp.sum(s, -1)), 1.0, atol=0.1)
+        assert (np.asarray(s) >= 0).all()
+
+    def test_close_to_standard(self, rng):
+        x = jnp.asarray(rng.standard_normal((16, 9)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(pa_softmax(x, FULL)),
+                                   np.asarray(jax.nn.softmax(x)), atol=0.05)
+
+    def test_masked(self, rng):
+        x = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+        mask = jnp.asarray(rng.random((8, 12)) > 0.4)
+        s = np.asarray(pa_softmax(x, FULL, where=mask))
+        assert (s[~np.asarray(mask)] == 0).all()
+        assert np.isfinite(s).all()
+
+    def test_grads_finite_both_derivs(self, rng):
+        x = jnp.asarray(rng.standard_normal((4, 7)), jnp.float32)
+        for d in ("approx", "exact"):
+            pa = PAConfig(mode="full", deriv=d)
+            g = jax.grad(lambda v: jnp.sum(pa_softmax(v, pa)[:, 0]))(x)
+            assert bool(jnp.isfinite(g).all())
+
+    def test_logsumexp(self, rng):
+        x = jnp.asarray(rng.standard_normal((5, 11)) * 3, jnp.float32)
+        got = np.asarray(pa_logsumexp(x, FULL))
+        want = np.asarray(jax.scipy.special.logsumexp(x, axis=-1))
+        np.testing.assert_allclose(got, want, atol=0.15)
+
+
+class TestNorms:
+    def test_layernorm_normalises(self, rng):
+        x = jnp.asarray(rng.standard_normal((32, 128)) * 5 + 2, jnp.float32)
+        y = np.asarray(pa_layernorm(x, None, None, FULL))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=0.05)
+        np.testing.assert_allclose(y.std(-1), 1.0, atol=0.1)
+
+    def test_layernorm_parametric(self, rng):
+        x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+        gamma = jnp.asarray(rng.standard_normal(16) + 1, jnp.float32)
+        beta = jnp.asarray(rng.standard_normal(16), jnp.float32)
+        got = np.asarray(pa_layernorm(x, gamma, beta, FULL))
+        want = np.asarray(pa_layernorm(x, gamma, beta, OFF))
+        np.testing.assert_allclose(got, want, atol=0.35)
+
+    def test_rmsnorm(self, rng):
+        x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+        got = np.asarray(pa_rmsnorm(x, None, FULL))
+        want = np.asarray(pa_rmsnorm(x, None, OFF))
+        # compound PAM error (square, mean, pasqrt, padiv) stays ~<12% rel
+        np.testing.assert_allclose(got, want, atol=0.12 * np.abs(want).max() + 0.05)
+
+    def test_grads_finite(self, rng):
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+        g = jax.grad(lambda v: jnp.sum(pa_layernorm(v, None, None, FULL)))(x)
+        assert bool(jnp.isfinite(g).all())
+
+
+class TestActivations:
+    @pytest.mark.parametrize("name", list(ACTIVATIONS))
+    def test_close_to_standard_and_differentiable(self, rng, name):
+        x = jnp.asarray(rng.standard_normal(256) * 2, jnp.float32)
+        act = ACTIVATIONS[name]
+        got, want = np.asarray(act(x, FULL)), np.asarray(act(x, OFF))
+        np.testing.assert_allclose(got, want, atol=0.25)
+        g = jax.grad(lambda v: jnp.sum(act(v, FULL)))(x)
+        assert bool(jnp.isfinite(g).all())
+
+
+class TestCrossEntropy:
+    def test_close_to_standard(self, rng):
+        logits = jnp.asarray(rng.standard_normal((32, 50)) * 2, jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 50, 32))
+        for ls in (0.0, 0.1):
+            got = float(pa_cross_entropy(logits, labels, FULL, label_smoothing=ls))
+            want = float(pa_cross_entropy(logits, labels, OFF, label_smoothing=ls))
+            assert abs(got - want) < 0.15 * max(1.0, want)
+
+    def test_masked(self, rng):
+        logits = jnp.asarray(rng.standard_normal((4, 8, 16)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 16, (4, 8)))
+        mask = jnp.asarray(rng.random((4, 8)) > 0.3)
+        got = float(pa_cross_entropy(logits, labels, FULL, where=mask))
+        assert np.isfinite(got)
+
+    def test_grads_both_derivs(self, rng):
+        logits = jnp.asarray(rng.standard_normal((8, 12)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 12, 8))
+        for ld in ("exact", "approx"):
+            pa = PAConfig(mode="full", loss_deriv=ld)
+            g = jax.grad(lambda l: pa_cross_entropy(l, labels, pa,
+                                                    label_smoothing=0.1))(logits)
+            assert bool(jnp.isfinite(g).all())
+            # gradient should point the right way: increasing the target
+            # logit decreases the loss
+            tgt = np.asarray(g)[np.arange(8), np.asarray(labels)]
+            assert (tgt < 0).all()

@@ -1,0 +1,86 @@
+"""Optimizer: standard vs fully-PA AdamW (paper §2.6)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PAConfig
+from repro.optim import OptConfig, init_opt_state, adamw_update, lr_at
+
+
+def toy_params(rng):
+    return {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+
+
+def toy_grads(rng):
+    return {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+
+
+def test_standard_update_moves_against_gradient(rng):
+    cfg = OptConfig(peak_lr=1e-2, warmup_steps=1, total_steps=10,
+                    weight_decay=0.0, grad_clip=0.0)
+    p = toy_params(rng)
+    g = jax.tree.map(jnp.ones_like, p)
+    st = init_opt_state(p, cfg)
+    p2, st2, _ = adamw_update(p, g, st, cfg)
+    assert (np.asarray(p2["w"]) < np.asarray(p["w"])).all()
+    assert int(st2["step"]) == 1
+
+
+def test_pa_update_close_to_standard(rng):
+    cfg = OptConfig(peak_lr=1e-2, warmup_steps=1, total_steps=10)
+    pa = PAConfig(mode="full")
+    p = toy_params(rng)
+    st_s = init_opt_state(p, cfg)
+    st_p = init_opt_state(p, cfg)
+    ps, pp = p, p
+    for i in range(5):
+        g = toy_grads(np.random.default_rng(i))
+        ps, st_s, _ = adamw_update(ps, g, st_s, cfg)
+        pp, st_p, _ = adamw_update(pp, g, st_p, cfg, pa=pa)
+    dw = np.abs(np.asarray(ps["w"]) - np.asarray(pp["w"]))
+    step_mag = np.abs(np.asarray(ps["w"]) - np.asarray(p["w"])).mean()
+    assert dw.mean() < 0.5 * step_mag   # PA tracks the standard trajectory
+
+
+def test_pa_update_multiplication_free_semantics(rng):
+    """PA optimizer must not NaN/blow up on extreme gradients."""
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=1, total_steps=10)
+    pa = PAConfig(mode="full")
+    p = toy_params(rng)
+    g = {"w": jnp.full((8, 8), 1e20, jnp.float32),
+         "b": jnp.full((8,), -1e20, jnp.float32)}
+    st = init_opt_state(p, cfg)
+    p2, st2, m = adamw_update(p, g, st, cfg, pa=pa)
+    assert bool(jnp.isfinite(p2["w"]).all())
+
+
+def test_grad_clip(rng):
+    cfg = OptConfig(peak_lr=1e-2, grad_clip=1.0, warmup_steps=1, total_steps=10)
+    p = toy_params(rng)
+    g = jax.tree.map(lambda x: x * 1e3, toy_grads(rng))
+    st = init_opt_state(p, cfg)
+    _, _, m = adamw_update(p, g, st, cfg)
+    assert float(m["grad_norm"]) > 1.0   # reported pre-clip
+
+
+def test_bf16_moments(rng):
+    cfg = OptConfig(moment_dtype="bfloat16", warmup_steps=1, total_steps=10)
+    p = toy_params(rng)
+    st = init_opt_state(p, cfg)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    p2, st2, _ = adamw_update(p, toy_grads(rng), st, cfg)
+    assert st2["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedule():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    assert float(lr_at(0, cfg)) < 0.2
+    np.testing.assert_allclose(float(lr_at(10, cfg)), 1.0, rtol=0.05)
+    assert float(lr_at(100, cfg)) <= 0.11
+    lin = OptConfig(peak_lr=1.0, warmup_steps=1, total_steps=100,
+                    schedule="linear", min_lr_ratio=0.0)
+    np.testing.assert_allclose(float(lr_at(50, lin)), 0.5, atol=0.03)

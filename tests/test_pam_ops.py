@@ -1,0 +1,177 @@
+"""Unit tests for the core PA ops (paper §2.2–2.3, Fig. 2)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (pam_value, padiv_value, paexp2_value, palog2_value,
+                        paexp, palog, pasqrt, parecip, pam_compensated,
+                        ALPHA_MEAN)
+from repro.core import floatbits as fb
+
+
+def arr(*xs):
+    return jnp.asarray(np.array(xs, np.float32))
+
+
+class TestPAM:
+    def test_exact_at_powers_of_two(self, rng):
+        a = jnp.asarray(2.0 ** rng.integers(-20, 20, 1000), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        np.testing.assert_array_equal(pam_value(a, b), a * b)
+        np.testing.assert_array_equal(pam_value(b, a), a * b)
+
+    def test_error_band(self, rng):
+        """Relative error in [-1/9, 0] (paper §2.7)."""
+        a = jnp.asarray(rng.standard_normal(200000) *
+                        np.exp(rng.uniform(-20, 20, 200000)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal(200000) *
+                        np.exp(rng.uniform(-20, 20, 200000)), jnp.float32)
+        rel = np.asarray((pam_value(a, b) - a * b) / (a * b))
+        assert rel.min() >= -1 / 9 - 1e-6
+        assert rel.max() <= 1e-6
+
+    def test_worst_case_at_half_mantissas(self):
+        # 1.5 * 1.5 = 2.25 ; PAM gives 2.0 -> -1/9 error
+        assert float(pam_value(arr(1.5), arr(1.5))[0]) == 2.0
+
+    def test_signs(self):
+        got = pam_value(arr(2.0, -2.0, -2.0), arr(3.0, 3.0, -3.0))
+        np.testing.assert_array_equal(got, [6.0, -6.0, 6.0])
+
+    def test_zero_and_specials(self):
+        assert float(pam_value(arr(0.0), arr(5.0))[0]) == 0.0
+        assert float(pam_value(arr(5.0), arr(0.0))[0]) == 0.0
+        assert np.isinf(float(pam_value(arr(np.inf), arr(2.0))[0]))
+        assert np.isnan(float(pam_value(arr(np.nan), arr(2.0))[0]))
+        assert np.isnan(float(pam_value(arr(np.inf), arr(0.0))[0]))
+
+    def test_underflow_flush_overflow_clamp(self):
+        tiny = arr(1e-30)
+        assert float(pam_value(tiny, tiny)[0]) == 0.0       # denormal flush
+        huge = arr(1e30)
+        assert np.isfinite(float(pam_value(huge, huge)[0]))  # clamped
+
+    def test_compensation_reduces_bias(self, rng):
+        a = jnp.asarray(np.exp(rng.uniform(-3, 3, 50000)), jnp.float32)
+        b = jnp.asarray(np.exp(rng.uniform(-3, 3, 50000)), jnp.float32)
+        plain = np.mean(np.asarray(pam_value(a, b)) / np.asarray(a * b))
+        comp = np.mean(np.asarray(pam_compensated(a, b)) / np.asarray(a * b))
+        assert abs(comp - 1.0) < abs(plain - 1.0)
+
+
+class TestPADiv:
+    def test_exact_at_powers_of_two(self, rng):
+        b = jnp.asarray(2.0 ** rng.integers(-15, 15, 1000), jnp.float32)
+        a = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        np.testing.assert_allclose(padiv_value(a, b), a / b, rtol=0)
+
+    def test_inverse_of_pam(self, rng):
+        a = jnp.asarray(np.exp(rng.uniform(-5, 5, 1000)), jnp.float32)
+        b = jnp.asarray(np.exp(rng.uniform(-5, 5, 1000)), jnp.float32)
+        np.testing.assert_allclose(padiv_value(pam_value(a, b), b), a,
+                                   rtol=1e-6)
+
+    def test_specials(self):
+        assert float(padiv_value(arr(0.0), arr(3.0))[0]) == 0.0
+        assert np.isinf(float(padiv_value(arr(3.0), arr(0.0))[0]))
+        assert np.isnan(float(padiv_value(arr(0.0), arr(0.0))[0]))
+
+
+class TestExpLog:
+    def test_paexp2_integer_points(self):
+        x = arr(-3.0, -1.0, 0.0, 1.0, 5.0)
+        np.testing.assert_array_equal(paexp2_value(x), 2.0 ** np.asarray(x))
+
+    def test_paexp2_piecewise_affine_between_integers(self):
+        # slope within [n, n+1) is exactly 2^n
+        x = jnp.linspace(1.1, 1.9, 9)
+        y = np.asarray(paexp2_value(x))
+        slopes = np.diff(y) / np.diff(np.asarray(x))
+        np.testing.assert_allclose(slopes, 2.0, rtol=1e-4)
+
+    def test_palog2_exact_at_powers(self):
+        x = arr(0.25, 0.5, 1.0, 2.0, 1024.0)
+        np.testing.assert_array_equal(palog2_value(x),
+                                      np.log2(np.asarray(x)))
+
+    def test_roundtrip(self, rng):
+        x = jnp.asarray(np.exp(rng.uniform(-10, 10, 1000)), jnp.float32)
+        np.testing.assert_allclose(paexp2_value(palog2_value(x)), x, rtol=1e-6)
+
+    def test_palog2_domain(self):
+        assert np.isnan(float(palog2_value(arr(-1.0))[0]))
+        assert np.isneginf(float(palog2_value(arr(0.0))[0]))
+
+    def test_paexp2_masked_softmax_inputs(self):
+        # -1e30 mask values and -inf must map to 0, not NaN
+        out = paexp2_value(arr(-1e30, -np.inf, -1e4))
+        np.testing.assert_array_equal(out, [0.0, 0.0, 0.0])
+
+
+class TestDerived:
+    def test_pasqrt(self):
+        np.testing.assert_array_equal(pasqrt(arr(16.0, 64.0, 1.0)),
+                                      [4.0, 8.0, 1.0])
+
+    def test_paexp_palog_roundtrip(self, rng):
+        x = jnp.asarray(np.exp(rng.uniform(-3, 3, 100)), jnp.float32)
+        np.testing.assert_allclose(paexp(palog(x)), x, rtol=0.08)
+
+    def test_parecip(self):
+        np.testing.assert_allclose(parecip(arr(2.0, 4.0, 0.5)),
+                                   [0.5, 0.25, 2.0], rtol=0)
+
+
+class TestFloatBits:
+    def test_mantissa_round_bf16(self, rng):
+        x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        r = fb.mantissa_round(x, 7)
+        # representable in bfloat16 exactly
+        np.testing.assert_array_equal(np.asarray(r),
+                                      np.asarray(r).astype(np.dtype("bfloat16") if False else np.float32))
+        rel = np.abs(np.asarray((r - x) / x))
+        assert rel.max() <= 2.0 ** -8 + 1e-9   # half ulp at 7 bits
+
+    def test_mantissa_round_idempotent(self, rng):
+        x = jnp.asarray(rng.standard_normal(100), jnp.float32)
+        r1 = fb.mantissa_round(x, 4)
+        np.testing.assert_array_equal(fb.mantissa_round(r1, 4), r1)
+
+    def test_pow2_mul_exact(self, rng):
+        x = jnp.asarray(rng.standard_normal(100), jnp.float32)
+        np.testing.assert_array_equal(fb.pow2_mul(x, 3), x * 8.0)
+        np.testing.assert_array_equal(fb.pow2_mul(x, -2), x / 4.0)
+
+    def test_is_pow2(self):
+        got = fb.is_pow2(arr(1.0, 2.0, 3.0, 0.5, 0.0, -4.0))
+        np.testing.assert_array_equal(got, [True, True, False, True, False, True])
+
+
+class TestOverflowEdgeCases:
+    """hypothesis-found int32 wraparound: huge*huge must clamp, not flush."""
+
+    def test_pam_double_overflow_clamps(self):
+        a = jnp.float32(1.766e29)
+        b = jnp.float32(4.05e9)      # true product 7.2e38 > f32 max
+        out = float(pam_value(arr(1.766e29), arr(4.05e9))[0])
+        assert out == float(jnp.finfo(jnp.float32).max)
+
+    def test_pam_monotone_through_overflow(self):
+        b = arr(4.05e9)
+        lo = float(pam_value(arr(1.0), b)[0])
+        hi = float(pam_value(arr(1.766e29), b)[0])
+        assert hi >= lo
+
+    def test_padiv_overflow_clamps(self):
+        # divisor must be a NORMAL float (XLA CPU flushes denormals; the
+        # paper flushes them too, yielding the a/0 -> inf path instead)
+        out = float(padiv_value(arr(1e38), arr(2e-38))[0])
+        assert out == float(jnp.finfo(jnp.float32).max)
+
+    def test_kernels_match_after_fix(self, rng):
+        from repro.kernels.pam_eltwise import ops as elt
+        x = jnp.asarray(np.array([1.766e29, 1e38, 1.0], np.float32))
+        y = jnp.asarray(np.array([4.05e9, 1e12, 2.0], np.float32))
+        np.testing.assert_array_equal(np.asarray(elt.pam(x, y)),
+                                      np.asarray(pam_value(x, y)))

@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pam_value, padiv_value, paexp2_value, palog2_value
+from repro.core import floatbits as fb
+
+# bounds must be exactly float32-representable for width=32 strategies
+_LO = float(np.float32(1e-30))
+_HI = float(np.float32(1e30))
+finite = st.floats(min_value=_LO, max_value=_HI, allow_nan=False,
+                   allow_infinity=False, width=32)
+signed = st.floats(min_value=-_HI, max_value=_HI, allow_nan=False,
+                   allow_infinity=False, width=32).filter(lambda x: abs(x) > _LO)
+
+
+def f32(x):
+    return jnp.asarray(np.float32(x))
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=signed, b=signed)
+def test_pam_relative_error_band(a, b):
+    """PAM error is always in [-1/9, 0] relative to the true product."""
+    p = float(pam_value(f32(a), f32(b)))
+    true = float(np.float32(a)) * float(np.float32(b))
+    fmax = float(np.finfo(np.float32).max)
+    if not np.isfinite(true) or true == 0 or p == 0.0 or abs(true) > fmax:
+        return  # over/underflow clamp region: the band only holds in-range
+    rel = (p - true) / true
+    assert -1 / 9 - 1e-6 <= rel <= 1e-6
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=signed, b=signed)
+def test_pam_commutative(a, b):
+    assert float(pam_value(f32(a), f32(b))) == float(pam_value(f32(b), f32(a)))
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=signed, b=signed)
+def test_pam_sign_correct(a, b):
+    p = float(pam_value(f32(a), f32(b)))
+    if p != 0.0:
+        assert math.copysign(1, p) == math.copysign(1, a) * math.copysign(1, b)
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=signed, k=st.integers(min_value=-30, max_value=30))
+def test_pam_by_pow2_exact(a, k):
+    """Multiplication by a power of two is exact under PAM (Table 1 relies
+    on this for multiplication-free exact derivatives)."""
+    b = float(2.0 ** k)
+    p = float(pam_value(f32(a), f32(b)))
+    true = float(np.float32(np.float32(a) * np.float32(b)))
+    if p == 0.0 or not np.isfinite(true):
+        return
+    assert p == true
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=finite)
+def test_log2_exp2_roundtrip(a):
+    x = float(paexp2_value(palog2_value(f32(a))))
+    # the f32 log-domain value E+M carries |E| into the integer part, losing
+    # ~(2+|E|)*2^-24 of mantissa precision -> tolerance scales with |log2 a|
+    tol = (4.0 + abs(math.log2(abs(a)))) * 2.0 ** -24
+    assert abs(x - float(np.float32(a))) <= tol * abs(a)
+
+
+@settings(max_examples=300, deadline=None)
+@given(a=finite, b=finite)
+def test_padiv_inverts_pam(a, b):
+    p = float(pam_value(f32(a), f32(b)))
+    fmax = float(np.finfo(np.float32).max)
+    if p == 0.0 or not np.isfinite(p) or abs(p) >= fmax:
+        return  # clamped products are not invertible
+    back = float(padiv_value(f32(p), f32(b)))
+    assert abs(back - float(np.float32(a))) <= 2e-6 * abs(a)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=signed, bits=st.integers(min_value=1, max_value=23))
+def test_mantissa_round_properties(a, bits):
+    r = float(fb.mantissa_round(f32(a), bits))
+    # idempotent
+    assert float(fb.mantissa_round(f32(r), bits)) == r
+    # relative error bounded by half an ulp at `bits`
+    if a != 0:
+        assert abs(r - float(np.float32(a))) / abs(a) <= 2.0 ** (-bits) + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=signed)
+def test_palog2_is_monotone_in_magnitude(a):
+    x = abs(float(np.float32(a)))
+    l1 = float(palog2_value(f32(x)))
+    l2 = float(palog2_value(f32(x * 2)))
+    if np.isfinite(l2):
+        assert l2 >= l1
+
+
+@settings(max_examples=200, deadline=None)
+@given(data=st.data())
+def test_pam_monotone_for_positive(data):
+    """For positive fixed b, pam(., b) is non-decreasing (piecewise affine
+    with positive slopes)."""
+    b = data.draw(finite)
+    a1 = data.draw(finite)
+    a2 = data.draw(finite)
+    lo, hi = sorted([a1, a2])
+    p_lo = float(pam_value(f32(lo), f32(b)))
+    p_hi = float(pam_value(f32(hi), f32(b)))
+    assert p_hi >= p_lo
