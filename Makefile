@@ -1,0 +1,21 @@
+# Developer entry points. PYTHONPATH wiring lives here so bare `pytest` /
+# `python -m benchmarks.*` invocations don't need it spelled out.
+PY := PYTHONPATH=src python
+
+.PHONY: test test-all bench bench-all
+
+# Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
+test:
+	$(PY) -m pytest -x -q
+
+# Everything, including interpret-mode kernel tests marked `slow`.
+test-all:
+	$(PY) -m pytest -q -m "slow or not slow"
+
+# Regenerate the PAM matmul perf-trajectory point (BENCH_pam_matmul.json).
+bench:
+	$(PY) -m benchmarks.pam_matmul_bench
+
+# Full benchmark suite (paper tables/figures + trajectory harness).
+bench-all:
+	$(PY) -m benchmarks.run

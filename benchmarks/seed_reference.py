@@ -1,0 +1,125 @@
+"""Frozen PR-1 baseline implementations of the PAM matmul hot path.
+
+These are verbatim-behavior copies of the seed engine (pre-vectorization):
+the jnp chunked scan built on full ``pam_value`` semantics, and the Pallas
+kernel that ran one rank-1 outer product per K element. They exist so every
+future ``BENCH_pam_matmul.json`` measures the live engine against the SAME
+fixed yardstick, in-process and under identical load — the perf trajectory
+stays comparable across PRs even as the engine itself is rewritten.
+
+Do not optimise this module. It is a measurement artifact, not product code.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pam import pam_value
+
+_CHUNK_TARGET = 1 << 22          # seed's fixed chunk budget (elements)
+
+_SIGN = np.int32(-(2**31))
+_MAG = np.int32(0x7FFFFFFF)
+_BIAS = np.int32(127 << 23)
+_MIN_NORM = np.int32(1 << 23)
+_MAX_FINITE = np.int32(0x7F7FFFFF)
+
+
+def _chunk_size(m: int, k: int, n: int) -> int:
+    return max(1, min(k, _CHUNK_TARGET // max(1, m * n)))
+
+
+def seed_pam_matmul_value(a, b):
+    """Seed jnp path: bit-exact PAM matmul, chunked scan over K."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
+    c = _chunk_size(m, k, n)
+
+    def partial(ac, bc):
+        prod = pam_value(ac[..., :, :, None], bc[..., None, :, :])
+        return jnp.sum(prod, axis=-2)
+
+    if k <= c:
+        return partial(a, b)
+
+    nchunks = -(-k // c)
+    pad = nchunks * c - k
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+    a_ch = jnp.moveaxis(a.reshape(a.shape[:-1] + (nchunks, c)), -2, 0)
+    b_ch = jnp.moveaxis(b.reshape(b.shape[:-2] + (nchunks, c, b.shape[-1])), -3, 0)
+
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    acc0 = jnp.zeros(batch + (m, n), jnp.float32)
+
+    def body(acc, xs):
+        ac, bc = xs
+        return acc + partial(ac, bc), ()
+
+    acc, _ = jax.lax.scan(body, acc0, (a_ch, b_ch))
+    return acc
+
+
+def _pam_tile(a_col, b_row):
+    ai = jax.lax.bitcast_convert_type(a_col, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b_row, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
+    ovf = mag < -_BIAS
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where((a_col == 0.0) | (b_row == 0.0), 0.0, out)
+
+
+def _seed_kernel(a_ref, b_ref, o_ref, acc_ref, *, bk: int, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def body(k, acc):
+        return acc + _pam_tile(a[:, k][:, None], b[k, :][None, :])
+
+    acc_ref[...] = jax.lax.fori_loop(0, bk, body, acc_ref[...])
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _out():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def seed_pam_matmul_pallas(a, b, *, bm: int = 128, bn: int = 128,
+                           bk: int = 512, interpret: bool = True):
+    """Seed Pallas path: scalar-k fori_loop of rank-1 outer products."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    mp, np_, kp = (-(-m // bm_) * bm_, -(-n // bn_) * bn_, -(-k // bk_) * bk_)
+    a = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_seed_kernel, bk=bk_, nk=nk),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

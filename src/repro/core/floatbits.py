@@ -25,7 +25,21 @@ EXP_BIAS = 127
 BIAS_SHIFTED = np.int32(EXP_BIAS << MAN_BITS)      # 0x3F800000 == bits of 1.0f
 MIN_NORM = np.int32(1 << MAN_BITS)                 # smallest normal magnitude
 MAX_FINITE = np.int32(0x7F7FFFFF)                  # largest finite magnitude
+MAX_EXP_FIELD = np.int32(254 << MAN_BITS)          # largest finite exp field
 INF_BITS = np.int32(0x7F800000)
+
+# Zero sentinel for the PAM matmul engines (core/matmul.py and
+# kernels/pam_matmul/kernel.py — keep in sync, DESIGN.md §2.3). Replaces the
+# magnitude of a ZERO operand on the side whose partner's magnitude has the
+# bias folded in (partner range [MIN_NORM - BIAS_SHIFTED, MAX_FINITE -
+# BIAS_SHIFTED] ⊂ (-2^30, 2^30)): sentinel + partner then stays inside
+# [INT32_MIN, 0) — always flushed by the underflow select, never wrapped.
+# It does NOT work against a raw (un-bias-subtracted) magnitude, whose
+# range reaches 2^31-ish: that side's zeros need an explicit mask. (No pair
+# of int32 sentinels can cover both sides: flushing against a raw magnitude
+# needs S < MIN_NORM - MAX_FINITE ~ -2^31 + 2^23, and two such sentinels
+# wrap past INT32_MIN when both operands are zero.)
+PAM_ZERO_SENTINEL = np.int32(-(1 << 30))
 
 
 def bits(x: jax.Array) -> jax.Array:

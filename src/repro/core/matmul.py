@@ -5,108 +5,291 @@
 ``PAConfig``:
 
   * ``mode`` off        -> ``jnp.matmul`` (baseline)
-  * ``impl`` "jnp"      -> bit-exact PAM contraction, K-chunked ``lax.scan``
-  * ``impl`` "pallas"   -> Pallas TPU kernel (kernels/pam_matmul)
+  * ``impl`` "jnp"      -> bit-exact PAM contraction, grouped k-blocks with a
+                           cost-model-sized ``lax.scan`` for large K
+  * ``impl`` "pallas"   -> Pallas TPU kernels (kernels/pam_matmul), forward
+                           AND backward
   * ``impl`` "hw"       -> ``jnp.matmul`` stand-in for a PAM-MXU (identical
                            dataflow/sharding; scalar semantics standard) —
                            used by the full-scale dry-run / roofline.
 
 Backward pass implements the paper's Table 1 at matrix granularity:
 approx: dA = g ·̂ Bᵀ, dB = Aᵀ ·̂ g (PAM matmuls); exact: the power-of-two
-factor contraction, multiplication-free via PAM-by-pow2.
+factor contraction, multiplication-free via PAM-by-pow2. Under
+``impl="pallas"`` both variants run through the batched kernel entry points
+instead of the jnp chunked scan.
+
+The jnp path shares the engine's numeric contract (DESIGN.md §2.3):
+bit-exact per product vs ``pam_value`` for zero or finite inputs with
+per-product magnitude below 2^128 (clamping preserved up to 2^129); inf/nan
+are outside the contract. Operands are bitcast and sign/magnitude-prepped
+ONCE per matmul — never inside the contraction loop — and zero operands map
+to a magnitude sentinel that flushes in the underflow select, so the inner
+loop is 8 integer vector ops per scalar product.
 """
 from __future__ import annotations
 
 import functools
+import os
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from . import floatbits as fb
-from .pam import (pam_value as _pam_value_op, pam_exact_dfactor as _pam_dfactor,
-                  ALPHA_MEAN as _ALPHA_MEAN, _unbroadcast)
+from .pam import (pam_value as _pam_value_op, ALPHA_MEAN as _ALPHA_MEAN,
+                  _unbroadcast)
 from .modes import PAConfig
 
-# Max elements materialised per chunk in the broadcast (M, c, N) product.
-_CHUNK_TARGET = 1 << 22
+_SIGN = fb.SIGN_MASK
+_MAG = fb.MAG_MASK
+_EXP = fb.EXP_MASK
+_MAN = fb.MAN_MASK
+_BIAS = fb.BIAS_SHIFTED
+_MIN_NORM = fb.MIN_NORM
+_MAX_EXPF = fb.MAX_EXP_FIELD
+_MAX_FINITE = fb.MAX_FINITE
+# A-side zero sentinel; B-side zeros use an explicit mask (derivation at
+# floatbits.PAM_ZERO_SENTINEL, DESIGN.md §2.3).
+_ZSENT = fb.PAM_ZERO_SENTINEL
+
+# Group size for the two-level reduction (g products accumulate in
+# registers before the cross-group vector reduce).
+_GROUP = 16
 
 
 def _f32(x):
     return jnp.asarray(x, jnp.float32)
 
 
-def _chunk_size(m: int, k: int, n: int) -> int:
-    return max(1, min(k, _CHUNK_TARGET // max(1, m * n)))
-
-
 def _swap(x):
     return jnp.swapaxes(x, -1, -2)
 
 
-def _pam_matmul_value(a, b):
-    """Bit-exact PAM matmul; chunked scan over the contraction axis."""
+# ---------------------------------------------------------------------------
+# Cost model for the scan chunk size.
+#
+# The grouped contraction materialises a (kc/g, M, N) partial-sums block per
+# scan step. Too small wastes scan overhead; too large spills the cache
+# hierarchy (the block is written by one fused loop and read back by the
+# reduce). The default budget is a FIXED constant (measured optimum on the
+# reference host; chunk boundaries move f32 accumulation order, so a
+# load-dependent choice would make outputs vary run-to-run — accumulation
+# order is non-contractual but determinism is worth keeping by default).
+# Machine-specific tuning is explicit: REPRO_PAM_CHUNK_ELEMS pins the
+# budget; REPRO_PAM_CHUNK_CALIBRATE=1 times a probe matmul at the candidate
+# budgets once per process and keeps the winner. Problems that fit the
+# smallest candidate never chunk, so test workloads are probe-free.
+# ---------------------------------------------------------------------------
+
+_BUDGET_CANDIDATES = (1 << 20, 1 << 22, 1 << 24)
+_BUDGET_DEFAULT = 1 << 22
+_budget_cache: list = []
+
+
+def _chunk_budget() -> int:
+    env = os.environ.get("REPRO_PAM_CHUNK_ELEMS")
+    if env:
+        return max(1 << 16, int(env))
+    if not os.environ.get("REPRO_PAM_CHUNK_CALIBRATE"):
+        return _BUDGET_DEFAULT
+    if _budget_cache:
+        return _budget_cache[0]
+    best, best_us = _BUDGET_DEFAULT, None
+    try:
+        probe_a = jnp.ones((128, 4096), jnp.float32)
+        probe_b = jnp.ones((4096, 128), jnp.float32)
+        for cand in _BUDGET_CANDIDATES:
+            fn = jax.jit(functools.partial(_pam_matmul_value, budget=cand))
+            jax.block_until_ready(fn(probe_a, probe_b))      # compile
+            t0 = time.perf_counter()
+            for _ in range(3):
+                out = fn(probe_a, probe_b)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / 3 * 1e6
+            if best_us is None or us < best_us:
+                best, best_us = cand, us
+    except Exception:        # pragma: no cover - calibration is best-effort
+        pass
+    _budget_cache.append(best)
+    return best
+
+
+def _chunk_k(m: int, k: int, n: int, g: int, budget: int | None) -> int:
+    """Contraction chunk (multiple of g) whose partial block fits the
+    budget. Problems under the smallest candidate never trigger the probe."""
+    per_slice = max(1, m * n)
+    if (k // g) * per_slice <= _BUDGET_CANDIDATES[0]:
+        return k
+    if budget is None:
+        budget = _chunk_budget()
+    kc = max(1, budget // per_slice) * g
+    return min(k, max(g, kc))
+
+
+# ---------------------------------------------------------------------------
+# Grouped bit-level building blocks (shared by value and exact-grad paths).
+# ---------------------------------------------------------------------------
+
+def _prep_operands(a, b):
+    """Bitcast ONCE: (saT, amT) k-major for a (zero-sentineled magnitudes),
+    (sb, bmg, bz) for b (bias-folded magnitudes + zero mask — the sentinel
+    only flushes against a bias-folded partner, see
+    floatbits.PAM_ZERO_SENTINEL). All reshaped to (..., K/g, g, dim) with K
+    zero-padded to a multiple of g."""
+    a, b = _f32(a), _f32(b)
+    k = a.shape[-1]
+    g = max(1, min(_GROUP, k))
+    kp = -(-k // g) * g
+    if kp != k:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, kp - k)])
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, kp - k), (0, 0)])
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    # Zero tests are FLOAT compares: under flush-to-zero arithmetic (CPU
+    # and TPU) denormal inputs equal 0.0, matching pam_value's semantics.
+    # The B mask is an int AND-mask (0 where b==0, else ~0) — one vpand per
+    # inner element instead of a bool select.
+    saT = _swap(ai & _SIGN)                        # (..., K, M)
+    amT = _swap(jnp.where(a == 0.0, _ZSENT, ai & _MAG))
+    sb = bi & _SIGN                                # (..., K, N)
+    bmg = (bi & _MAG) - _BIAS
+    bzM = jnp.where(b == 0.0, 0, -1).astype(jnp.int32)
+
+    def grp(x):
+        return x.reshape(x.shape[:-2] + (kp // g, g) + x.shape[-1:])
+
+    return grp(saT), grp(amT), grp(sb), grp(bmg), grp(bzM), g
+
+
+def _grouped_pam_sum(saT, amT, sb, bmg, bzM, g):
+    """sum_k pam(a, b) for prepped (..., C, g, M) / (..., C, g, N) chunks ->
+    (..., M, N). Two-level reduction: g in-register adds, then one vector
+    reduce over the C group axis.
+
+    NOTE: keep in sync with kernels/pam_matmul/kernel.py::_grouped_pam_sum
+    (same algorithm on the kernel's per-tile layout)."""
+    part = None
+    for j in range(g):
+        mag = amT[..., :, j, :, None] + bmg[..., :, j, None, :]
+        mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+        mag = mag & bzM[..., :, j, None, :]               # PAM(a, ±0) = ±0
+        bits = (saT[..., :, j, :, None] ^ sb[..., :, j, None, :]) | mag
+        p = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        part = p if part is None else part + p
+    return jnp.sum(part, axis=-3)
+
+
+def _pam_matmul_value(a, b, *, budget: int | None = None):
+    """Bit-exact PAM matmul on the jnp path; grouped k-blocks, cost-model
+    chunked ``lax.scan`` over the contraction axis for large problems."""
     a, b = _f32(a), _f32(b)
     m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
-    c = _chunk_size(m, k, n)
+    saT, amT, sb, bmg, bzM, g = _prep_operands(a, b)
+    ng = saT.shape[-3]                             # K(padded) / g groups
+    kc = _chunk_k(m, ng * g, n, g, budget)
+    nc = kc // g                                   # groups per scan chunk
 
-    def partial(ac, bc):
-        # ac: (..., M, c), bc: (..., c, N) -> (..., M, N)
-        prod = _pam_value_op(ac[..., :, :, None], bc[..., None, :, :])
-        return jnp.sum(prod, axis=-2)
+    if ng <= nc:
+        return _grouped_pam_sum(saT, amT, sb, bmg, bzM, g)
 
-    if k <= c:
-        return partial(a, b)
+    # Pad the GROUP axis so it splits into whole scan steps. Padded slices
+    # look like zero operands (A sentinel / B AND-mask 0) and flush; no
+    # float re-pad of the operands happens inside the scan.
+    nsteps = -(-ng // nc)
+    gpad = nsteps * nc - ng
 
-    nchunks = -(-k // c)
-    pad = nchunks * c - k
-    if pad:
-        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
-        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
-    # (..., M, nchunks, c) -> (nchunks, ..., M, c)
-    a_ch = jnp.moveaxis(a.reshape(a.shape[:-1] + (nchunks, c)), -2, 0)
-    b_ch = jnp.moveaxis(b.reshape(b.shape[:-2] + (nchunks, c, b.shape[-1])), -3, 0)
+    def split(x, padval=0):
+        if gpad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(0, gpad), (0, 0), (0, 0)],
+                        constant_values=padval)
+        x = x.reshape(x.shape[:-3] + (nsteps, nc) + x.shape[-2:])
+        return jnp.moveaxis(x, -4, 0)              # (nsteps, ..., nc, g, dim)
 
+    xs = (split(saT), split(amT, _ZSENT), split(sb), split(bmg), split(bzM))
     batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
     acc0 = jnp.zeros(batch + (m, n), jnp.float32)
 
-    def body(acc, xs):
-        ac, bc = xs
-        return acc + partial(ac, bc), ()
+    def body(acc, chunk):
+        return acc + _grouped_pam_sum(*chunk, g), ()
 
-    acc, _ = jax.lax.scan(body, acc0, (a_ch, b_ch))
+    acc, _ = jax.lax.scan(body, acc0, xs)
     return acc
 
 
-def _exact_grad_a(a, b, g):
-    """dA[..., m, k] = sum_n pam(dfactor(a[m,k], b[k,n]), g[m,n]) — chunked
-    over n. dfactor is the signed power-of-two from paper Table 1."""
-    a, b, g = _f32(a), _f32(b), _f32(g)
+def _exact_grad_a(a, b, g_, *, budget: int | None = None):
+    """dA[..., m, k] = sum_n pam(dfactor(a[m,k], b[k,n]), g[m,n]) — the
+    paper's Table 1 power-of-two factor contraction, fused at the bit level
+    (no dfactor tensor) and chunked over n by the same cost model."""
+    a, b, g_ = _f32(a), _f32(b), _f32(g_)
     m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
-    c = _chunk_size(m, k, n)
+    grp = max(1, min(_GROUP, n))
+    np_ = -(-n // grp) * grp
+    if np_ != n:
+        # padded G columns are zero -> masked out; padded B columns idem
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, np_ - n)])
+        g_ = jnp.pad(g_, [(0, 0)] * (g_.ndim - 1) + [(0, np_ - n)])
 
-    def partial(bc, gc):
-        # a: (..., M, K) ; bc: (..., K, c) ; gc: (..., M, c)
-        f = _pam_dfactor(a[..., :, :, None], bc[..., None, :, :])
-        return jnp.sum(_pam_value_op(f, gc[..., :, None, :]), axis=-1)
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    gi = jax.lax.bitcast_convert_type(g_, jnp.int32)
+    maf_a = ai & _MAN                              # (..., M, K)
+    bT, giT = _swap(b), _swap(gi)
+    biT = _swap(bi)                                # (..., N, K)
+    ebT = biT & _EXP
+    sbT = biT & _SIGN
+    mbT = biT & _MAN
+    bzT = bT == 0.0
+    sgT = giT & _SIGN                              # (..., N, M)
+    gzT = _swap(g_) == 0.0
+    gmgT = (giT & _MAG) - _BIAS
 
-    if n <= c:
-        return partial(b, g)
-    nchunks = -(-n // c)
-    pad = nchunks * c - n
-    if pad:
-        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, 0), (0, pad)])
-        g = jnp.pad(g, [(0, 0)] * (g.ndim - 2) + [(0, 0), (0, pad)])
-    b_ch = jnp.moveaxis(b.reshape(b.shape[:-1] + (nchunks, c)), -2, 0)
-    g_ch = jnp.moveaxis(g.reshape(g.shape[:-1] + (nchunks, c)), -2, 0)
+    def group(x):
+        return x.reshape(x.shape[:-2] + (np_ // grp, grp) + x.shape[-1:])
+
+    ebT, sbT, mbT, bzT = group(ebT), group(sbT), group(mbT), group(bzT)
+    sgT, gzT, gmgT = group(sgT), group(gzT), group(gmgT)
+
+    def chunk_sum(ebc, sbc, mbc, bzc, sgc, gzc, gmgc):
+        part = None
+        for j in range(grp):
+            carry = (maf_a[..., None, :, :] + mbc[..., :, j, None, :]) & _MIN_NORM
+            magf = jnp.clip(ebc[..., :, j, None, :] + carry, _MIN_NORM, _MAX_EXPF)
+            mag = magf + gmgc[..., :, j, :, None]
+            mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+            bits = (sbc[..., :, j, None, :] ^ sgc[..., :, j, :, None]) | mag
+            p = jax.lax.bitcast_convert_type(bits, jnp.float32)
+            zero = bzc[..., :, j, None, :] | gzc[..., :, j, :, None]
+            p = jnp.where(zero, 0.0, p)
+            part = p if part is None else part + p
+        return jnp.sum(part, axis=-3)
+
+    ngp = np_ // grp
+    nc = _chunk_k(m, np_, k, grp, budget) // grp
     batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+
+    if ngp <= nc:
+        return chunk_sum(ebT, sbT, mbT, bzT, sgT, gzT, gmgT)
+
+    nsteps = -(-ngp // nc)
+    gpad = nsteps * nc - ngp
+
+    def split(x, pad_true=False):
+        if gpad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(0, gpad), (0, 0), (0, 0)],
+                        constant_values=(True if pad_true else 0))
+        x = x.reshape(x.shape[:-3] + (nsteps, nc) + x.shape[-2:])
+        return jnp.moveaxis(x, -4, 0)
+
+    xs = (split(ebT), split(sbT), split(mbT), split(bzT, True),
+          split(sgT), split(gzT, True), split(gmgT))
     acc0 = jnp.zeros(batch + (m, k), jnp.float32)
 
-    def body(acc, xs):
-        bc, gc = xs
-        return acc + partial(bc, gc), ()
+    def body(acc, c):
+        return acc + chunk_sum(*c), ()
 
-    acc, _ = jax.lax.scan(body, acc0, (b_ch, g_ch))
+    acc, _ = jax.lax.scan(body, acc0, xs)
     return acc
 
 
@@ -133,10 +316,17 @@ def _build(deriv: str, impl: str, mantissa_bits, compensate: bool):
         def value(a, b):
             a, b = _round_inputs(_f32(a), _f32(b), mantissa_bits)
             return _kops.pam_matmul(a, b)
+
+        def grad_exact(a, b, g):
+            return (_kops.pam_exact_grad_a(a, b, g),
+                    _kops.pam_exact_grad_b(a, b, g))
     else:
         def value(a, b):
             a, b = _round_inputs(_f32(a), _f32(b), mantissa_bits)
             return _pam_matmul_value(a, b)
+
+        def grad_exact(a, b, g):
+            return _exact_grad_a(a, b, g), _exact_grad_b(a, b, g)
 
     def post(y):
         if compensate:
@@ -153,8 +343,7 @@ def _build(deriv: str, impl: str, mantissa_bits, compensate: bool):
     def bwd(res, g):
         a, b = res
         if deriv == "exact" and impl != "hw":
-            da = _exact_grad_a(a, b, g)
-            db = _exact_grad_b(a, b, g)
+            da, db = grad_exact(a, b, g)
         else:
             da = value(g, _swap(b))
             db = value(_swap(a), g)

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-pam_matmul      — VMEM-tiled bit-exact PAM matrix multiply (VPU; DESIGN.md §3)
+pam_matmul      — grouped k-block bit-exact PAM matrix multiply with a
+                  batched grid and Pallas backward (VPU; DESIGN.md §2)
 pam_eltwise     — fused elementwise pam/padiv/paexp2/palog2
 pa_softmax      — fused row softmax in PA arithmetic
 flash_attention — online-softmax attention (kills the S*S HBM traffic the
@@ -8,5 +9,7 @@ flash_attention — online-softmax attention (kills the S*S HBM traffic the
 
 Each kernel ships ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle);
 all are validated in interpret mode on CPU against their oracles
-(tests/test_kernels.py). EXAMPLE.md retained from the scaffold.
+(tests/test_kernels.py, tests/test_pam_matmul_engine.py). Execution backend
+(compiled TPU vs CPU interpret) is resolved lazily per call by
+``_backend.use_interpret()`` — never frozen at import time.
 """

@@ -1,12 +1,10 @@
 """Public wrapper: GQA-aware flash attention over (B, S, H, Dh) layouts."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from .._backend import use_interpret
 from .kernel import flash_attention_bh
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
@@ -22,5 +20,5 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
     kf = k.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
     vf = v.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
     o = flash_attention_bh(qf, kf, vf, causal=causal, bq=bq, bk=bk,
-                           interpret=_INTERPRET)
+                           interpret=use_interpret())
     return o.reshape(b, hq, s, dh).transpose(0, 2, 1, 3)

@@ -1,13 +1,12 @@
 """Public wrapper: nd PA softmax over the last axis, Pallas-backed."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from .._backend import use_interpret
 from .kernel import pa_softmax_rows
 from .ref import pa_softmax_ref
 
-_INTERPRET = jax.default_backend() != "tpu"
 _MAX_COLS = 4096   # VMEM row budget; longer rows use the jnp composition
 
 
@@ -17,4 +16,4 @@ def pa_softmax(x):
     if c > _MAX_COLS:
         return pa_softmax_ref(x)
     x2 = jnp.asarray(x, jnp.float32).reshape(-1, c)
-    return pa_softmax_rows(x2, interpret=_INTERPRET).reshape(shape)
+    return pa_softmax_rows(x2, interpret=use_interpret()).reshape(shape)

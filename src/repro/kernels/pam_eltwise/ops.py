@@ -1,24 +1,21 @@
 """Public wrappers for the fused elementwise PA kernels."""
 from __future__ import annotations
 
-import jax
-
+from .._backend import use_interpret
 from .kernel import eltwise_binary, eltwise_unary
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 def pam(a, b):
-    return eltwise_binary(a, b, op="pam", interpret=_INTERPRET)
+    return eltwise_binary(a, b, op="pam", interpret=use_interpret())
 
 
 def padiv(a, b):
-    return eltwise_binary(a, b, op="padiv", interpret=_INTERPRET)
+    return eltwise_binary(a, b, op="padiv", interpret=use_interpret())
 
 
 def paexp2(a):
-    return eltwise_unary(a, op="paexp2", interpret=_INTERPRET)
+    return eltwise_unary(a, op="paexp2", interpret=use_interpret())
 
 
 def palog2(a):
-    return eltwise_unary(a, op="palog2", interpret=_INTERPRET)
+    return eltwise_unary(a, op="palog2", interpret=use_interpret())

@@ -1,4 +1,8 @@
-from .ops import pam_matmul
+from .ops import (pam_matmul, pam_matmul_grads_approx, pam_exact_grad_a,
+                  pam_exact_grad_b)
 from .ref import pam_matmul_ref
+from .kernel import register_tile_params, tile_params
 
-__all__ = ["pam_matmul", "pam_matmul_ref"]
+__all__ = ["pam_matmul", "pam_matmul_grads_approx", "pam_exact_grad_a",
+           "pam_exact_grad_b", "pam_matmul_ref", "register_tile_params",
+           "tile_params"]

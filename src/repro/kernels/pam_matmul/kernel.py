@@ -1,18 +1,32 @@
-"""Pallas TPU kernel: PAM matrix multiplication (the paper's hot path,
-adapted from CUDA to the TPU memory hierarchy — DESIGN.md §3).
+"""Pallas TPU kernels: PAM matrix multiplication (the paper's hot path,
+adapted from CUDA to the TPU memory hierarchy — DESIGN.md §2).
 
 The MXU multiplies natively and cannot execute the bit-level PAM algorithm,
-so the kernel runs on the **VPU** (8x128 int lanes): for each k in the
-K-block it broadcasts the int32 bit patterns of an A column against a B row,
-performs the magnitude-add/re-bias/clamp, bitcasts back and accumulates in a
-float32 VMEM scratch block. Grid is (M/bm, N/bn, K/bk) with the K dimension
-innermost so each (i, j) output tile's accumulator lives in VMEM across all
-K steps (classic Pallas matmul pipelining; HBM traffic is the standard
-(bm*bk + bk*bn) per K-step).
+so the kernels run on the **VPU** (8x128 int lanes). The scalar-k loop of the
+first kernel generation (one rank-1 outer product per K element) is replaced
+by *grouped k-blocks*: the whole (bm, bk) / (bk, bn) tiles are bitcast to
+int32 once, split into ``bk // g`` groups of ``g`` k-slices, and each group
+accumulates its ``g`` PAM products elementwise into one (bk//g, bm, bn)
+partial-sums block that a single vector reduction collapses onto the VMEM
+accumulator. Two levels of reduction — in-register over the group, vector
+reduce over groups — keep every intermediate small enough to stay on-chip
+while giving the compiler long straight-line vector code instead of a
+512-iteration sequential loop.
 
-Default tile (128, 128, 512): VMEM = a(128*512*4) + b(512*128*4) + acc+out
-(2*128*128*4) ~= 0.65 MB — far under the ~16 MB/core budget, and 128 tiles
-keep both the lane (128) and sublane (8) dims hardware-aligned.
+Grid is (B, M/bm, N/bn, K/bk) with the K dimension innermost so each
+(b, i, j) output tile's accumulator lives in VMEM across all K steps
+(classic Pallas matmul pipelining). Batch dims are folded into the leading
+grid dimension of a *single* ``pallas_call`` — no vmap'd per-element
+launches; an operand with batch size 1 is broadcast by pinning its batch
+index map to 0.
+
+Numeric contract (DESIGN.md §2.3): bit-exact vs ``pam_value`` for inputs
+that are zero or finite with per-product magnitude below ~2^128 (clamped to
+MAX_FINITE up to 2^129). Zero operands are pre-mapped to a magnitude
+sentinel that lands every partner sum in the underflow-flush band, which
+removes all per-element zero tests from the hot loop. Inf/NaN inputs are
+outside the contract (same as the previous kernel generation); the eltwise
+``pam`` kernel keeps full IEEE edge semantics.
 """
 from __future__ import annotations
 
@@ -24,68 +38,302 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_SIGN = np.int32(-(2**31))
-_MAG = np.int32(0x7FFFFFFF)
-_BIAS = np.int32(127 << 23)
-_MIN_NORM = np.int32(1 << 23)
-_MAX_FINITE = np.int32(0x7F7FFFFF)
+# Bit-field constants shared with core/floatbits.py (the kernel re-exports
+# them as module-level numpy scalars so the kernel body closes over plain
+# int32 immediates).
+from repro.core import floatbits as _fb
+
+_SIGN = _fb.SIGN_MASK
+_MAG = _fb.MAG_MASK
+_EXP = _fb.EXP_MASK
+_MAN = _fb.MAN_MASK
+_BIAS = _fb.BIAS_SHIFTED
+_MIN_NORM = _fb.MIN_NORM
+_MAX_EXPF = _fb.MAX_EXP_FIELD
+_MAX_FINITE = _fb.MAX_FINITE
+# A-side zero sentinel; B-side zeros need the explicit mask (see the
+# derivation at floatbits.PAM_ZERO_SENTINEL and DESIGN.md §2.3).
+_ZSENT = _fb.PAM_ZERO_SENTINEL
 
 
-def _pam_tile(a_col, b_row):
-    """PAM outer product of a (bm, 1) column and a (1, bn) row -> (bm, bn)."""
-    ai = jax.lax.bitcast_convert_type(a_col, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b_row, jnp.int32)
-    sign = (ai ^ bi) & _SIGN
-    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
-    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
-    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
-    mag = jnp.where(ovf, _MAX_FINITE, mag)
-    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
-    return jnp.where((a_col == 0.0) | (b_row == 0.0), 0.0, out)
+# ---------------------------------------------------------------------------
+# Tunables + autotune table.
+# ---------------------------------------------------------------------------
+
+# (bm, bn, bk, g). Defaults per backend; per-shape entries override. Keys are
+# (backend, bucket(m), bucket(n), bucket(k)) with power-of-two buckets.
+_DEFAULTS = {
+    "interpret": (256, 256, 256, 16),
+    "tpu": (128, 128, 512, 8),
+}
+_AUTOTUNE = {
+    # Measured on the CPU interpret reference host (see BENCH_pam_matmul.json
+    # trajectory): mid-size squares like one big tile with g=16 groups.
+    ("interpret", 256, 256, 256): (256, 256, 256, 16),
+    ("interpret", 512, 512, 512): (256, 256, 512, 16),
+    ("interpret", 1024, 1024, 1024): (256, 256, 512, 16),
+}
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, *, bk: int, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+def _bucket(x: int) -> int:
+    return min(1 << max(0, int(x - 1).bit_length()), 4096)
+
+
+def register_tile_params(m: int, n: int, k: int, params, *,
+                         backend: str = "interpret") -> None:
+    """Add/override an autotune entry ((bm, bn, bk, g)) for a shape bucket."""
+    bm, bn, bk, g = params
+    _AUTOTUNE[(backend, _bucket(m), _bucket(n), _bucket(k))] = (bm, bn, bk, g)
+
+
+def tile_params(m: int, n: int, k: int, interpret: bool):
+    """Resolve (bm, bn, bk, g) for a problem shape from the autotune table."""
+    backend = "interpret" if interpret else "tpu"
+    key = (backend, _bucket(m), _bucket(n), _bucket(k))
+    return _AUTOTUNE.get(key, _DEFAULTS[backend])
+
+
+def _fit(bm, bn, bk, g, m, n, k, *, group_dim: str = "k"):
+    """Clamp tile params to the problem and restore divisibility invariants.
+
+    ``group_dim`` names the contraction axis the grouped reduction runs
+    over ("k" for the forward kernel, "n" for the exact-grad kernel); ``g``
+    is lowered to the largest divisor of that axis' tile size.
+    """
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    axis = bk_ if group_dim == "k" else bn_
+    g_ = max(1, min(g, axis))
+    while axis % g_:                     # largest divisor of axis that is <= g
+        g_ -= 1
+    return bm_, bn_, bk_, g_
+
+
+# ---------------------------------------------------------------------------
+# Shared tile math.
+# ---------------------------------------------------------------------------
+
+def _prep_tiles(a, b):
+    """Bitcast both tiles once. Returns (saT, amT, sb, bmg, bz):
+    A side k-major with the zero SENTINEL applied to its magnitudes,
+    B side with the PAM re-bias folded in (one add saved per inner element)
+    plus an explicit zero MASK — the sentinel trick only flushes against a
+    bias-folded partner (floatbits.PAM_ZERO_SENTINEL has the derivation).
+    """
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    # Zero tests are FLOAT compares: under flush-to-zero arithmetic (CPU
+    # and TPU) denormal inputs equal 0.0, matching pam_value's semantics.
+    # The B mask is an int AND-mask (0 where b==0, else ~0) — one vpand per
+    # inner element instead of a bool select.
+    amT = jnp.where(a == 0.0, _ZSENT, ai & _MAG).T
+    bzM = jnp.where(b == 0.0, 0, -1).astype(jnp.int32)
+    return (ai & _SIGN).T, amT, bi & _SIGN, (bi & _MAG) - _BIAS, bzM
+
+
+def _grouped_pam_sum(saT, amT, sb, bmg, bzM, g):
+    """Sum of PAM products over K for int-prepped tiles.
+
+    saT/amT: (bk, bm) sign bits / magnitude (A side, zero-sentineled),
+    sb/bmg:  (bk, bn) sign bits / magnitude-minus-bias (B side),
+    bzM:     (bk, bn) int32 AND-mask, 0 where B is ±0.0 else ~0.
+    Returns the (bm, bn) f32 partial result. The K axis is processed as
+    bk//g groups of g slices; each group's g products accumulate in
+    registers before one (bk//g, bm, bn) vector reduction.
+
+    NOTE: keep this in sync with core/matmul.py::_grouped_pam_sum (same
+    algorithm on the jnp engine's batched layout).
+    """
+    bk, bm = amT.shape
+    bn = bmg.shape[1]
+    amT = amT.reshape(bk // g, g, bm)
+    saT = saT.reshape(bk // g, g, bm)
+    bmg = bmg.reshape(bk // g, g, bn)
+    sb = sb.reshape(bk // g, g, bn)
+    bzM = bzM.reshape(bk // g, g, bn)
+    part = None
+    for j in range(g):
+        mag = amT[:, j, :, None] + bmg[:, j, None, :]
+        mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+        mag = mag & bzM[:, j, None, :]                 # PAM(a, ±0) = ±0
+        bits = (saT[:, j, :, None] ^ sb[:, j, None, :]) | mag
+        p = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        part = p if part is None else part + p
+    return jnp.sum(part, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: out[b] = A[b] ·̂ B[b]   (batched grid).
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(a_ref, b_ref, o_ref, acc_ref, *, g: int, nk: int):
+    @pl.when(pl.program_id(3) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...]            # (bm, bk) f32 in VMEM
-    b = b_ref[...]            # (bk, bn) f32 in VMEM
+    a = a_ref[0]                                   # (bm, bk) f32 in VMEM
+    b = b_ref[0]                                   # (bk, bn)
+    acc_ref[...] += _grouped_pam_sum(*_prep_tiles(a, b), g)
 
-    def body(k, acc):
-        return acc + _pam_tile(a[:, k][:, None], b[k, :][None, :])
-
-    acc_ref[...] = jax.lax.fori_loop(0, bk, body, acc_ref[...])
-
-    @pl.when(pl.program_id(2) == nk - 1)
+    @pl.when(pl.program_id(3) == nk - 1)
     def _out():
-        o_ref[...] = acc_ref[...]
+        o_ref[0] = acc_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def pam_matmul_2d(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512,
-                  interpret: bool = True):
-    """Bit-exact PAM matmul for 2D f32 operands. Pads to tile multiples
-    (PAM(0, x) == 0, so zero padding is exact)."""
-    m, k = a.shape
-    k2, n = b.shape
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "g", "interpret"))
+def pam_matmul_batched(a, b, *, bm: int, bn: int, bk: int, g: int,
+                       interpret: bool):
+    """(Ba, M, K) ·̂ (Bb, K, N) -> (max(Ba,Bb), M, N), one pallas_call.
+
+    Ba/Bb must be equal or 1 (a size-1 batch is broadcast through its index
+    map — the operand is never materialised B times). Pads M/N/K to tile
+    multiples; PAM(0, x) == 0 under the sentinel scheme, so zero padding is
+    exact.
+    """
+    Ba, m, k = a.shape
+    Bb, k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
-    mp, np_, kp = (-(-m // bm_) * bm_, -(-n // bn_) * bn_, -(-k // bk_) * bk_)
-    a = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
-    b = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    assert Ba == Bb or Ba == 1 or Bb == 1, (a.shape, b.shape)
+    B = max(Ba, Bb)
+    bm_, bn_, bk_, g_ = _fit(bm, bn, bk, g, m, n, k)
+    mp = -(-m // bm_) * bm_
+    np_ = -(-n // bn_) * bn_
+    kp = -(-k // bk_) * bk_
+    a = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, kp - k), (0, np_ - n)))
     nk = kp // bk_
 
+    a_idx = ((lambda bi, i, j, kk: (bi, i, kk)) if Ba > 1
+             else (lambda bi, i, j, kk: (0, i, kk)))
+    b_idx = ((lambda bi, i, j, kk: (bi, kk, j)) if Bb > 1
+             else (lambda bi, i, j, kk: (0, kk, j)))
+
     out = pl.pallas_call(
-        functools.partial(_kernel, bk=bk_, nk=nk),
-        grid=(mp // bm_, np_ // bn_, nk),
+        functools.partial(_fwd_kernel, g=g_, nk=nk),
+        grid=(B, mp // bm_, np_ // bn_, nk),
         in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bm_, bk_), a_idx),
+            pl.BlockSpec((1, bk_, bn_), b_idx),
         ],
-        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda bi, i, j, kk: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
     )(a, b)
-    return out[:m, :n]
+    return out[:, :m, :n]
+
+
+def pam_matmul_2d(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512,
+                  g: int = 8, interpret: bool = True):
+    """Bit-exact PAM matmul for 2D f32 operands (thin batched-grid wrapper)."""
+    return pam_matmul_batched(a[None], b[None], bm=bm, bn=bn, bk=bk, g=g,
+                              interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
+# Exact-derivative backward kernel (paper Table 1 at matrix granularity):
+#   dA[b, m, k] = sum_n pam(dfactor(A[m,k], B[k,n]), G[m,n])
+# where dfactor(a, b) = (-1)^{S_b} 2^{E_b + 1{M_a+M_b >= 1}} is the signed
+# power-of-two exact derivative of PAM. The contraction runs over N with the
+# same grouped two-level reduction as the forward kernel; dfactor and the
+# PAM-by-pow2 product are fused into one bit-level expression (no dfactor
+# tensor is ever materialised).
+# ---------------------------------------------------------------------------
+
+def _exact_da_kernel(a_ref, b_ref, g_ref, o_ref, acc_ref, *, g: int, nn: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0]                                   # (bm, bkk)
+    b = b_ref[0]                                   # (bkk, bn)
+    gr = g_ref[0]                                  # (bm, bn)
+    bm, bkk = a.shape
+    bn = b.shape[1]
+
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    gi = jax.lax.bitcast_convert_type(gr, jnp.int32)
+    maf_a = ai & _MAN                              # (bm, bkk) mantissa field
+    # B side, transposed to n-major: (bn, bkk)
+    ebT = (bi & _EXP).T                            # biased exponent field<<23
+    sbT = (bi & _SIGN).T
+    mbT = (bi & _MAN).T
+    bzT = b.T == 0.0                               # dfactor(·, 0) == 0
+    # grad side, transposed: (bn, bm)
+    sgT = (gi & _SIGN).T
+    gzT = gr.T == 0.0
+    gmgT = (gi & _MAG).T - _BIAS
+
+    ng = bn // g
+    ebT = ebT.reshape(ng, g, bkk)
+    sbT = sbT.reshape(ng, g, bkk)
+    mbT = mbT.reshape(ng, g, bkk)
+    bzT = bzT.reshape(ng, g, bkk)
+    sgT = sgT.reshape(ng, g, bm)
+    gzT = gzT.reshape(ng, g, bm)
+    gmgT = gmgT.reshape(ng, g, bm)
+
+    part = None
+    for j in range(g):
+        # carry 1{M_a + M_b >= 1} lands directly in the exponent-field bit
+        carry = (maf_a[None, :, :] + mbT[:, j, None, :]) & _MIN_NORM
+        magf = jnp.clip(ebT[:, j, None, :] + carry, _MIN_NORM, _MAX_EXPF)
+        mag = magf + gmgT[:, j, :, None]
+        mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+        bits = (sbT[:, j, None, :] ^ sgT[:, j, :, None]) | mag
+        p = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        zero = bzT[:, j, None, :] | gzT[:, j, :, None]
+        p = jnp.where(zero, 0.0, p)
+        part = p if part is None else part + p
+    acc_ref[...] += jnp.sum(part, axis=0)
+
+    @pl.when(pl.program_id(3) == nn - 1)
+    def _out():
+        o_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "g", "interpret"))
+def pam_exact_grad_a_batched(a, b, gr, *, bm: int, bn: int, bk: int, g: int,
+                             interpret: bool):
+    """Exact-deriv dA for (Ba, M, K) ·̂ (Bb, K, N) with cotangent (B, M, N).
+
+    Zero padding is exact: padded N columns carry G == 0 which the gmg
+    sentinel flushes; padded K columns only produce extra dA columns that
+    are cropped.
+    """
+    Ba, m, k = a.shape
+    Bb, k2, n = b.shape
+    Bg, m2, n2 = gr.shape
+    assert k == k2 and m == m2 and n == n2
+    B = max(Ba, Bb)
+    assert Bg == B and (Ba in (1, B)) and (Bb in (1, B))
+    bm_, bn_, bk_, g_ = _fit(bm, bn, bk, g, m, n, k, group_dim="n")
+    mp = -(-m // bm_) * bm_
+    np_ = -(-n // bn_) * bn_
+    kp = -(-k // bk_) * bk_
+    a = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, kp - k), (0, np_ - n)))
+    gr = jnp.pad(gr.astype(jnp.float32), ((0, 0), (0, mp - m), (0, np_ - n)))
+    nn = np_ // bn_
+
+    a_idx = ((lambda bi, i, kk, j: (bi, i, kk)) if Ba > 1
+             else (lambda bi, i, kk, j: (0, i, kk)))
+    b_idx = ((lambda bi, i, kk, j: (bi, kk, j)) if Bb > 1
+             else (lambda bi, i, kk, j: (0, kk, j)))
+
+    out = pl.pallas_call(
+        functools.partial(_exact_da_kernel, g=g_, nn=nn),
+        grid=(B, mp // bm_, kp // bk_, nn),
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), a_idx),
+            pl.BlockSpec((1, bk_, bn_), b_idx),
+            pl.BlockSpec((1, bm_, bn_), lambda bi, i, kk, j: (bi, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bk_), lambda bi, i, kk, j: (bi, i, kk)),
+        out_shape=jax.ShapeDtypeStruct((B, mp, kp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bk_), jnp.float32)],
+        interpret=interpret,
+    )(a, b, gr)
+    return out[:, :m, :k]

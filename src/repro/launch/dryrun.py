@@ -144,6 +144,8 @@ def lower_cell(model: Model, shape, mesh, opt_cfg=None, microbatches: int = 1):
 def analyse(compiled, mesh) -> dict:
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):        # older jax returns [dict]
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     colls = collective_stats(txt)
     return {

@@ -99,11 +99,8 @@ class TestShardingRules:
         assert isinstance(spec, P)
 
     def test_priority_kv_over_seq(self):
-        import numpy as np
-        devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
-        from jax.sharding import Mesh
-        mesh = Mesh(devs, ("data", "model"),
-                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # make_mesh handles the AxisType kwarg across jax versions
+        mesh = self._mesh()
         # kv divisible -> takes "model"; seq then can't reuse it
         spec = spec_for((2, 128, 16, 64),
                         ("cache_batch", "cache_seq", "cache_kv", None),

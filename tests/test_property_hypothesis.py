@@ -1,9 +1,16 @@
-"""Property-based tests (hypothesis) for the system's core invariants."""
+"""Property-based tests (hypothesis) for the system's core invariants.
+
+Skipped cleanly when ``hypothesis`` is absent (it is a dev-only extra, see
+requirements-dev.txt) so a bare interpreter can still run tier-1.
+"""
 import math
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import pam_value, padiv_value, paexp2_value, palog2_value
 from repro.core import floatbits as fb
