@@ -2,19 +2,29 @@
 # `python -m benchmarks.*` invocations don't need it spelled out.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench bench-all
+.PHONY: test test-all bench bench-all check-bench
 
 # Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
-test:
+# The bench-schema check runs first — a malformed BENCH_*.json trajectory
+# point fails the tier before any test time is spent.
+test: check-bench
 	$(PY) -m pytest -x -q
 
 # Everything, including interpret-mode kernel tests marked `slow`.
-test-all:
+test-all: check-bench
 	$(PY) -m pytest -q -m "slow or not slow"
 
-# Regenerate the PAM matmul perf-trajectory point (BENCH_pam_matmul.json).
+# Validate every repo-root BENCH_*.json against the trajectory schema.
+check-bench:
+	$(PY) -m benchmarks.check_bench_schema
+
+# Regenerate every perf-trajectory point (all benchmarks/*_bench.py), then
+# validate the files just written.
 bench:
-	$(PY) -m benchmarks.pam_matmul_bench
+	@set -e; for b in benchmarks/*_bench.py; do \
+	  mod=$$(basename $$b .py); echo "== benchmarks.$$mod"; \
+	  $(PY) -m benchmarks.$$mod; done
+	$(PY) -m benchmarks.check_bench_schema
 
 # Full benchmark suite (paper tables/figures + trajectory harness).
 bench-all:

@@ -1,0 +1,117 @@
+"""Validate every repo-root BENCH_*.json against the perf-trajectory schema.
+
+The protocol (ROADMAP.md "Benchmark protocol", DESIGN.md §Benchmark
+protocol) requires each tracked hot path's JSON to carry the fields future
+PRs diff against — schema_version, provenance, raw timings, and the derived
+ratio fields (``*_speedup_vs_seed``, ``slowdown_vs_native``). This checker
+runs in the default ``make test`` tier so a PR cannot commit a malformed
+trajectory point.
+
+Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
+or import ``validate_report`` / ``validate_file`` from tests.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import numbers
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_REQUIRED_TOP = ("benchmark", "schema_version", "generated_utc", "backend",
+                 "pallas_mode", "timing")
+_REQUIRED_TIMING = ("rounds", "stat", "unit")
+
+
+def _is_num(x) -> bool:
+    return isinstance(x, numbers.Real) and not isinstance(x, bool)
+
+
+def _numeric_dict(d) -> bool:
+    return (isinstance(d, dict) and len(d) > 0
+            and all(_is_num(v) for v in d.values()))
+
+
+def validate_report(report, name: str) -> list:
+    """Return a list of violation strings (empty == valid)."""
+    errs = []
+    if not isinstance(report, dict):
+        return [f"{name}: top level is not a JSON object"]
+    for key in _REQUIRED_TOP:
+        if key not in report:
+            errs.append(f"{name}: missing required field '{key}'")
+    if report.get("schema_version") != 1:
+        errs.append(f"{name}: schema_version must be 1, got "
+                    f"{report.get('schema_version')!r}")
+    timing = report.get("timing")
+    if isinstance(timing, dict):
+        for key in _REQUIRED_TIMING:
+            if key not in timing:
+                errs.append(f"{name}: timing missing '{key}'")
+    elif "timing" in report:
+        errs.append(f"{name}: timing must be an object")
+
+    us_keys = [k for k in report if k.endswith("_us")]
+    if not us_keys:
+        errs.append(f"{name}: no *_us timing section")
+    for k in us_keys:
+        if not _numeric_dict(report[k]):
+            errs.append(f"{name}: '{k}' must be a non-empty numeric object")
+
+    seed_keys = [k for k in report if k.endswith("_speedup_vs_seed")]
+    if not seed_keys:
+        errs.append(f"{name}: no *_speedup_vs_seed ratio section")
+    for k in seed_keys:
+        if not _numeric_dict(report[k]):
+            errs.append(f"{name}: '{k}' must be a non-empty numeric object")
+
+    if "slowdown_vs_native" not in report:
+        errs.append(f"{name}: missing 'slowdown_vs_native'")
+    elif not _numeric_dict(report["slowdown_vs_native"]):
+        errs.append(f"{name}: 'slowdown_vs_native' must be a non-empty "
+                    f"numeric object")
+
+    bench = report.get("benchmark")
+    if isinstance(bench, str) and name.startswith("BENCH_"):
+        expect = name[len("BENCH_"):-len(".json")]
+        if bench != expect:
+            errs.append(f"{name}: benchmark field {bench!r} does not match "
+                        f"filename (expect {expect!r})")
+    return errs
+
+
+def validate_file(path: str) -> list:
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{name}: unreadable ({e})"]
+    return validate_report(report, name)
+
+
+def bench_files(root: str = _ROOT) -> list:
+    return sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+
+
+def main() -> int:
+    files = bench_files()
+    if not files:
+        print("check_bench_schema: no BENCH_*.json files at repo root",
+              file=sys.stderr)
+        return 1
+    errs = []
+    for path in files:
+        errs.extend(validate_file(path))
+    for e in errs:
+        print(f"check_bench_schema: {e}", file=sys.stderr)
+    if not errs:
+        print(f"check_bench_schema: {len(files)} trajectory file(s) OK "
+              f"({', '.join(os.path.basename(p) for p in files)})")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

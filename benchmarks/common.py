@@ -47,6 +47,24 @@ def train_lm(cfg: ModelConfig, steps: int = 80, data: DataConfig = DATA,
     return float(np.mean(losses[-10:])), losses
 
 
+def interleaved_min_ms(fns: dict, rounds: int) -> dict:
+    """Perf-trajectory timing protocol: fns is name -> (jitted_fn, args).
+    Operands are passed as arguments (a 0-arg closure would embed them as
+    XLA constants, which measurably skews the executable); contenders run
+    interleaved so machine noise hits all equally; min over rounds is the
+    noise-robust statistic on shared hosts."""
+    import collections
+    for f, args in fns.values():               # compile + warm
+        jax.block_until_ready(f(*args))
+    times = collections.defaultdict(list)
+    for _ in range(rounds):
+        for name, (f, args) in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*args))
+            times[name].append((time.perf_counter() - t0) * 1e3)
+    return {name: min(ts) for name, ts in times.items()}
+
+
 def timeit_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

@@ -1,0 +1,87 @@
+"""PA softmax kernel benchmark -> BENCH_pa_softmax.json at the repo root.
+
+Measures the live Pallas row kernel (autotuned row blocks, shared
+``pa_prims`` helpers) against the frozen seed row kernel
+(``seed_reference.seed_pa_softmax_rows`` — hardcoded 8-row blocks), the
+pure-jnp value composition, and native ``jax.nn.softmax``, per the
+perf-trajectory protocol (ROADMAP.md "Benchmark protocol"). The tracked
+shape is the attention-scale score block (B*H*S, T) = (4096, 512).
+
+Correctness gates timing: the live kernel must be bit-identical to the jnp
+PA composition (full-row tiles change no arithmetic) and to the seed
+kernel.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._backend import use_interpret
+from repro.kernels.pa_softmax import pa_softmax, pa_softmax_ref
+from .common import emit, interleaved_min_ms
+from .seed_reference import seed_pa_softmax_rows
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_OUT = os.path.join(_ROOT, "BENCH_pa_softmax.json")
+
+R, C = 4096, 512          # attention-scale score rows: (B*H*S, T)
+_ROUNDS = 9
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((R, C)) * 3, jnp.float32)
+
+    f_live = jax.jit(pa_softmax)
+    f_ref = jax.jit(pa_softmax_ref)
+    f_native = jax.jit(lambda x: jax.nn.softmax(x, axis=-1))
+
+    # -- correctness gate -------------------------------------------------
+    got = np.asarray(f_live(x))
+    np.testing.assert_array_equal(got, np.asarray(f_ref(x)),
+                                  err_msg="live kernel diverged from the "
+                                          "jnp PA composition")
+    np.testing.assert_array_equal(got, np.asarray(seed_pa_softmax_rows(x)),
+                                  err_msg="live kernel diverged from seed")
+
+    fwd = interleaved_min_ms({
+        "pallas": (f_live, (x,)),
+        "seed_pallas": (seed_pa_softmax_rows, (x,)),
+        "jnp_composition": (f_ref, (x,)),
+        "native": (f_native, (x,)),
+    }, _ROUNDS)
+
+    us = {k: v * 1e3 for k, v in fwd.items()}
+    report = {
+        "benchmark": "pa_softmax",
+        "schema_version": 1,
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "pallas_mode": "interpret" if use_interpret() else "compiled",
+        "shape": {"rows": R, "cols": C},
+        "timing": {"rounds": _ROUNDS, "stat": "min", "unit": "us"},
+        "forward_us": {k: round(us[k], 1) for k in us},
+        "forward_speedup_vs_seed": {
+            "pallas": round(us["seed_pallas"] / us["pallas"], 2),
+        },
+        "slowdown_vs_native": {
+            "pallas": round(us["pallas"] / us["native"], 1),
+        },
+    }
+    with open(_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+    emit("pa_softmax/forward_pallas", us["pallas"],
+         f"seed={us['seed_pallas']:.0f}us "
+         f"speedup={report['forward_speedup_vs_seed']['pallas']:.1f}x")
+    emit("pa_softmax/json", 0.0, _OUT)
+
+
+if __name__ == "__main__":
+    main()

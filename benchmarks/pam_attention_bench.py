@@ -1,0 +1,173 @@
+"""Fused PAM attention benchmark -> BENCH_pam_attention.json at repo root.
+
+Measures the fused PAM flash attention (Pallas + jnp streaming engines,
+forward and fwd+bwd) against the frozen seed unfused `_sdpa` composition
+(``seed_reference.seed_pam_attention`` — seed-matmul scores, value-level PA
+softmax, seed-matmul AV), the *live* unfused composition
+(``pam_attention_ref`` on the current jnp engine), and native float SDPA —
+all in-process and interleaved per the perf-trajectory protocol (ROADMAP.md
+"Benchmark protocol").
+
+Correctness gates timing: the two fused engines must agree to f32 sum
+order, the fused forward and grads must track the live unfused composition
+within the DESIGN.md §4.2 contract tolerance, and the seed composition must
+agree with the live one within the engine contract — so the JSON can never
+report a fast-but-wrong kernel.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._backend import use_interpret
+from repro.kernels.flash_attention import pam_flash_attention
+from repro.kernels.flash_attention.ref import pam_attention_ref
+from .common import emit, interleaved_min_ms
+from .seed_reference import seed_pam_attention, seed_pam_attention_grads
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_OUT = os.path.join(_ROOT, "BENCH_pam_attention.json")
+
+B, H, S, T, DH = 2, 4, 512, 512, 64      # BH=8: the tracked reference shape
+_ROUNDS = 5
+_CONTRACT_ATOL = 0.2                     # DESIGN.md §4.2 fused-vs-unfused
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    q4 = jnp.asarray(rng.standard_normal((B, S, H, DH)), jnp.float32)
+    k4 = jnp.asarray(rng.standard_normal((B, T, H, DH)), jnp.float32)
+    v4 = jnp.asarray(rng.standard_normal((B, T, H, DH)), jnp.float32)
+    qf = q4.transpose(0, 2, 1, 3).reshape(B * H, S, DH)
+    kf = k4.transpose(0, 2, 1, 3).reshape(B * H, T, DH)
+    vf = v4.transpose(0, 2, 1, 3).reshape(B * H, T, DH)
+    pos_q, pos_k = jnp.arange(S), jnp.arange(T)
+    scale = 1.0 / np.sqrt(DH)
+    mask = (jnp.arange(T)[None] <= jnp.arange(S)[:, None])[None]
+    w = jnp.cos(jnp.arange(q4.size) * 0.1).reshape(q4.shape)
+    wf = w.transpose(0, 2, 1, 3).reshape(B * H, S, DH)
+
+    def fused(impl):
+        return jax.jit(lambda q, k, v: pam_flash_attention(
+            q, k, v, pos_q, pos_k, causal=True, scale=scale, impl=impl))
+
+    def fused_vag(impl):
+        return jax.jit(jax.value_and_grad(
+            lambda q, k, v: jnp.sum(pam_flash_attention(
+                q, k, v, pos_q, pos_k, causal=True, scale=scale,
+                impl=impl) * w), argnums=(0, 1, 2)))
+
+    f_pal, f_jnp = fused("pallas"), fused("jnp")
+    g_pal, g_jnp = fused_vag("pallas"), fused_vag("jnp")
+    f_live = jax.jit(lambda q, k, v: pam_attention_ref(q, k, v, mask,
+                                                       scale=scale))
+    g_live = jax.jit(jax.value_and_grad(
+        lambda q, k, v: jnp.sum(pam_attention_ref(q, k, v, mask,
+                                                  scale=scale) * wf),
+        argnums=(0, 1, 2)))
+    f_native = jax.jit(lambda q, k, v: jnp.einsum(
+        "bst,btd->bsd",
+        jax.nn.softmax(jnp.where(mask, jnp.einsum("bsd,btd->bst", q, k)
+                                 * np.float32(scale), -1e30), axis=-1), v))
+    g_native = jax.jit(jax.value_and_grad(
+        lambda q, k, v: jnp.sum(f_native(q, k, v) * wf), argnums=(0, 1, 2)))
+
+    # -- correctness gate -------------------------------------------------
+    o_pal = np.asarray(f_pal(q4, k4, v4))
+    o_jnp = np.asarray(f_jnp(q4, k4, v4))
+    o_live = np.asarray(f_live(qf, kf, vf)).reshape(B, H, S, DH).transpose(
+        0, 2, 1, 3)
+    o_seed = np.asarray(seed_pam_attention(qf, kf, vf)).reshape(
+        B, H, S, DH).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(o_pal, o_jnp, rtol=1e-5, atol=1e-5,
+                               err_msg="fused engines diverged")
+    np.testing.assert_allclose(o_pal, o_live, atol=_CONTRACT_ATOL,
+                               err_msg="fused vs unfused contract broken")
+    np.testing.assert_allclose(o_seed, o_live, rtol=2e-3, atol=2e-3,
+                               err_msg="seed vs live unfused diverged")
+    _, gp = g_pal(q4, k4, v4)
+    _, gj = g_jnp(q4, k4, v4)
+    _, gl = g_live(qf, kf, vf)
+    for a, b in zip(gp, gj):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg="fused backward engines diverged")
+    for name, a, b in zip(("dq", "dk", "dv"), gp, gl):
+        a = np.asarray(a).transpose(0, 2, 1, 3).reshape(B * H, -1, DH)
+        b = np.asarray(b)
+        tol = _CONTRACT_ATOL * max(1.0, float(np.abs(b).max()))
+        assert np.abs(a - b).max() <= tol, (
+            f"fused {name} vs unfused contract broken")
+
+    # -- forward ----------------------------------------------------------
+    fwd = interleaved_min_ms({
+        "fused_pallas": (f_pal, (q4, k4, v4)),
+        "fused_jnp": (f_jnp, (q4, k4, v4)),
+        "unfused_live": (f_live, (qf, kf, vf)),
+        "seed_unfused": (seed_pam_attention, (qf, kf, vf)),
+        "native": (f_native, (qf, kf, vf)),
+    }, _ROUNDS)
+
+    # -- fwd+bwd ----------------------------------------------------------
+    ones = jnp.ones_like(qf)
+    bwd = interleaved_min_ms({
+        "fused_pallas": (g_pal, (q4, k4, v4)),
+        "fused_jnp": (g_jnp, (q4, k4, v4)),
+        "unfused_live": (g_live, (qf, kf, vf)),
+        # the seed grads fn recomputes its forward internally -> fwd+bwd
+        "seed_unfused": (seed_pam_attention_grads, (qf, kf, vf, ones)),
+        "native": (g_native, (qf, kf, vf)),
+    }, _ROUNDS)
+
+    us_f = {k: v * 1e3 for k, v in fwd.items()}
+    us_b = {k: v * 1e3 for k, v in bwd.items()}
+    report = {
+        "benchmark": "pam_attention",
+        "schema_version": 1,
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "pallas_mode": "interpret" if use_interpret() else "compiled",
+        "shape": {"b": B, "h": H, "s": S, "t": T, "dh": DH, "causal": True},
+        "timing": {"rounds": _ROUNDS, "stat": "min", "unit": "us"},
+        "forward_us": {k: round(us_f[k], 1) for k in us_f},
+        "fwd_bwd_us": {k: round(us_b[k], 1) for k in us_b},
+        "forward_speedup_vs_seed": {
+            "fused_pallas": round(us_f["seed_unfused"] / us_f["fused_pallas"], 2),
+            "fused_jnp": round(us_f["seed_unfused"] / us_f["fused_jnp"], 2),
+            "unfused_live": round(us_f["seed_unfused"] / us_f["unfused_live"], 2),
+        },
+        "fwd_bwd_speedup_vs_seed": {
+            "fused_pallas": round(us_b["seed_unfused"] / us_b["fused_pallas"], 2),
+            "fused_jnp": round(us_b["seed_unfused"] / us_b["fused_jnp"], 2),
+        },
+        "forward_speedup_vs_unfused_live": {
+            "fused_pallas": round(us_f["unfused_live"] / us_f["fused_pallas"], 2),
+            "fused_jnp": round(us_f["unfused_live"] / us_f["fused_jnp"], 2),
+        },
+        "slowdown_vs_native": {
+            "fused_pallas": round(us_f["fused_pallas"] / us_f["native"], 1),
+            "fused_jnp": round(us_f["fused_jnp"] / us_f["native"], 1),
+        },
+    }
+    with open(_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+    emit("pam_attention/forward_fused_pallas", us_f["fused_pallas"],
+         f"seed={us_f['seed_unfused']:.0f}us "
+         f"speedup={report['forward_speedup_vs_seed']['fused_pallas']:.1f}x")
+    emit("pam_attention/forward_fused_jnp", us_f["fused_jnp"],
+         f"speedup={report['forward_speedup_vs_seed']['fused_jnp']:.1f}x")
+    emit("pam_attention/fwd_bwd_fused_pallas", us_b["fused_pallas"],
+         f"seed={us_b['seed_unfused']:.0f}us "
+         f"speedup={report['fwd_bwd_speedup_vs_seed']['fused_pallas']:.1f}x")
+    emit("pam_attention/json", 0.0, _OUT)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,18 @@
-"""Frozen PR-1 baseline implementations of the PAM matmul hot path.
+"""Frozen seed/baseline implementations of the tracked hot paths.
 
-These are verbatim-behavior copies of the seed engine (pre-vectorization):
-the jnp chunked scan built on full ``pam_value`` semantics, and the Pallas
-kernel that ran one rank-1 outer product per K element. They exist so every
-future ``BENCH_pam_matmul.json`` measures the live engine against the SAME
-fixed yardstick, in-process and under identical load — the perf trajectory
-stays comparable across PRs even as the engine itself is rewritten.
+These are verbatim-behavior copies of earlier-generation engines:
+
+  * PR-1 freeze — the seed PAM matmul (jnp chunked scan on full
+    ``pam_value`` semantics, and the scalar-k rank-1 Pallas kernel).
+  * PR-2 freeze — the seed ``pa_softmax`` row kernel (hardcoded 8-row
+    blocks) and the unfused `_sdpa` PAM attention composition
+    (seed-matmul scores -> value-level PA softmax -> seed-matmul AV), the
+    yardsticks for ``BENCH_pa_softmax.json`` / ``BENCH_pam_attention.json``.
+
+They exist so every future ``BENCH_<name>.json`` measures the live engine
+against the SAME fixed yardstick, in-process and under identical load — the
+perf trajectory stays comparable across PRs even as the engines are
+rewritten.
 
 Do not optimise this module. It is a measurement artifact, not product code.
 """
@@ -19,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.pam import pam_value
+from repro.core.pam import pam_value, padiv_value, paexp2_value
 
 _CHUNK_TARGET = 1 << 22          # seed's fixed chunk budget (elements)
 
@@ -123,3 +130,122 @@ def seed_pam_matmul_pallas(a, b, *, bm: int = 128, bn: int = 128,
         interpret=interpret,
     )(a, b)
     return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# PR-2 freeze: the seed pa_softmax row kernel (verbatim copy of the
+# pre-autotune kernel with its hardcoded 8-row blocks and local helpers).
+# ---------------------------------------------------------------------------
+
+_LOG2E = np.float32(1.4426950408889634)
+_SM_ROWS = 8
+
+
+def _sm_pam(a, b):
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
+    ovf = mag < -_BIAS
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where((a == 0.0) | (b == 0.0), 0.0, out)
+
+
+def _sm_padiv(a, b):
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) - (bi & _MAG) + _BIAS
+    ovf = mag < -_BIAS
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where(a == 0.0, 0.0, out)
+
+
+def _sm_paexp2(a):
+    ac = jnp.clip(a, -16384.0, 16384.0)
+    n = jnp.floor(ac)
+    man = jnp.round((ac - n) * np.float32(2.0**23)).astype(jnp.int32)
+    e = n.astype(jnp.int32) + (man >> 23) + 127
+    mag = (e << 23) | (man & np.int32(0x7FFFFF))
+    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, _MAX_FINITE))
+    return jax.lax.bitcast_convert_type(mag, jnp.float32)
+
+
+def _sm_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = _sm_paexp2(_sm_pam(x - m, jnp.full_like(x, _LOG2E)))
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = _sm_padiv(e, jnp.broadcast_to(s, e.shape))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def seed_pa_softmax_rows(x, *, interpret: bool = True):
+    """Seed PA softmax row kernel: fixed 8-row blocks over full rows."""
+    r, c = x.shape
+    rp = -(-r // _SM_ROWS) * _SM_ROWS
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, 0)))
+    out = pl.pallas_call(
+        _sm_kernel,
+        grid=(rp // _SM_ROWS,),
+        in_specs=[pl.BlockSpec((_SM_ROWS, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_SM_ROWS, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:r]
+
+
+# ---------------------------------------------------------------------------
+# PR-2 freeze: the unfused `_sdpa` PAM attention composition on the seed
+# matmul engine — PAM scores, scale-by-constant, causal mask, value-level PA
+# softmax, PAM AV — plus its manual approx-derivative backward (the paper's
+# Table 1 chain the live composition differentiates to).
+# ---------------------------------------------------------------------------
+
+_LN2 = np.float32(0.6931471805599453)
+
+
+def _seed_attn_probs(q, k, causal):
+    """(BH, S, T) PA softmax probs of the seed composition; also returns
+    (e, sig) for the backward chain."""
+    scale = np.float32(1.0 / np.sqrt(q.shape[-1]))
+    s = seed_pam_matmul_value(q, jnp.swapaxes(k, -1, -2))
+    s = pam_value(s, scale)
+    if causal:
+        ss, tt = q.shape[1], k.shape[1]
+        mask = jnp.arange(tt)[None] <= jnp.arange(ss)[:, None]
+        s = jnp.where(mask[None], s, np.float32(-1e30))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = paexp2_value(pam_value(s - m, _LOG2E))
+    sig = jnp.sum(e, axis=-1, keepdims=True)
+    return padiv_value(e, sig), e, sig
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def seed_pam_attention(q, k, v, *, causal: bool = True):
+    """Seed unfused PAM attention forward. q: (BH, S, Dh), k/v: (BH, T, Dh)."""
+    p, _, _ = _seed_attn_probs(q, k, causal)
+    return seed_pam_matmul_value(p, v)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def seed_pam_attention_grads(q, k, v, do, *, causal: bool = True):
+    """Approx-derivative backward of the seed composition (paper Table 1 at
+    matrix granularity, with the softmax chain at value level)."""
+    scale = np.float32(1.0 / np.sqrt(q.shape[-1]))
+    p, e, sig = _seed_attn_probs(q, k, causal)
+    dv = seed_pam_matmul_value(jnp.swapaxes(p, -1, -2), do)
+    dp = seed_pam_matmul_value(do, jnp.swapaxes(v, -1, -2))
+    dsig = -jnp.sum(padiv_value(pam_value(e, dp), pam_value(sig, sig)),
+                    axis=-1, keepdims=True)
+    de = padiv_value(dp, sig) + dsig
+    du = pam_value(pam_value(e, _LN2), de)
+    ds = pam_value(pam_value(du, _LOG2E), scale)
+    dq = seed_pam_matmul_value(ds, k)
+    dk = seed_pam_matmul_value(jnp.swapaxes(ds, -1, -2), q)
+    return dq, dk, dv

@@ -1,0 +1,64 @@
+"""Shape-bucketed tile-parameter autotune table shared by kernel families.
+
+One registry for every kernel family's tunables, keyed by
+``(op, backend, *power-of-two shape buckets)``. The PR-1 mechanism
+(``register_tile_params`` on the matmul engine) is now a thin wrapper over
+this table; ``pa_softmax`` (row-block size) and the fused PAM attention
+(``bq``/``bk``/``g``) resolve through the same registry, so a measured
+tuning sweep feeds every kernel through one interface.
+
+Params are opaque tuples whose meaning is per-op:
+
+  * ``pam_matmul``:    (bm, bn, bk, g)  keyed by (M, N, K)
+  * ``pa_softmax``:    (rows,)          keyed by (R, C)
+  * ``pam_attention``: (bq, bk, g)      keyed by (S, T, Dh)
+"""
+from __future__ import annotations
+
+# Defaults per (op, backend); per-shape entries in _TABLE override.
+_DEFAULTS = {
+    ("pam_matmul", "interpret"): (256, 256, 256, 16),
+    ("pam_matmul", "tpu"): (128, 128, 512, 8),
+    ("pa_softmax", "interpret"): (8,),
+    ("pa_softmax", "tpu"): (8,),
+    ("pam_attention", "interpret"): (256, 256, 16),
+    ("pam_attention", "tpu"): (128, 128, 8),
+}
+
+_TABLE = {
+    # pam_matmul: measured on the CPU interpret reference host (see
+    # BENCH_pam_matmul.json trajectory): mid-size squares like one big tile
+    # with g=16 groups.
+    ("pam_matmul", "interpret", 256, 256, 256): (256, 256, 256, 16),
+    ("pam_matmul", "interpret", 512, 512, 512): (256, 256, 512, 16),
+    ("pam_matmul", "interpret", 1024, 1024, 1024): (256, 256, 512, 16),
+    # pa_softmax: attention-scale score rows (R = B*H*S, C = T). Wider row
+    # blocks amortise interpret-mode grid-step overhead on the big-R shapes
+    # the attention path produces — measured 26x over the seed's rows=8 at
+    # (4096, 512) (BENCH_pa_softmax.json). The tpu default stays at 8
+    # (sublane-aligned); these entries are interpret-host measurements.
+    ("pa_softmax", "interpret", 4096, 512): (256,),
+    ("pa_softmax", "interpret", 2048, 512): (128,),
+    ("pa_softmax", "interpret", 1024, 512): (64,),
+    # pam_attention: measured at the BENCH_pam_attention.json reference
+    # shape (BH=8, S=T=512, Dh=64) on the CPU interpret host — full-S query
+    # tiles with half-T KV blocks win (34ms vs 50ms at 256/256).
+    ("pam_attention", "interpret", 512, 512, 64): (512, 256, 16),
+}
+
+
+def _bucket(x: int) -> int:
+    return min(1 << max(0, int(x - 1).bit_length()), 4096)
+
+
+def register_tile_params(op: str, shape, params, *,
+                         backend: str = "interpret") -> None:
+    """Add/override the params tuple for an op's shape bucket."""
+    _TABLE[(op, backend) + tuple(_bucket(int(s)) for s in shape)] = tuple(params)
+
+
+def tile_params(op: str, shape, interpret: bool):
+    """Resolve an op's params tuple for a problem shape."""
+    backend = "interpret" if interpret else "tpu"
+    key = (op, backend) + tuple(_bucket(int(s)) for s in shape)
+    return _TABLE.get(key, _DEFAULTS[(op, backend)])

@@ -1,4 +1,6 @@
 from .ops import flash_attention
-from .ref import attention_ref
+from .ref import attention_ref, pam_attention_ref
+from .pam_ops import pam_flash_attention
 
-__all__ = ["flash_attention", "attention_ref"]
+__all__ = ["flash_attention", "attention_ref", "pam_flash_attention",
+           "pam_attention_ref"]

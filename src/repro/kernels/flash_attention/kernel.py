@@ -30,7 +30,7 @@ _NEG = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-            *, bq: int, bk: int, nk: int, scale: float, causal: bool):
+            *, bq: int, bk: int, nk: int, t: int, scale: float, causal: bool):
     kv_step = pl.program_id(2)
 
     @pl.when(kv_step == 0)
@@ -46,12 +46,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                             preferred_element_type=jnp.float32)
     s = s * np.float32(scale)              # (bq, bk)
 
+    # Padded key rows (k_pos >= t) are masked POSITIONALLY in every mode:
+    # zero-padded keys produce score 0, which would get nonzero softmax
+    # weight in the non-causal path if left unmasked.
+    k_pos = kv_step * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = k_pos < t
     if causal:
         q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
             jnp.int32, (bq, bk), 0)
-        k_pos = kv_step * bk + jax.lax.broadcasted_iota(
-            jnp.int32, (bq, bk), 1)
-        s = jnp.where(k_pos <= q_pos, s, _NEG)
+        valid &= k_pos <= q_pos
+    s = jnp.where(valid, s, _NEG)
 
     m_prev = m_ref[...]                    # (bq, 1)
     l_prev = l_ref[...]
@@ -82,14 +86,11 @@ def flash_attention_bh(q, k, v, *, bq: int = 128, bk: int = 128,
     qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
-    # padded keys are masked out positionally in the causal path; for the
-    # non-causal path mask via a huge-negative key trick is unnecessary
-    # because padded k rows are zeros -> we rely on causal=True for LM use.
     nk = tp // bk_
     scale = 1.0 / np.sqrt(dh)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, bq=bq_, bk=bk_, nk=nk, scale=scale,
+        functools.partial(_kernel, bq=bq_, bk=bk_, nk=nk, t=t, scale=scale,
                           causal=causal),
         grid=(bh, sp // bq_, nk),
         in_specs=[

@@ -1,0 +1,346 @@
+"""Pallas kernels: fused PAM flash attention, forward + recompute backward.
+
+One kernel streams KV blocks through VMEM computing all three stages of the
+paper's attention in PA arithmetic — the PAM score products (the grouped
+bit-level tile engine of DESIGN.md §2.1), the PA online-softmax (PAM by
+log2(e) -> paexp2 -> running max/sum with PA rescaling, the streaming form
+of the ``pa_softmax`` row kernel), and the PAM AV product — so in PAM mode
+the quadratic S×T score tensor never exists in HBM (DESIGN.md §4).
+
+Masking is positional via explicit per-token position arrays (``q_pos``,
+``k_pos``) streamed alongside the operands: ``k_pos < 0`` marks
+padded/empty KV slots (rejected in EVERY mode), causal compares
+``k_pos <= q_pos`` and a static ``window`` bounds ``q_pos - k_pos`` — the
+same scheme the float flash kernel uses, generalised to arbitrary position
+vectors so rolling KV caches work unchanged.
+
+The backward is recompute-based (DESIGN.md §4.3): forward saves only the
+per-row streaming stats (m = running max == true row max, l = streaming PA
+sum); three sweeps re-derive score tiles on the fly and evaluate the
+*approx-derivative* PA backward of the unfused composition —
+``dsig`` (the row-scalar padiv cotangent), then dQ, then dK/dV — entirely
+with PAM tile products. Grads match the unfused `_sdpa` composition within
+the streaming-rescale tolerance (DESIGN.md §4.2).
+
+Validated in interpret mode on CPU (the repo's reference backend); the
+grids and block specs follow the same batched-grid conventions as
+``pam_matmul`` for TPU compilation.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..pa_prims import _pam, _padiv, _paexp2, _pam_dot, _LOG2E, _LN2
+
+_NEG = np.float32(-1e30)
+_L2E = np.float32(_LOG2E)
+_LN2F = np.float32(_LN2)
+
+
+def _masked_scores(q, k, qp, kp, *, g, scale, causal, window):
+    """PAM score tile with positional masking.
+
+    q: (bq, dh), k: (bk, dh), qp: (bq,) int32, kp: (bk,) int32. Masked
+    entries become exactly -1e30 — the same value the unfused path's
+    ``where`` select uses, so paexp2 flushes them to an exact 0.
+    """
+    s = _pam_dot(q, k.T, g)                        # (bq, bk)
+    if scale is not None:
+        s = _pam(s, np.float32(scale))
+    valid = (kp >= 0)[None, :]
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        valid &= (qp[:, None] - kp[None, :]) < window
+    return jnp.where(valid, s, _NEG)
+
+
+# ---------------------------------------------------------------------------
+# Forward: streaming PA online-softmax. Outputs o plus the per-row stats
+# (m, l) the recompute backward needs.
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref,
+                l_out_ref, acc_ref, m_ref, l_ref,
+                *, g, nk, causal, window, scale):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # (bq, dh)
+    k = k_ref[0]                                   # (bk, dh)
+    v = v_ref[0]                                   # (bk, dh)
+    s = _masked_scores(q, k, qp_ref[0], kp_ref[0], g=g, scale=scale,
+                       causal=causal, window=window)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # PA rescale: alpha == 1.0 exactly when the running max is unchanged
+    # (PAM by 1.0 is the identity), so rescale error only accrues on steps
+    # that raise the max (DESIGN.md §4.2).
+    alpha = _paexp2(_pam(m_prev - m_new, _L2E))
+    p = _paexp2(_pam(s - m_new, _L2E))             # (bq, bk)
+    l_ref[...] = _pam(l_prev, alpha) + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = _pam(acc_ref[...], alpha) + _pam_dot(p, v, g)
+    m_ref[...] = m_new
+
+    @pl.when(kv == nk - 1)
+    def _out():
+        o_ref[0] = _padiv(acc_ref[...], l_ref[...])
+        m_out_ref[0] = m_ref[...][:, 0]
+        l_out_ref[0] = l_ref[...][:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "g", "interpret"))
+def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
+                               window, scale, bq: int, bk: int, g: int,
+                               interpret: bool):
+    """q: (BH, S, Dh), k/v: (BH, T, Dh), q_pos: (S,), k_pos: (T,) int32.
+
+    Returns (o, m, l) with m/l the (BH, S) streaming row stats. Padding is
+    positional: padded KV slots carry k_pos == -1 and are masked in every
+    mode; padded query rows are cropped.
+    """
+    bh, s_len, dh = q.shape
+    t = k.shape[1]
+    bq_, bk_ = min(bq, s_len), min(bk, t)
+    sp, tp = -(-s_len // bq_) * bq_, -(-t // bk_) * bk_
+    qp = jnp.pad(q, ((0, 0), (0, sp - s_len), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    qpos = jnp.pad(q_pos.astype(jnp.int32), (0, sp - s_len),
+                   constant_values=-1)[None]
+    kpos = jnp.pad(k_pos.astype(jnp.int32), (0, tp - t),
+                   constant_values=-1)[None]
+    nk = tp // bk_
+
+    o, m, l = pl.pallas_call(
+        functools.partial(_fwd_kernel, g=g, nk=nk, causal=causal,
+                          window=window, scale=scale),
+        grid=(bh, sp // bq_, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_), lambda b, i, j: (0, i)),
+            pl.BlockSpec((1, bk_), lambda b, i, j: (0, j)),
+            pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq_), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq_), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sp), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq_, dh), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, qp, kp, vp)
+    return o[:, :s_len], m[:, :s_len], l[:, :s_len]
+
+
+# ---------------------------------------------------------------------------
+# Backward sweep 1: dsig[i] = -sum_j padiv(pam(e_ij, dP_ij), pam(l_i, l_i))
+# — the row-scalar cotangent of the PA softmax's sum, needed as a complete
+# row reduction before any dS can be formed (DESIGN.md §4.3).
+# ---------------------------------------------------------------------------
+
+def _dsig_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
+                 dsig_ref, acc_ref, *, g, nk, causal, window, scale):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = _masked_scores(q_ref[0], k_ref[0], qp_ref[0], kp_ref[0], g=g,
+                       scale=scale, causal=causal, window=window)
+    m = m_ref[0][:, None]                          # (bq, 1)
+    l = l_ref[0][:, None]
+    e = _paexp2(_pam(s - m, _L2E))                 # masked entries: exact 0
+    dp = _pam_dot(do_ref[0], v_ref[0].T, g)        # (bq, bk)
+    acc_ref[...] += jnp.sum(_padiv(_pam(e, dp), _pam(l, l)),
+                            axis=-1, keepdims=True)
+
+    @pl.when(kv == nk - 1)
+    def _out():
+        dsig_ref[0] = -acc_ref[...][:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward sweep 2: dQ. dS is the approx-deriv chain of the unfused
+# composition: d_e = padiv(dP, l) + dsig; d_u = pam(pam(e, ln2), d_e);
+# dS = pam(d_u, log2e) [·̂ scale]; dQ = dS ·̂ K.
+# ---------------------------------------------------------------------------
+
+def _ds_tile(e, dp, l, dsig, *, scale):
+    de = _padiv(dp, l) + dsig
+    du = _pam(_pam(e, _LN2F), de)
+    ds = _pam(du, _L2E)
+    if scale is not None:
+        ds = _pam(ds, np.float32(scale))
+    return ds
+
+
+def _dq_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
+               dsig_ref, dq_ref, acc_ref, *, g, nk, causal, window, scale):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = _masked_scores(q_ref[0], k_ref[0], qp_ref[0], kp_ref[0], g=g,
+                       scale=scale, causal=causal, window=window)
+    m = m_ref[0][:, None]
+    l = l_ref[0][:, None]
+    dsig = dsig_ref[0][:, None]
+    e = _paexp2(_pam(s - m, _L2E))
+    dp = _pam_dot(do_ref[0], v_ref[0].T, g)
+    ds = _ds_tile(e, dp, l, dsig, scale=scale)
+    acc_ref[...] += _pam_dot(ds, k_ref[0], g)      # (bq, dh)
+
+    @pl.when(kv == nk - 1)
+    def _out():
+        dq_ref[0] = acc_ref[...]
+
+
+# ---------------------------------------------------------------------------
+# Backward sweep 3: dK/dV with the query dim innermost — each KV tile's
+# accumulators live in VMEM across all query steps.
+#   dV = Pᵀ ·̂ dO  with P = padiv(e, l);   dK = dSᵀ ·̂ Q.
+# ---------------------------------------------------------------------------
+
+def _dkv_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
+                dsig_ref, dk_ref, dv_ref, dk_acc, dv_acc,
+                *, g, nq, causal, window, scale):
+    iq = pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0]
+    do = do_ref[0]
+    s = _masked_scores(q, k_ref[0], qp_ref[0], kp_ref[0], g=g, scale=scale,
+                       causal=causal, window=window)
+    m = m_ref[0][:, None]
+    l = l_ref[0][:, None]
+    dsig = dsig_ref[0][:, None]
+    e = _paexp2(_pam(s - m, _L2E))
+    p = _padiv(e, l)                               # (bq, bk); masked: exact 0
+    dv_acc[...] += _pam_dot(p.T, do, g)            # (bk, dh)
+    dp = _pam_dot(do, v_ref[0].T, g)
+    ds = _ds_tile(e, dp, l, dsig, scale=scale)
+    dk_acc[...] += _pam_dot(ds.T, q, g)            # (bk, dh)
+
+    @pl.when(iq == nq - 1)
+    def _out():
+        dk_ref[0] = dk_acc[...]
+        dv_ref[0] = dv_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "g", "interpret"))
+def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, m, l, do, *,
+                               causal: bool, window, scale, bq: int, bk: int,
+                               g: int, interpret: bool):
+    """Recompute backward: (dq, dk, dv) from saved row stats (m, l)."""
+    bh, s_len, dh = q.shape
+    t = k.shape[1]
+    bq_, bk_ = min(bq, s_len), min(bk, t)
+    sp, tp = -(-s_len // bq_) * bq_, -(-t // bk_) * bk_
+    qp = jnp.pad(q, ((0, 0), (0, sp - s_len), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    dop = jnp.pad(do, ((0, 0), (0, sp - s_len), (0, 0)))
+    mp = jnp.pad(m, ((0, 0), (0, sp - s_len)), constant_values=_NEG)
+    lp = jnp.pad(l, ((0, 0), (0, sp - s_len)), constant_values=1.0)
+    qpos = jnp.pad(q_pos.astype(jnp.int32), (0, sp - s_len),
+                   constant_values=-1)[None]
+    kpos = jnp.pad(k_pos.astype(jnp.int32), (0, tp - t),
+                   constant_values=-1)[None]
+    nk, nq = tp // bk_, sp // bq_
+
+    pos_q_spec = pl.BlockSpec((1, bq_), lambda b, i, j: (0, i))
+    pos_k_spec = pl.BlockSpec((1, bk_), lambda b, i, j: (0, j))
+    q_spec = pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0))
+    kv_spec = pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0))
+    row_spec = pl.BlockSpec((1, bq_), lambda b, i, j: (b, i))
+
+    dsig = pl.pallas_call(
+        functools.partial(_dsig_kernel, g=g, nk=nk, causal=causal,
+                          window=window, scale=scale),
+        grid=(bh, nq, nk),
+        in_specs=[pos_q_spec, pos_k_spec, q_spec, kv_spec, kv_spec, q_spec,
+                  row_spec, row_spec],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq_, 1), jnp.float32)],
+        interpret=interpret,
+    )(qpos, kpos, qp, kp, vp, dop, mp, lp)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, g=g, nk=nk, causal=causal,
+                          window=window, scale=scale),
+        grid=(bh, nq, nk),
+        in_specs=[pos_q_spec, pos_k_spec, q_spec, kv_spec, kv_spec, q_spec,
+                  row_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sp, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq_, dh), jnp.float32)],
+        interpret=interpret,
+    )(qpos, kpos, qp, kp, vp, dop, mp, lp, dsig)
+
+    # KV-outer grid for dK/dV: positions/q/do are indexed by the *inner*
+    # grid dim (program_id(2)), KV tiles by program_id(1).
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, g=g, nq=nq, causal=causal,
+                          window=window, scale=scale),
+        grid=(bh, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq_), lambda b, j, i: (0, i)),
+            pl.BlockSpec((1, bk_), lambda b, j, i: (0, j)),
+            pl.BlockSpec((1, bq_, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bq_, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq_), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq_), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq_), lambda b, j, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, tp, dh), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk_, dh), jnp.float32),
+            pltpu.VMEM((bk_, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, qp, kp, vp, dop, mp, lp, dsig)
+
+    return dq[:, :s_len], dk[:, :t], dv[:, :t]

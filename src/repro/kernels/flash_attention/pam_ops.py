@@ -1,0 +1,223 @@
+"""Public wrapper: fused PAM flash attention with a Pallas engine, a jnp
+streaming fallback, and a recompute custom_vjp.
+
+``pam_flash_attention`` mirrors the unfused `_sdpa` PAM composition
+(scores -> PA softmax -> AV, ``models/attention.py``) but never
+materialises the S×T score tensor: the Pallas engine streams KV blocks
+through VMEM (``pam_kernel.py``); the jnp engine is the same streaming
+algorithm as a ``lax.scan`` over KV blocks built on the core PAM matmul
+engine — the portable fallback for non-Pallas backends, with the same
+O(S·Dh) live-memory profile.
+
+Both engines share one custom_vjp: forward saves only (q, k, v, positions,
+row stats), backward recomputes score tiles and evaluates the
+approx-derivative PA chain of the unfused composition (DESIGN.md §4.3).
+Numeric contract vs the unfused composition: DESIGN.md §4.2.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.matmul import _pam_matmul_value
+from repro.core.pam import pam_value, padiv_value, paexp2_value
+
+from .. import autotune
+from .._backend import use_interpret
+from ..pa_prims import _LOG2E, _LN2
+from . import pam_kernel as _pk
+
+_NEG = np.float32(-1e30)
+
+
+def _swap(x):
+    return jnp.swapaxes(x, -1, -2)
+
+
+# ---------------------------------------------------------------------------
+# jnp streaming engine: identical math to the Pallas kernels, as a scan over
+# KV blocks. Carries (acc, m, l); the backward adds a dsig scan then one
+# scan producing dq (accumulated) and dk/dv (per-block stacked outputs).
+# ---------------------------------------------------------------------------
+
+def _kv_blocks(k, v, k_pos, bc):
+    t = k.shape[1]
+    tp = -(-t // bc) * bc
+    kb = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
+    vb = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    kpos = jnp.pad(k_pos.astype(jnp.int32), (0, tp - t), constant_values=-1)
+    nb = tp // bc
+    kb = jnp.moveaxis(kb.reshape(kb.shape[0], nb, bc, -1), 1, 0)
+    vb = jnp.moveaxis(vb.reshape(vb.shape[0], nb, bc, -1), 1, 0)
+    return kb, vb, kpos.reshape(nb, bc), tp
+
+
+def _block_scores(q, kblk, q_pos, kpblk, *, causal, window, scale):
+    """(BH, S, bc) masked PAM scores for one KV block."""
+    s = _pam_matmul_value(q, _swap(kblk))
+    if scale is not None:
+        s = pam_value(s, np.float32(scale))
+    valid = (kpblk >= 0)[None, None, :]
+    if causal:
+        valid = valid & (kpblk[None, None, :] <= q_pos[None, :, None])
+    if window is not None:
+        valid = valid & ((q_pos[None, :, None] - kpblk[None, None, :])
+                         < window)
+    return jnp.where(valid, s, _NEG)
+
+
+def _jnp_fwd(q, k, v, q_pos, k_pos, *, causal, window, scale, bc):
+    bh, s_len, dh = q.shape
+    kb, vb, kpb, _ = _kv_blocks(k, v, k_pos, bc)
+    qpos = q_pos.astype(jnp.int32)
+
+    def step(carry, xs):
+        acc, m_run, l_run = carry
+        kblk, vblk, kpblk = xs
+        s = _block_scores(q, kblk, qpos, kpblk, causal=causal, window=window,
+                          scale=scale)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        alpha = paexp2_value(pam_value(m_run - m_new, _LOG2E))
+        p = paexp2_value(pam_value(s - m_new, _LOG2E))
+        l_new = pam_value(l_run, alpha) + jnp.sum(p, axis=-1, keepdims=True)
+        acc = pam_value(acc, alpha) + _pam_matmul_value(p, vblk)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((bh, s_len, dh), jnp.float32)
+    m0 = jnp.full((bh, s_len, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((bh, s_len, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, kpb))
+    o = padiv_value(acc, l)
+    return o, m[..., 0], l[..., 0]
+
+
+def _jnp_bwd(q, k, v, q_pos, k_pos, m, l, do, *, causal, window, scale, bc):
+    bh, s_len, dh = q.shape
+    t = k.shape[1]
+    kb, vb, kpb, tp = _kv_blocks(k, v, k_pos, bc)
+    qpos = q_pos.astype(jnp.int32)
+    m = m[..., None]
+    l = l[..., None]
+    ll = pam_value(l, l)
+
+    def recompute(kblk, vblk, kpblk):
+        s = _block_scores(q, kblk, qpos, kpblk, causal=causal, window=window,
+                          scale=scale)
+        e = paexp2_value(pam_value(s - m, _LOG2E))
+        dp = _pam_matmul_value(do, _swap(vblk))
+        return e, dp
+
+    def dsig_step(acc, xs):
+        e, dp = recompute(*xs)
+        return acc + jnp.sum(padiv_value(pam_value(e, dp), ll), axis=-1,
+                             keepdims=True), None
+
+    dsig0 = jnp.zeros((bh, s_len, 1), jnp.float32)
+    dsig, _ = jax.lax.scan(dsig_step, dsig0, (kb, vb, kpb))
+    dsig = -dsig
+
+    def grad_step(dq_acc, xs):
+        kblk, vblk, kpblk = xs
+        e, dp = recompute(kblk, vblk, kpblk)
+        p = padiv_value(e, l)
+        dv_blk = _pam_matmul_value(_swap(p), do)           # (BH, bc, Dh)
+        de = padiv_value(dp, l) + dsig
+        du = pam_value(pam_value(e, _LN2), de)
+        ds = pam_value(du, _LOG2E)
+        if scale is not None:
+            ds = pam_value(ds, np.float32(scale))
+        dk_blk = _pam_matmul_value(_swap(ds), q)           # (BH, bc, Dh)
+        return dq_acc + _pam_matmul_value(ds, kblk), (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((bh, s_len, dh), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(grad_step, dq0, (kb, vb, kpb))
+    dk = jnp.moveaxis(dkb, 0, 1).reshape(bh, tp, dh)[:, :t]
+    dv = jnp.moveaxis(dvb, 0, 1).reshape(bh, tp, dh)[:, :t]
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp glue (per static numeric configuration).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _build(causal: bool, window, scale, impl: str, bq: int, bk: int, g: int,
+           interpret: bool):
+    if impl == "pallas":
+        def fwd_fn(q, k, v, qpos, kpos):
+            return _pk.pam_flash_attention_fwd_bh(
+                q, k, v, qpos, kpos, causal=causal, window=window,
+                scale=scale, bq=bq, bk=bk, g=g, interpret=interpret)
+
+        def bwd_fn(q, k, v, qpos, kpos, m, l, do):
+            return _pk.pam_flash_attention_bwd_bh(
+                q, k, v, qpos, kpos, m, l, do, causal=causal, window=window,
+                scale=scale, bq=bq, bk=bk, g=g, interpret=interpret)
+    else:
+        fwd_jit = jax.jit(functools.partial(
+            _jnp_fwd, causal=causal, window=window, scale=scale, bc=bk))
+        bwd_jit = jax.jit(functools.partial(
+            _jnp_bwd, causal=causal, window=window, scale=scale, bc=bk))
+
+        def fwd_fn(q, k, v, qpos, kpos):
+            return fwd_jit(q, k, v, qpos, kpos)
+
+        def bwd_fn(q, k, v, qpos, kpos, m, l, do):
+            return bwd_jit(q, k, v, qpos, kpos, m, l, do)
+
+    @jax.custom_vjp
+    def att(q, k, v, qpos, kpos):
+        return fwd_fn(q, k, v, qpos, kpos)[0]
+
+    def fwd(q, k, v, qpos, kpos):
+        o, m, l = fwd_fn(q, k, v, qpos, kpos)
+        return o, (q, k, v, qpos, kpos, m, l)
+
+    def bwd(res, do):
+        q, k, v, qpos, kpos, m, l = res
+        dq, dk, dv = bwd_fn(q, k, v, qpos, kpos, m, l,
+                            jnp.asarray(do, jnp.float32))
+        zero = lambda p: np.zeros(np.shape(p), jax.dtypes.float0)
+        return dq, dk, dv, zero(qpos), zero(kpos)
+
+    att.defvjp(fwd, bwd)
+    return att
+
+
+def pam_flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                        window=None, scale=None, impl: str = "pallas",
+                        bq=None, bk=None, g=None):
+    """Fused PAM flash attention over (B, S, H, Dh) GQA layouts.
+
+    q: (B, S, Hq, Dh), k/v: (B, T, Hkv, Dh) with Hq % Hkv == 0;
+    q_pos: (S,), k_pos: (T,) absolute positions (k_pos < 0 = empty slot).
+    ``scale``: None means the caller already folded the 1/sqrt(dh) into q
+    (attn_scale_in_q); a float is PAM-multiplied into the score tiles —
+    matching ``scale_const`` on the unfused score tensor. ``impl``:
+    "pallas" (kernels; interpret on CPU) or "jnp" (streaming scan).
+    """
+    b, s_len, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = jnp.asarray(q, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, s_len, dh)
+    kf = jnp.asarray(k, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+    vf = jnp.asarray(v, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+
+    interpret = use_interpret()
+    abq, abk, ag = autotune.tile_params("pam_attention", (s_len, t, dh),
+                                        interpret)
+    bq_, bk_, g_ = bq or abq, bk or abk, g or ag
+    scale_ = None if scale is None else float(np.float32(scale))
+    window_ = None if window is None else int(window)
+
+    att = _build(bool(causal), window_, scale_, impl, int(bq_), int(bk_),
+                 int(g_), interpret)
+    o = att(qf, kf, vf, jnp.asarray(q_pos, jnp.int32),
+            jnp.asarray(k_pos, jnp.int32))
+    return o.reshape(b, hq, s_len, dh).transpose(0, 2, 1, 3)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the flash attention kernel."""
+"""Pure-jnp oracles for the flash attention kernels."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -14,3 +14,52 @@ def attention_ref(q, k, v, causal: bool = True):
         s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def pam_flash_oracle(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                     scale=None):
+    """Materialised fused-SEMANTICS reference: e against the true row max,
+    sigma = sum(e), O = padiv(e ·̂ V, sigma) — exactly what the streaming
+    kernel computes minus the streaming rescales. In the no-rescale regime
+    (every row's max lands in the first KV block) the kernel must match
+    this to f32 sum-order only (DESIGN.md §4.2).
+    """
+    from repro.core.matmul import _pam_matmul_value
+    from repro.core.pam import pam_value, padiv_value, paexp2_value
+    from repro.kernels.pa_prims import _LOG2E
+
+    s = _pam_matmul_value(jnp.asarray(q, jnp.float32),
+                          jnp.swapaxes(jnp.asarray(k, jnp.float32), -1, -2))
+    if scale is not None:
+        s = pam_value(s, np.float32(scale))
+    kp, qp = jnp.asarray(k_pos, jnp.int32), jnp.asarray(q_pos, jnp.int32)
+    valid = (kp >= 0)[None, None, :]
+    if causal:
+        valid = valid & (kp[None, None, :] <= qp[None, :, None])
+    if window is not None:
+        valid = valid & ((qp[None, :, None] - kp[None, None, :]) < window)
+    s = jnp.where(valid, s, np.float32(-1e30))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = paexp2_value(pam_value(s - m, _LOG2E))
+    sig = jnp.sum(e, axis=-1, keepdims=True)
+    av = _pam_matmul_value(e, jnp.asarray(v, jnp.float32))
+    return padiv_value(av, sig)
+
+
+def pam_attention_ref(q, k, v, mask, *, scale=None):
+    """Differentiable unfused PAM attention composition (the `_sdpa` chain:
+    PAM scores -> PA softmax -> PAM AV, approx derivs on the jnp engine).
+
+    q: (BH, S, Dh), k/v: (BH, T, Dh), mask: broadcastable to (BH, S, T).
+    ``scale`` is PAM-multiplied into the scores (scale_const's placement
+    when attn_scale_in_q is off); None means q is pre-scaled.
+    """
+    from repro.core import PAConfig, pa_matmul, pa_softmax, pam
+
+    pa = PAConfig(mode="full", impl="jnp")
+    s = pa_matmul(jnp.asarray(q, jnp.float32),
+                  jnp.swapaxes(jnp.asarray(k, jnp.float32), -1, -2), pa)
+    if scale is not None:
+        s = pam(s, np.float32(scale))
+    p = pa_softmax(s, pa, where=mask)
+    return pa_matmul(p, jnp.asarray(v, jnp.float32), pa)

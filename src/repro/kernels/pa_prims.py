@@ -1,0 +1,163 @@
+"""Shared PA bit-twiddling primitives for every Pallas kernel family.
+
+This is the single kernel-side home of the float32 bit constants and the
+piecewise-affine scalar helpers (``_pam`` / ``_padiv`` / ``_paexp2`` /
+``_palog2``) that were previously duplicated across ``pa_softmax``,
+``pam_eltwise`` and ``pam_matmul``; it also hosts the grouped PAM *tile*
+product (``_prep_tiles`` + ``_grouped_pam_sum``, DESIGN.md §2.1) that both
+the matmul kernels and the fused PAM flash-attention kernel compose.
+
+The constants are spelled as literal numpy int32 scalars — not imports from
+``core.floatbits`` — so a kernel body closes over plain immediates; the
+asserts below pin them to the canonical ``floatbits`` definitions, making a
+drift impossible.
+
+Scalar-helper semantics match the seed kernels exactly: zero operands force
+a zero (0.0-signed) result, denormals compare equal to 0.0 under the
+flush-to-zero backends we target, inf/nan inputs are OUT of contract for
+``_pam``/``_padiv`` (use ``core.pam`` where full IEEE edges matter), and
+``_paexp2`` overflows to +inf at a >= 128 exactly like ``paexp2_value``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import floatbits as _fb
+
+# ---------------------------------------------------------------------------
+# Bit-field constants (int32 domain). Literals; pinned to core/floatbits.py.
+# ---------------------------------------------------------------------------
+_SIGN = np.int32(-(2**31))
+_MAG = np.int32(0x7FFFFFFF)
+_EXP = np.int32(0x7F800000)
+_MAN = np.int32(0x007FFFFF)
+_BIAS = np.int32(127 << 23)
+_MIN_NORM = np.int32(1 << 23)
+_MAX_FINITE = np.int32(0x7F7FFFFF)
+_MAX_EXPF = np.int32(254 << 23)
+# A-side zero sentinel for the matmul-style tile product (see the derivation
+# at floatbits.PAM_ZERO_SENTINEL / DESIGN.md §2.3).
+_ZSENT = np.int32(-(1 << 30))
+
+assert _SIGN == _fb.SIGN_MASK and _MAG == _fb.MAG_MASK
+assert _EXP == _fb.EXP_MASK and _MAN == _fb.MAN_MASK
+assert _BIAS == _fb.BIAS_SHIFTED and _MIN_NORM == _fb.MIN_NORM
+assert _MAX_FINITE == _fb.MAX_FINITE and _MAX_EXPF == _fb.MAX_EXP_FIELD
+assert _ZSENT == _fb.PAM_ZERO_SENTINEL
+
+_LOG2E = np.float32(1.4426950408889634)
+_LN2 = np.float32(0.6931471805599453)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise PA helpers (VPU-friendly: pure int vector ops + one select).
+# ---------------------------------------------------------------------------
+
+def _pam(a, b):
+    """Elementwise PAM a ·̂ b for finite/zero float32 (kernel contract)."""
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
+    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where((a == 0.0) | (b == 0.0), 0.0, out)
+
+
+def _padiv(a, b):
+    """Elementwise PA division a ÷̂ b for finite/zero a, finite nonzero b."""
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    sign = (ai ^ bi) & _SIGN
+    mag = (ai & _MAG) - (bi & _MAG) + _BIAS
+    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
+    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+    mag = jnp.where(ovf, _MAX_FINITE, mag)
+    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
+    return jnp.where(a == 0.0, 0.0, out)
+
+
+def _paexp2(a):
+    """Elementwise paexp2 (paper Eq. 9); overflows to +inf at a >= 128."""
+    ac = jnp.clip(a, -16384.0, 16384.0)
+    n = jnp.floor(ac)
+    man = jnp.round((ac - n) * np.float32(2.0**23)).astype(jnp.int32)
+    e = n.astype(jnp.int32) + (man >> 23) + 127
+    mag = (e << 23) | (man & _MAN)
+    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, _MAX_FINITE))
+    out = jax.lax.bitcast_convert_type(mag, jnp.float32)
+    return jnp.where(a >= 128.0, jnp.float32(jnp.inf), out)
+
+
+def _palog2(a):
+    """Elementwise palog2 (paper Eq. 10) for a > 0."""
+    i = jax.lax.bitcast_convert_type(a, jnp.int32)
+    return (i - _BIAS).astype(jnp.float32) * np.float32(2.0**-23)
+
+
+# ---------------------------------------------------------------------------
+# Grouped PAM tile product (DESIGN.md §2.1) — shared by the pam_matmul
+# kernels and the fused PAM flash-attention kernel.
+# ---------------------------------------------------------------------------
+
+def _prep_tiles(a, b):
+    """Bitcast both tiles once. Returns (saT, amT, sb, bmg, bz):
+    A side k-major with the zero SENTINEL applied to its magnitudes,
+    B side with the PAM re-bias folded in (one add saved per inner element)
+    plus an explicit zero MASK — the sentinel trick only flushes against a
+    bias-folded partner (floatbits.PAM_ZERO_SENTINEL has the derivation).
+    """
+    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
+    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
+    # Zero tests are FLOAT compares: under flush-to-zero arithmetic (CPU
+    # and TPU) denormal inputs equal 0.0, matching pam_value's semantics.
+    # The B mask is an int AND-mask (0 where b==0, else ~0) — one vpand per
+    # inner element instead of a bool select.
+    amT = jnp.where(a == 0.0, _ZSENT, ai & _MAG).T
+    bzM = jnp.where(b == 0.0, 0, -1).astype(jnp.int32)
+    return (ai & _SIGN).T, amT, bi & _SIGN, (bi & _MAG) - _BIAS, bzM
+
+
+def _grouped_pam_sum(saT, amT, sb, bmg, bzM, g):
+    """Sum of PAM products over K for int-prepped tiles.
+
+    saT/amT: (bk, bm) sign bits / magnitude (A side, zero-sentineled),
+    sb/bmg:  (bk, bn) sign bits / magnitude-minus-bias (B side),
+    bzM:     (bk, bn) int32 AND-mask, 0 where B is ±0.0 else ~0.
+    Returns the (bm, bn) f32 partial result. The K axis is processed as
+    bk//g groups of g slices; each group's g products accumulate in
+    registers before one (bk//g, bm, bn) vector reduction.
+
+    NOTE: keep this in sync with core/matmul.py::_grouped_pam_sum (same
+    algorithm on the jnp engine's batched layout).
+    """
+    bk, bm = amT.shape
+    bn = bmg.shape[1]
+    amT = amT.reshape(bk // g, g, bm)
+    saT = saT.reshape(bk // g, g, bm)
+    bmg = bmg.reshape(bk // g, g, bn)
+    sb = sb.reshape(bk // g, g, bn)
+    bzM = bzM.reshape(bk // g, g, bn)
+    part = None
+    for j in range(g):
+        mag = amT[:, j, :, None] + bmg[:, j, None, :]
+        mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+        mag = mag & bzM[:, j, None, :]                 # PAM(a, ±0) = ±0
+        bits = (saT[:, j, :, None] ^ sb[:, j, None, :]) | mag
+        p = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        part = p if part is None else part + p
+    return jnp.sum(part, axis=0)
+
+
+def _pam_dot(a, b, g):
+    """(bm, bk) ·̂ (bk, bn) PAM tile product: prep + grouped sum, with ``g``
+    lowered to the largest divisor of the contraction axis."""
+    bk = a.shape[-1]
+    g_ = max(1, min(g, bk))
+    while bk % g_:
+        g_ -= 1
+    return _grouped_pam_sum(*_prep_tiles(a, b), g_)

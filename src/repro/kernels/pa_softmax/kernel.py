@@ -2,60 +2,21 @@
 
 Each grid step processes a (rows-block, full-row) tile in VMEM and fuses the
 whole PA softmax: rowmax -> PAM by log2(e) -> paexp2 -> rowsum -> padiv.
-Row block 8 x up-to-4096 cols = 128 KB/tile. Rows longer than the column
+The rows-block size resolves from the shared ``kernels/autotune.py`` table
+(op ``"pa_softmax"``, keyed by the (rows, cols) bucket) — the same tuning
+mechanism the matmul and fused-attention kernels use; the default is the
+seed's 8 x up-to-4096 cols = 128 KB/tile. Rows longer than the column
 budget fall back to the jnp composition in ops.py.
 """
 from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_SIGN = np.int32(-(2**31))
-_MAG = np.int32(0x7FFFFFFF)
-_BIAS = np.int32(127 << 23)
-_MIN_NORM = np.int32(1 << 23)
-_MAX_FINITE = np.int32(0x7F7FFFFF)
-_LOG2E = np.float32(1.4426950408889634)
-
-_ROWS = 8
-
-
-def _pam(a, b):
-    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
-    sign = (ai ^ bi) & _SIGN
-    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
-    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
-    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
-    mag = jnp.where(ovf, _MAX_FINITE, mag)
-    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
-    return jnp.where((a == 0.0) | (b == 0.0), 0.0, out)
-
-
-def _padiv(a, b):
-    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
-    sign = (ai ^ bi) & _SIGN
-    mag = (ai & _MAG) - (bi & _MAG) + _BIAS
-    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
-    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
-    mag = jnp.where(ovf, _MAX_FINITE, mag)
-    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
-    return jnp.where(a == 0.0, 0.0, out)
-
-
-def _paexp2(a):
-    ac = jnp.clip(a, -16384.0, 16384.0)
-    n = jnp.floor(ac)
-    man = jnp.round((ac - n) * np.float32(2.0**23)).astype(jnp.int32)
-    e = n.astype(jnp.int32) + (man >> 23) + 127
-    mag = (e << 23) | (man & np.int32(0x7FFFFF))
-    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, _MAX_FINITE))
-    return jax.lax.bitcast_convert_type(mag, jnp.float32)
+from ..pa_prims import _pam, _padiv, _paexp2, _LOG2E
 
 
 def _kernel(x_ref, o_ref):
@@ -66,17 +27,21 @@ def _kernel(x_ref, o_ref):
     o_ref[...] = _padiv(e, jnp.broadcast_to(s, e.shape))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def pa_softmax_rows(x, *, interpret: bool = True):
-    """PA softmax over the last axis of a 2D f32 array (rows fit VMEM)."""
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def pa_softmax_rows(x, *, rows: int = 8, interpret: bool = True):
+    """PA softmax over the last axis of a 2D f32 array (rows fit VMEM).
+
+    ``rows`` is the grid's row-block size; callers resolve it from the
+    shared autotune table (see ops.py) — pass explicitly to override.
+    """
     r, c = x.shape
-    rp = -(-r // _ROWS) * _ROWS
+    rp = -(-r // rows) * rows
     xp = jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, 0)))
     out = pl.pallas_call(
         _kernel,
-        grid=(rp // _ROWS,),
-        in_specs=[pl.BlockSpec((_ROWS, c), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((_ROWS, c), lambda i: (i, 0)),
+        grid=(rp // rows,),
+        in_specs=[pl.BlockSpec((rows, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
         interpret=interpret,
     )(xp)

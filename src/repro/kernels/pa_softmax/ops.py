@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .. import autotune
 from .._backend import use_interpret
 from .kernel import pa_softmax_rows
 from .ref import pa_softmax_ref
@@ -16,4 +17,6 @@ def pa_softmax(x):
     if c > _MAX_COLS:
         return pa_softmax_ref(x)
     x2 = jnp.asarray(x, jnp.float32).reshape(-1, c)
-    return pa_softmax_rows(x2, interpret=use_interpret()).reshape(shape)
+    interpret = use_interpret()
+    (rows,) = autotune.tile_params("pa_softmax", (x2.shape[0], c), interpret)
+    return pa_softmax_rows(x2, rows=rows, interpret=interpret).reshape(shape)

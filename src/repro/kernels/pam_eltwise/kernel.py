@@ -9,61 +9,14 @@ from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_SIGN = np.int32(-(2**31))
-_MAG = np.int32(0x7FFFFFFF)
-_BIAS = np.int32(127 << 23)
-_MIN_NORM = np.int32(1 << 23)
-_MAX_FINITE = np.int32(0x7F7FFFFF)
+from ..pa_prims import _pam, _padiv, _paexp2, _palog2
 
 _ROWS, _COLS = 8, 1024
 _TILE = _ROWS * _COLS
-
-
-def _pam(a, b):
-    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
-    sign = (ai ^ bi) & _SIGN
-    mag = (ai & _MAG) + (bi & _MAG) - _BIAS
-    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
-    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
-    mag = jnp.where(ovf, _MAX_FINITE, mag)
-    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
-    return jnp.where((a == 0.0) | (b == 0.0), 0.0, out)
-
-
-def _padiv(a, b):
-    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
-    sign = (ai ^ bi) & _SIGN
-    mag = (ai & _MAG) - (bi & _MAG) + _BIAS
-    ovf = mag < -_BIAS      # disjoint-ranges int32 overflow test
-    mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
-    mag = jnp.where(ovf, _MAX_FINITE, mag)
-    out = jax.lax.bitcast_convert_type(sign | mag, jnp.float32)
-    return jnp.where(a == 0.0, 0.0, out)
-
-
-def _paexp2(a):
-    ac = jnp.clip(a, -16384.0, 16384.0)
-    n = jnp.floor(ac)
-    f = ac - n
-    man = jnp.round(f * np.float32(2.0**23)).astype(jnp.int32)
-    carry = man >> 23
-    e = n.astype(jnp.int32) + carry + 127
-    mag = (e << 23) | (man & np.int32(0x7FFFFF))
-    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, _MAX_FINITE))
-    out = jax.lax.bitcast_convert_type(mag, jnp.float32)
-    return jnp.where(a >= 128.0, jnp.float32(jnp.inf), out)
-
-
-def _palog2(a):
-    i = jax.lax.bitcast_convert_type(a, jnp.int32)
-    return (i - _BIAS).astype(jnp.float32) * np.float32(2.0**-23)
 
 
 _BINARY = {"pam": _pam, "padiv": _padiv}

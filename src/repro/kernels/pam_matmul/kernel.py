@@ -38,59 +38,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# Bit-field constants shared with core/floatbits.py (the kernel re-exports
-# them as module-level numpy scalars so the kernel body closes over plain
-# int32 immediates).
-from repro.core import floatbits as _fb
-
-_SIGN = _fb.SIGN_MASK
-_MAG = _fb.MAG_MASK
-_EXP = _fb.EXP_MASK
-_MAN = _fb.MAN_MASK
-_BIAS = _fb.BIAS_SHIFTED
-_MIN_NORM = _fb.MIN_NORM
-_MAX_EXPF = _fb.MAX_EXP_FIELD
-_MAX_FINITE = _fb.MAX_FINITE
-# A-side zero sentinel; B-side zeros need the explicit mask (see the
-# derivation at floatbits.PAM_ZERO_SENTINEL and DESIGN.md §2.3).
-_ZSENT = _fb.PAM_ZERO_SENTINEL
+# Bit-twiddling constants and the grouped tile product live in the shared
+# kernels/pa_prims.py (plain numpy int32 immediates the kernel body closes
+# over); tile tunables resolve through the shared kernels/autotune.py table.
+from .. import autotune as _autotune
+from ..pa_prims import (_SIGN, _MAG, _EXP, _MAN, _BIAS, _MIN_NORM, _MAX_EXPF,
+                        _MAX_FINITE, _ZSENT, _prep_tiles, _grouped_pam_sum)
 
 
 # ---------------------------------------------------------------------------
-# Tunables + autotune table.
+# Tunables — PR-1 API preserved as wrappers over the shared autotune table.
 # ---------------------------------------------------------------------------
-
-# (bm, bn, bk, g). Defaults per backend; per-shape entries override. Keys are
-# (backend, bucket(m), bucket(n), bucket(k)) with power-of-two buckets.
-_DEFAULTS = {
-    "interpret": (256, 256, 256, 16),
-    "tpu": (128, 128, 512, 8),
-}
-_AUTOTUNE = {
-    # Measured on the CPU interpret reference host (see BENCH_pam_matmul.json
-    # trajectory): mid-size squares like one big tile with g=16 groups.
-    ("interpret", 256, 256, 256): (256, 256, 256, 16),
-    ("interpret", 512, 512, 512): (256, 256, 512, 16),
-    ("interpret", 1024, 1024, 1024): (256, 256, 512, 16),
-}
-
-
-def _bucket(x: int) -> int:
-    return min(1 << max(0, int(x - 1).bit_length()), 4096)
-
 
 def register_tile_params(m: int, n: int, k: int, params, *,
                          backend: str = "interpret") -> None:
     """Add/override an autotune entry ((bm, bn, bk, g)) for a shape bucket."""
     bm, bn, bk, g = params
-    _AUTOTUNE[(backend, _bucket(m), _bucket(n), _bucket(k))] = (bm, bn, bk, g)
+    _autotune.register_tile_params("pam_matmul", (m, n, k), (bm, bn, bk, g),
+                                   backend=backend)
 
 
 def tile_params(m: int, n: int, k: int, interpret: bool):
     """Resolve (bm, bn, bk, g) for a problem shape from the autotune table."""
-    backend = "interpret" if interpret else "tpu"
-    key = (backend, _bucket(m), _bucket(n), _bucket(k))
-    return _AUTOTUNE.get(key, _DEFAULTS[backend])
+    return _autotune.tile_params("pam_matmul", (m, n, k), interpret)
 
 
 def _fit(bm, bn, bk, g, m, n, k, *, group_dim: str = "k"):
@@ -106,59 +76,6 @@ def _fit(bm, bn, bk, g, m, n, k, *, group_dim: str = "k"):
     while axis % g_:                     # largest divisor of axis that is <= g
         g_ -= 1
     return bm_, bn_, bk_, g_
-
-
-# ---------------------------------------------------------------------------
-# Shared tile math.
-# ---------------------------------------------------------------------------
-
-def _prep_tiles(a, b):
-    """Bitcast both tiles once. Returns (saT, amT, sb, bmg, bz):
-    A side k-major with the zero SENTINEL applied to its magnitudes,
-    B side with the PAM re-bias folded in (one add saved per inner element)
-    plus an explicit zero MASK — the sentinel trick only flushes against a
-    bias-folded partner (floatbits.PAM_ZERO_SENTINEL has the derivation).
-    """
-    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
-    # Zero tests are FLOAT compares: under flush-to-zero arithmetic (CPU
-    # and TPU) denormal inputs equal 0.0, matching pam_value's semantics.
-    # The B mask is an int AND-mask (0 where b==0, else ~0) — one vpand per
-    # inner element instead of a bool select.
-    amT = jnp.where(a == 0.0, _ZSENT, ai & _MAG).T
-    bzM = jnp.where(b == 0.0, 0, -1).astype(jnp.int32)
-    return (ai & _SIGN).T, amT, bi & _SIGN, (bi & _MAG) - _BIAS, bzM
-
-
-def _grouped_pam_sum(saT, amT, sb, bmg, bzM, g):
-    """Sum of PAM products over K for int-prepped tiles.
-
-    saT/amT: (bk, bm) sign bits / magnitude (A side, zero-sentineled),
-    sb/bmg:  (bk, bn) sign bits / magnitude-minus-bias (B side),
-    bzM:     (bk, bn) int32 AND-mask, 0 where B is ±0.0 else ~0.
-    Returns the (bm, bn) f32 partial result. The K axis is processed as
-    bk//g groups of g slices; each group's g products accumulate in
-    registers before one (bk//g, bm, bn) vector reduction.
-
-    NOTE: keep this in sync with core/matmul.py::_grouped_pam_sum (same
-    algorithm on the jnp engine's batched layout).
-    """
-    bk, bm = amT.shape
-    bn = bmg.shape[1]
-    amT = amT.reshape(bk // g, g, bm)
-    saT = saT.reshape(bk // g, g, bm)
-    bmg = bmg.reshape(bk // g, g, bn)
-    sb = sb.reshape(bk // g, g, bn)
-    bzM = bzM.reshape(bk // g, g, bn)
-    part = None
-    for j in range(g):
-        mag = amT[:, j, :, None] + bmg[:, j, None, :]
-        mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
-        mag = mag & bzM[:, j, None, :]                 # PAM(a, ±0) = ±0
-        bits = (saT[:, j, :, None] ^ sb[:, j, None, :]) | mag
-        p = jax.lax.bitcast_convert_type(bits, jnp.float32)
-        part = p if part is None else part + p
-    return jnp.sum(part, axis=0)
 
 
 # ---------------------------------------------------------------------------

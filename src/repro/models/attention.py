@@ -80,12 +80,41 @@ def _qkv(h, p, cfg: ModelConfig):
     return q, k, v
 
 
-def _sdpa(q, k, v, mask, cfg: ModelConfig):
+def _fused_pam_ok(cfg: ModelConfig, q_pos, k_pos) -> bool:
+    """Fused-path gate: the fused kernel implements the fully-PA softmax
+    with approx derivatives only; every other numeric configuration keeps
+    the unfused composition."""
+    pa = cfg.pa
+    return (cfg.attn_fused_pam and q_pos is not None and k_pos is not None
+            and pa.nonlin_is_pa and pa.impl in ("jnp", "pallas")
+            and pa.deriv == "approx" and pa.mantissa_bits is None
+            and not pa.compensate)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig, *, q_pos=None, k_pos=None,
+          window=None, causal=True):
     """Grouped scaled-dot-product attention.
-    q: (B,S,Hq,Dh) k,v: (B,T,Hkv,Dh) mask: (B,1,S,T) or (1,1,S,T)."""
+    q: (B,S,Hq,Dh) k,v: (B,T,Hkv,Dh) mask: (B,1,S,T) or (1,1,S,T).
+
+    ``q_pos``/``k_pos`` ((1,S)/(1,T) absolute positions, k_pos < 0 = empty
+    slot) with a *static* ``window``/``causal`` describe the mask
+    positionally; when given and ``cfg.attn_fused_pam`` applies, dispatch
+    to the fused PAM flash-attention path (DESIGN.md §4) — the S×T score
+    tensor never exists in HBM. Callers that can't express their mask
+    positionally simply omit the positions and keep the unfused path.
+    """
     b, s, hq, dh = q.shape
     t, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
+    if _fused_pam_ok(cfg, q_pos, k_pos):
+        from repro.kernels.flash_attention import pam_flash_attention
+        if cfg.attn_scale_in_q:
+            qs, sc = scale_const(q, 1.0 / np.sqrt(dh), cfg), None
+        else:
+            qs, sc = q, float(np.float32(1.0 / np.sqrt(dh)))
+        return pam_flash_attention(qs, k, v, q_pos[0], k_pos[0],
+                                   causal=causal, window=window, scale=sc,
+                                   impl=cfg.pa.impl)
     if cfg.attn_scale_in_q:
         # §Perf: apply 1/sqrt(dh) on the (S, Dh) query instead of the much
         # larger (S, T) score tensor.
@@ -180,10 +209,13 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
     k = apply_rope(k, cos, sin, cfg)
 
     win = window if window is not None else cfg.sliding_window
-    if is_global is not None:
-        # per-layer scalar flag (hybrid archs): global layers see everything
+    if is_global is not None and win is not None and cfg.global_layers:
+        # per-layer scalar flag (hybrid archs): global layers see everything.
+        # Only the true hybrid case needs the traced select — all-SWA and
+        # all-global stacks resolve statically below, keeping the window a
+        # python int/None so the fused PAM path can dispatch.
         eff_win = jnp.where(is_global, jnp.iinfo(jnp.int32).max // 2,
-                            jnp.int32(win if win else jnp.iinfo(jnp.int32).max // 2))
+                            jnp.int32(win))
     else:
         eff_win = win
 
@@ -228,13 +260,17 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
     if use_banded:
         out = _banded_sdpa(q, k, v, positions, cfg.sliding_window, cfg)
     else:
+        fused_kw = {}
         if isinstance(eff_win, (int, type(None))):
             mask = causal_mask(positions[:1], k_pos, eff_win)[:, None]
+            # static window -> the mask is expressible positionally, so the
+            # fused PAM path may take over inside _sdpa (config-gated)
+            fused_kw = dict(q_pos=positions[:1], k_pos=k_pos, window=eff_win)
         else:
             m = causal_mask(positions[:1], k_pos, None)
             m &= (positions[:1, :, None] - k_pos[:, None, :]) < eff_win
             mask = m[:, None]
-        out = _sdpa(q, k_all, v_all, mask, cfg)
+        out = _sdpa(q, k_all, v_all, mask, cfg, causal=True, **fused_kw)
     out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
     out = linear(out, p["wo"], cfg, p.get("bo"))
     return constrain(out, ("batch", None, "act_embed")), new_cache
@@ -252,7 +288,10 @@ def cross_attention(h, ctx, p, cfg: ModelConfig, gated: bool = False):
         q = norm(q, p["q_norm"], cfg)
         k = norm(k, p["k_norm"], cfg)
     mask = jnp.ones((1, 1, s, ctx.shape[1]), bool)
-    out = _sdpa(q, k, v, mask, cfg).reshape(b, s, hq * dh)
+    out = _sdpa(q, k, v, mask, cfg, causal=False,
+                q_pos=jnp.arange(s, dtype=jnp.int32)[None],
+                k_pos=jnp.arange(ctx.shape[1], dtype=jnp.int32)[None]
+                ).reshape(b, s, hq * dh)
     out = linear(out, p["wo"], cfg, p.get("bo"))
     if gated:
         from repro.core import pa_tanh

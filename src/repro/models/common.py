@@ -92,6 +92,11 @@ class ModelConfig:
                                           # (rescues TP-indivisible heads)
     ssm_time_chunk: int = 0               # remat the SSM scan per time chunk
     attn_local_banded: bool = False       # SWA via banded blocks, not SxS+mask
+    attn_fused_pam: bool = False          # fused PAM flash attention: stream
+                                          # KV blocks, no SxT score tensor in
+                                          # HBM (kernels/flash_attention/
+                                          # pam_ops.py; full PA mode, approx
+                                          # derivs; DESIGN.md §4)
 
     @property
     def head_dim(self) -> int:

@@ -1,0 +1,59 @@
+"""The bench-schema checker: committed trajectory files must validate, and
+the checker must actually reject malformed ones (it gates `make test`)."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_bench_schema import (bench_files, validate_file,
+                                           validate_report)
+
+
+def test_committed_trajectory_files_valid():
+    files = bench_files()
+    assert files, "no BENCH_*.json at repo root — trajectory lost"
+    for path in files:
+        assert validate_file(path) == [], validate_file(path)
+
+
+def test_rejects_missing_ratio_fields():
+    bad = {"benchmark": "x", "schema_version": 1, "generated_utc": "t",
+           "backend": "cpu", "pallas_mode": "interpret",
+           "timing": {"rounds": 1, "stat": "min", "unit": "us"},
+           "forward_us": {"a": 1.0}}
+    errs = validate_report(bad, "BENCH_x.json")
+    assert any("_speedup_vs_seed" in e for e in errs)
+    assert any("slowdown_vs_native" in e for e in errs)
+
+
+def test_rejects_wrong_schema_version_and_name(tmp_path):
+    bad = {"benchmark": "y", "schema_version": 2, "generated_utc": "t",
+           "backend": "cpu", "pallas_mode": "interpret",
+           "timing": {"stat": "min", "unit": "us"},
+           "forward_us": {"a": 1.0},
+           "forward_speedup_vs_seed": {"a": 1.0},
+           "slowdown_vs_native": {"a": 1.0}}
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps(bad))
+    errs = validate_file(str(p))
+    assert any("schema_version" in e for e in errs)
+    assert any("rounds" in e for e in errs)
+    assert any("does not match filename" in e for e in errs)
+
+
+def test_rejects_unreadable(tmp_path):
+    p = tmp_path / "BENCH_z.json"
+    p.write_text("{not json")
+    assert any("unreadable" in e for e in validate_file(str(p)))
+
+
+def test_rejects_non_numeric_us(tmp_path):
+    bad = {"benchmark": "z", "schema_version": 1, "generated_utc": "t",
+           "backend": "cpu", "pallas_mode": "interpret",
+           "timing": {"rounds": 1, "stat": "min", "unit": "us"},
+           "forward_us": {"a": "fast"},
+           "forward_speedup_vs_seed": {"a": 1.0},
+           "slowdown_vs_native": {"a": 1.0}}
+    errs = validate_report(bad, "BENCH_z.json")
+    assert any("forward_us" in e for e in errs)

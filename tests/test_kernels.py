@@ -133,6 +133,22 @@ class TestFlashAttentionKernel:
         assert out.shape == (2, 32, 8, 16)
         assert bool(jnp.isfinite(out).all())
 
+    @pytest.mark.parametrize("st", [(100, 100), (64, 100), (100, 64)])
+    def test_noncausal_ragged_padding(self, rng, st):
+        """Regression: padded key rows must be masked positionally in the
+        NON-causal path too (zero-padded keys used to get exp(0-m) softmax
+        weight at any T that is not a block multiple)."""
+        from repro.kernels.flash_attention import attention_ref
+        from repro.kernels.flash_attention.kernel import flash_attention_bh
+        s, t = st
+        q = jnp.asarray(rng.standard_normal((2, s, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, t, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, t, 16)), jnp.float32)
+        got = np.asarray(flash_attention_bh(q, k, v, bq=32, bk=32,
+                                            causal=False, interpret=True))
+        ref = np.asarray(attention_ref(q, k, v, causal=False))
+        np.testing.assert_allclose(got, ref, atol=2e-5)
+
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_dtypes(self, rng, dtype):
         from repro.kernels.flash_attention import attention_ref
