@@ -2,7 +2,7 @@
 # `python -m benchmarks.*` invocations don't need it spelled out.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench bench-all check-bench
+.PHONY: test test-all bench bench-fast bench-all check-bench
 
 # Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
 # The bench-schema check runs first — a malformed BENCH_*.json trajectory
@@ -25,6 +25,12 @@ bench:
 	  mod=$$(basename $$b .py); echo "== benchmarks.$$mod"; \
 	  $(PY) -m benchmarks.$$mod; done
 	$(PY) -m benchmarks.check_bench_schema
+
+# Smoke-shape attention bench for the test tier: same correctness gates
+# and report plumbing as `bench`, tiny shapes, throwaway output path (the
+# committed BENCH_pam_attention.json is never touched).
+bench-fast:
+	$(PY) -m benchmarks.pam_attention_bench --smoke
 
 # Full benchmark suite (paper tables/figures + trajectory harness).
 bench-all:

@@ -7,12 +7,22 @@ ratio fields (``*_speedup_vs_seed``, ``slowdown_vs_native``). This checker
 runs in the default ``make test`` tier so a PR cannot commit a malformed
 trajectory point.
 
+``BENCH_pam_attention.json`` is schema_version 2: it additionally carries
+the backward-engine provenance (``backward`` object, sweeps/tiles of the
+two-sweep recompute design), the ``fwd_bwd_speedup_vs_unfused_live`` ratio
+(the number DESIGN.md §4.3 tracks), a ``gqa`` section with Hkv-sized KV
+byte accounting, and a ``flash_attention_fingerprint`` — a digest of
+``src/repro/kernels/flash_attention/*.py`` at generation time. The checker
+recomputes that digest, so ANY change to the fused kernels without
+regenerating the trajectory point fails the test tier.
+
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
 or import ``validate_report`` / ``validate_file`` from tests.
 """
 from __future__ import annotations
 
 import glob
+import hashlib
 import json
 import numbers
 import os
@@ -24,6 +34,24 @@ _REQUIRED_TOP = ("benchmark", "schema_version", "generated_utc", "backend",
                  "pallas_mode", "timing")
 _REQUIRED_TIMING = ("rounds", "stat", "unit")
 
+# Per-benchmark expected schema version (default 1). Bumped for
+# pam_attention when the two-sweep backward fields landed.
+_EXPECTED_VERSION = {"pam_attention": 2}
+
+
+def flash_attention_fingerprint(root: str = _ROOT) -> str:
+    """Digest of the fused-attention kernel sources. Recorded by the bench
+    at generation time and recomputed here: a stale BENCH_pam_attention.json
+    (kernels edited, bench not re-run) fails validation."""
+    d = os.path.join(root, "src", "repro", "kernels", "flash_attention")
+    h = hashlib.sha256()
+    for p in sorted(glob.glob(os.path.join(d, "*.py"))):
+        h.update(os.path.basename(p).encode() + b"\0")
+        with open(p, "rb") as f:
+            h.update(f.read())
+        h.update(b"\0")
+    return h.hexdigest()[:16]
+
 
 def _is_num(x) -> bool:
     return isinstance(x, numbers.Real) and not isinstance(x, bool)
@@ -34,6 +62,13 @@ def _numeric_dict(d) -> bool:
             and all(_is_num(v) for v in d.values()))
 
 
+def _expected_name(report, name: str) -> str:
+    if name.startswith("BENCH_") and name.endswith(".json"):
+        return name[len("BENCH_"):-len(".json")]
+    bench = report.get("benchmark")
+    return bench if isinstance(bench, str) else ""
+
+
 def validate_report(report, name: str) -> list:
     """Return a list of violation strings (empty == valid)."""
     errs = []
@@ -42,8 +77,9 @@ def validate_report(report, name: str) -> list:
     for key in _REQUIRED_TOP:
         if key not in report:
             errs.append(f"{name}: missing required field '{key}'")
-    if report.get("schema_version") != 1:
-        errs.append(f"{name}: schema_version must be 1, got "
+    expect_ver = _EXPECTED_VERSION.get(_expected_name(report, name), 1)
+    if report.get("schema_version") != expect_ver:
+        errs.append(f"{name}: schema_version must be {expect_ver}, got "
                     f"{report.get('schema_version')!r}")
     timing = report.get("timing")
     if isinstance(timing, dict):
@@ -73,12 +109,45 @@ def validate_report(report, name: str) -> list:
         errs.append(f"{name}: 'slowdown_vs_native' must be a non-empty "
                     f"numeric object")
 
+    if expect_ver >= 2:
+        errs.extend(_validate_v2_attention(report, name))
+
     bench = report.get("benchmark")
     if isinstance(bench, str) and name.startswith("BENCH_"):
         expect = name[len("BENCH_"):-len(".json")]
         if bench != expect:
             errs.append(f"{name}: benchmark field {bench!r} does not match "
                         f"filename (expect {expect!r})")
+    return errs
+
+
+def _validate_v2_attention(report, name: str) -> list:
+    """Backward-engine and GQA fields introduced with the two-sweep
+    recompute backward (schema_version 2)."""
+    errs = []
+    bwd = report.get("backward")
+    if not isinstance(bwd, dict):
+        errs.append(f"{name}: v2 requires a 'backward' engine object")
+    else:
+        if not isinstance(bwd.get("engine"), str):
+            errs.append(f"{name}: backward.engine must be a string")
+        if not _is_num(bwd.get("sweeps")):
+            errs.append(f"{name}: backward.sweeps must be numeric")
+    if not _numeric_dict(report.get("fwd_bwd_speedup_vs_unfused_live")):
+        errs.append(f"{name}: v2 requires numeric "
+                    f"'fwd_bwd_speedup_vs_unfused_live'")
+    gqa = report.get("gqa")
+    if not isinstance(gqa, dict):
+        errs.append(f"{name}: v2 requires a 'gqa' section")
+    else:
+        for k in ("kv_bytes_fused", "kv_bytes_repeat"):
+            if not _is_num(gqa.get(k)):
+                errs.append(f"{name}: gqa.{k} must be numeric")
+        if gqa.get("kv_repeat_free") is not True:
+            errs.append(f"{name}: gqa.kv_repeat_free must be true — the "
+                        f"fused path may not materialise repeated K/V")
+    if not isinstance(report.get("flash_attention_fingerprint"), str):
+        errs.append(f"{name}: v2 requires 'flash_attention_fingerprint'")
     return errs
 
 
@@ -89,7 +158,19 @@ def validate_file(path: str) -> list:
             report = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         return [f"{name}: unreadable ({e})"]
-    return validate_report(report, name)
+    errs = validate_report(report, name)
+    # Freshness: the committed attention trajectory point must have been
+    # generated from the CURRENT fused-kernel sources.
+    if (isinstance(report, dict) and report.get("benchmark") == "pam_attention"
+            and isinstance(report.get("flash_attention_fingerprint"), str)):
+        want = flash_attention_fingerprint()
+        got = report["flash_attention_fingerprint"]
+        if got != want:
+            errs.append(
+                f"{name}: stale — flash_attention_fingerprint {got!r} does "
+                f"not match the current kernels ({want!r}); re-run "
+                f"`python -m benchmarks.pam_attention_bench`")
+    return errs
 
 
 def bench_files(root: str = _ROOT) -> list:

@@ -1,44 +1,167 @@
 """Fused PAM attention benchmark -> BENCH_pam_attention.json at repo root.
 
 Measures the fused PAM flash attention (Pallas + jnp streaming engines,
-forward and fwd+bwd) against the frozen seed unfused `_sdpa` composition
-(``seed_reference.seed_pam_attention`` — seed-matmul scores, value-level PA
-softmax, seed-matmul AV), the *live* unfused composition
-(``pam_attention_ref`` on the current jnp engine), and native float SDPA —
-all in-process and interleaved per the perf-trajectory protocol (ROADMAP.md
-"Benchmark protocol").
+forward and fwd+bwd with the two-sweep recompute backward) against the
+frozen seed unfused `_sdpa` composition (``seed_reference.seed_pam_attention``
+— seed-matmul scores, value-level PA softmax, seed-matmul AV), the *live*
+unfused composition (``pam_attention_ref`` on the current jnp engine), and
+native float SDPA — all in-process and interleaved per the perf-trajectory
+protocol (ROADMAP.md "Benchmark protocol"). A GQA section measures the
+shared-KV path (BlockSpec ``b -> b // rep``) against the seed
+repeat-materialised treatment and records Hkv-sized KV byte accounting.
 
-Correctness gates timing: the two fused engines must agree to f32 sum
-order, the fused forward and grads must track the live unfused composition
-within the DESIGN.md §4.2 contract tolerance, and the seed composition must
-agree with the live one within the engine contract — so the JSON can never
-report a fast-but-wrong kernel.
+Correctness gates the file's existence, not just its annotations: every
+gate failure is printed and the process exits NONZERO WITHOUT writing the
+JSON, so a regressed kernel can never commit a green-looking trajectory
+point. Gates: the two fused engines must agree to f32 sum order (fwd and
+grads), fused forward/grads must track the live unfused composition within
+the DESIGN.md §4.2 contract tolerance, the seed composition must agree
+with the live one, the GQA fused path must match the unfused
+repeat-composition at true Hkv gradient width, and its jaxpr must be free
+of repeat-materialised (B*Hq)-sized K/V intermediates.
+
+``--smoke`` runs the same gates + timing at tiny shapes and writes the
+JSON to a throwaway path (the tracked trajectory point is never touched)
+— the `make bench-fast` entry for the test tier.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
+import tempfile
 import time
+import traceback
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.kernels._backend import use_interpret
+from repro.kernels import autotune
 from repro.kernels.flash_attention import pam_flash_attention
 from repro.kernels.flash_attention.ref import pam_attention_ref
 from .common import emit, interleaved_min_ms
-from .seed_reference import seed_pam_attention, seed_pam_attention_grads
+from .check_bench_schema import flash_attention_fingerprint, validate_file
+from .seed_reference import (seed_pam_attention, seed_pam_attention_grads,
+                             seed_pam_attention_gqa_grads)
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _OUT = os.path.join(_ROOT, "BENCH_pam_attention.json")
 
-B, H, S, T, DH = 2, 4, 512, 512, 64      # BH=8: the tracked reference shape
-_ROUNDS = 5
 _CONTRACT_ATOL = 0.2                     # DESIGN.md §4.2 fused-vs-unfused
 
 
-def main() -> None:
+class _Gates:
+    """Correctness gates. Failures accumulate; `finish` exits nonzero
+    (before any JSON is written) if any gate tripped."""
+
+    def __init__(self):
+        self.failures = []
+        self.passed = []
+
+    def run(self, name, fn):
+        try:
+            fn()
+        except Exception as e:      # noqa: BLE001 — any failure gates
+            msg = str(e).strip().splitlines()
+            self.failures.append(f"{name}: {msg[0] if msg else type(e).__name__}")
+            traceback.print_exc()
+        else:
+            self.passed.append(name)
+
+    def finish(self):
+        if self.failures:
+            for f in self.failures:
+                print(f"GATE FAILED — {f}", file=sys.stderr)
+            print(f"pam_attention_bench: {len(self.failures)} correctness "
+                  f"gate(s) failed; refusing to write a trajectory point",
+                  file=sys.stderr)
+            sys.exit(2)
+
+
+def _grad_contract(name, a, b, atol=_CONTRACT_ATOL):
+    a, b = np.asarray(a), np.asarray(b)
+    tol = atol * max(1.0, float(np.abs(b).max()))
+    assert np.abs(a - b).max() <= tol, (
+        f"fused {name} vs unfused contract broken: "
+        f"{np.abs(a - b).max()} > {tol}")
+
+
+def _gqa_gate(gates, *, dh):
+    """Shared-KV GQA correctness at S != T (so a repeat-materialised KV
+    intermediate has a unique shape): fused == unfused-with-repeat within
+    contract at true Hkv grad width, and the jaxpr of fwd+bwd contains no
+    (B*Hq, T, Dh)-sized f32 value."""
+    b, s, t, hq, hkv = 1, 32, 64, 4, 2
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((b, s, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, hkv, dh)), jnp.float32)
+    qp, kp = jnp.arange(t - s, t), jnp.arange(t)
+    scale = 1.0 / np.sqrt(dh)
+    w = jnp.cos(jnp.arange(b * s * hq * dh) * 0.1).reshape(q.shape)
+
+    def fused_loss(q, k, v, impl):
+        o = pam_flash_attention(q, k, v, qp, kp, causal=True, scale=scale,
+                                impl=impl)
+        return jnp.sum(o * w), o
+
+    def ref_loss(q, k, v):
+        rep = hq // hkv
+        kr, vr = jnp.repeat(k, rep, axis=2), jnp.repeat(v, rep, axis=2)
+        qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, dh)
+        kf = kr.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+        vf = vr.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+        mask = (kp[None, :] <= qp[:, None])[None]
+        o = pam_attention_ref(qf, kf, vf, mask, scale=scale)
+        o = o.reshape(b, hq, s, dh).transpose(0, 2, 1, 3)
+        return jnp.sum(o * w), o
+
+    (_, o_r), g_r = jax.value_and_grad(ref_loss, argnums=(0, 1, 2),
+                                       has_aux=True)(q, k, v)
+
+    def check(impl):
+        (_, o_f), g_f = jax.value_and_grad(
+            lambda a, bb, c: fused_loss(a, bb, c, impl),
+            argnums=(0, 1, 2), has_aux=True)(q, k, v)
+        assert g_f[1].shape == (b, t, hkv, dh), g_f[1].shape
+        np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_r),
+                                   atol=_CONTRACT_ATOL)
+        for n, af, ar in zip(("dq", "dk", "dv"), g_f, g_r):
+            _grad_contract(f"gqa {impl} {n}", af, ar)
+
+        txt = str(jax.make_jaxpr(
+            lambda a, bb, c: jax.grad(
+                lambda *xs: fused_loss(*xs, impl)[0],
+                argnums=(0, 1, 2))(a, bb, c))(q, k, v))
+        for bad in (f"f32[{b * hq},{t},{dh}]", f"f32[{b},{t},{hq},{dh}]"):
+            assert bad not in txt, (
+                f"repeat-materialised KV intermediate {bad} on the "
+                f"{impl} fused path")
+
+    gates.run("gqa_fused_pallas_vs_unfused", lambda: check("pallas"))
+    gates.run("gqa_fused_jnp_vs_unfused", lambda: check("jnp"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 round, throwaway output path")
+    ap.add_argument("--out", default=None, help="output JSON path override")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        B, H, S, T, DH, rounds = 1, 2, 64, 64, 16, 1
+        gb, ghq, ghkv, gs, gt = 1, 4, 2, 32, 32
+        out_path = args.out or os.path.join(tempfile.gettempdir(),
+                                            "BENCH_pam_attention.smoke.json")
+    else:
+        B, H, S, T, DH, rounds = 2, 4, 512, 512, 64, 5
+        gb, ghq, ghkv, gs, gt = 2, 4, 2, 512, 512
+        out_path = args.out or _OUT
+
     rng = np.random.default_rng(0)
     q4 = jnp.asarray(rng.standard_normal((B, S, H, DH)), jnp.float32)
     k4 = jnp.asarray(rng.standard_normal((B, T, H, DH)), jnp.float32)
@@ -77,32 +200,38 @@ def main() -> None:
     g_native = jax.jit(jax.value_and_grad(
         lambda q, k, v: jnp.sum(f_native(q, k, v) * wf), argnums=(0, 1, 2)))
 
-    # -- correctness gate -------------------------------------------------
+    # -- correctness gates (all run; any failure -> exit 2, no JSON) ------
+    gates = _Gates()
     o_pal = np.asarray(f_pal(q4, k4, v4))
     o_jnp = np.asarray(f_jnp(q4, k4, v4))
     o_live = np.asarray(f_live(qf, kf, vf)).reshape(B, H, S, DH).transpose(
         0, 2, 1, 3)
     o_seed = np.asarray(seed_pam_attention(qf, kf, vf)).reshape(
         B, H, S, DH).transpose(0, 2, 1, 3)
-    np.testing.assert_allclose(o_pal, o_jnp, rtol=1e-5, atol=1e-5,
-                               err_msg="fused engines diverged")
-    np.testing.assert_allclose(o_pal, o_live, atol=_CONTRACT_ATOL,
-                               err_msg="fused vs unfused contract broken")
-    np.testing.assert_allclose(o_seed, o_live, rtol=2e-3, atol=2e-3,
-                               err_msg="seed vs live unfused diverged")
+    gates.run("fused_engines_agree", lambda: np.testing.assert_allclose(
+        o_pal, o_jnp, rtol=1e-5, atol=1e-5))
+    gates.run("fused_vs_unfused_contract", lambda: np.testing.assert_allclose(
+        o_pal, o_live, atol=_CONTRACT_ATOL))
+    gates.run("seed_vs_live_unfused", lambda: np.testing.assert_allclose(
+        o_seed, o_live, rtol=2e-3, atol=2e-3))
     _, gp = g_pal(q4, k4, v4)
     _, gj = g_jnp(q4, k4, v4)
     _, gl = g_live(qf, kf, vf)
-    for a, b in zip(gp, gj):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=1e-5, atol=1e-5,
-                                   err_msg="fused backward engines diverged")
-    for name, a, b in zip(("dq", "dk", "dv"), gp, gl):
-        a = np.asarray(a).transpose(0, 2, 1, 3).reshape(B * H, -1, DH)
-        b = np.asarray(b)
-        tol = _CONTRACT_ATOL * max(1.0, float(np.abs(b).max()))
-        assert np.abs(a - b).max() <= tol, (
-            f"fused {name} vs unfused contract broken")
+
+    def _bwd_engines():
+        for a, b in zip(gp, gj):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+    def _bwd_contract():
+        for name, a, b in zip(("dq", "dk", "dv"), gp, gl):
+            a = np.asarray(a).transpose(0, 2, 1, 3).reshape(B * H, -1, DH)
+            _grad_contract(name, a, np.asarray(b))
+
+    gates.run("fused_backward_engines_agree", _bwd_engines)
+    gates.run("fused_backward_vs_unfused_contract", _bwd_contract)
+    _gqa_gate(gates, dh=DH)
+    gates.finish()
 
     # -- forward ----------------------------------------------------------
     fwd = interleaved_min_ms({
@@ -111,7 +240,7 @@ def main() -> None:
         "unfused_live": (f_live, (qf, kf, vf)),
         "seed_unfused": (seed_pam_attention, (qf, kf, vf)),
         "native": (f_native, (qf, kf, vf)),
-    }, _ROUNDS)
+    }, rounds)
 
     # -- fwd+bwd ----------------------------------------------------------
     ones = jnp.ones_like(qf)
@@ -122,18 +251,52 @@ def main() -> None:
         # the seed grads fn recomputes its forward internally -> fwd+bwd
         "seed_unfused": (seed_pam_attention_grads, (qf, kf, vf, ones)),
         "native": (g_native, (qf, kf, vf)),
-    }, _ROUNDS)
+    }, rounds)
 
+    # -- GQA: shared-KV fused path vs the seed repeat treatment -----------
+    gq = jnp.asarray(rng.standard_normal((gb, gs, ghq, DH)), jnp.float32)
+    gk = jnp.asarray(rng.standard_normal((gb, gt, ghkv, DH)), jnp.float32)
+    gv = jnp.asarray(rng.standard_normal((gb, gt, ghkv, DH)), jnp.float32)
+    gw = jnp.cos(jnp.arange(gq.size) * 0.1).reshape(gq.shape)
+    gdo = jnp.ones((gb, gs, ghq, DH), jnp.float32)
+    gpos_q, gpos_k = jnp.arange(gs), jnp.arange(gt)
+
+    def gqa_vag(impl):
+        return jax.jit(jax.value_and_grad(
+            lambda q, k, v: jnp.sum(pam_flash_attention(
+                q, k, v, gpos_q, gpos_k, causal=True, scale=scale,
+                impl=impl) * gw), argnums=(0, 1, 2)))
+
+    gqa = interleaved_min_ms({
+        "fused_pallas": (gqa_vag("pallas"), (gq, gk, gv)),
+        "fused_jnp": (gqa_vag("jnp"), (gq, gk, gv)),
+        "seed_unfused_repeat": (seed_pam_attention_gqa_grads,
+                                (gq, gk, gv, gdo)),
+    }, rounds)
+
+    interpret = use_interpret()
+    bwd_tiles = autotune.tile_params("pam_attention_bwd", (S, T, DH),
+                                     interpret)
     us_f = {k: v * 1e3 for k, v in fwd.items()}
     us_b = {k: v * 1e3 for k, v in bwd.items()}
+    us_g = {k: v * 1e3 for k, v in gqa.items()}
     report = {
         "benchmark": "pam_attention",
-        "schema_version": 1,
+        "schema_version": 2,
         "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "backend": jax.default_backend(),
-        "pallas_mode": "interpret" if use_interpret() else "compiled",
+        "pallas_mode": "interpret" if interpret else "compiled",
+        "flash_attention_fingerprint": flash_attention_fingerprint(),
         "shape": {"b": B, "h": H, "s": S, "t": T, "dh": DH, "causal": True},
-        "timing": {"rounds": _ROUNDS, "stat": "min", "unit": "us"},
+        "timing": {"rounds": rounds, "stat": "min", "unit": "us"},
+        "backward": {
+            "engine": "two_sweep_recompute",
+            "sweeps": 2,
+            "dsig": "delta(o,do,l)",
+            "residuals": ["q", "k", "v", "o", "m", "l"],
+            "tiles": {"bq": bwd_tiles[0], "bk": bwd_tiles[1],
+                      "g": bwd_tiles[2]},
+        },
         "forward_us": {k: round(us_f[k], 1) for k in us_f},
         "fwd_bwd_us": {k: round(us_b[k], 1) for k in us_b},
         "forward_speedup_vs_seed": {
@@ -149,14 +312,39 @@ def main() -> None:
             "fused_pallas": round(us_f["unfused_live"] / us_f["fused_pallas"], 2),
             "fused_jnp": round(us_f["unfused_live"] / us_f["fused_jnp"], 2),
         },
+        "fwd_bwd_speedup_vs_unfused_live": {
+            "fused_pallas": round(us_b["unfused_live"] / us_b["fused_pallas"], 2),
+            "fused_jnp": round(us_b["unfused_live"] / us_b["fused_jnp"], 2),
+        },
         "slowdown_vs_native": {
             "fused_pallas": round(us_f["fused_pallas"] / us_f["native"], 1),
             "fused_jnp": round(us_f["fused_jnp"] / us_f["native"], 1),
         },
+        "gqa": {
+            "shape": {"b": gb, "hq": ghq, "hkv": ghkv, "s": gs, "t": gt,
+                      "dh": DH, "causal": True},
+            "kv_repeat_free": True,     # gated above (jaxpr scan)
+            "kv_bytes_fused": gb * ghkv * gt * DH * 4 * 2,
+            "kv_bytes_repeat": gb * ghq * gt * DH * 4 * 2,
+            "fwd_bwd_us": {k: round(us_g[k], 1) for k in us_g},
+        },
+        "gqa_fwd_bwd_speedup_vs_seed": {
+            "fused_pallas": round(us_g["seed_unfused_repeat"]
+                                  / us_g["fused_pallas"], 2),
+            "fused_jnp": round(us_g["seed_unfused_repeat"]
+                               / us_g["fused_jnp"], 2),
+        },
+        "gates_passed": gates.passed,
     }
-    with open(_OUT, "w") as f:
+    with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=False)
         f.write("\n")
+    errs = validate_file(out_path) if out_path == _OUT else []
+    if errs:
+        for e in errs:
+            print(f"pam_attention_bench: schema self-check: {e}",
+                  file=sys.stderr)
+        sys.exit(2)
 
     emit("pam_attention/forward_fused_pallas", us_f["fused_pallas"],
          f"seed={us_f['seed_unfused']:.0f}us "
@@ -165,8 +353,12 @@ def main() -> None:
          f"speedup={report['forward_speedup_vs_seed']['fused_jnp']:.1f}x")
     emit("pam_attention/fwd_bwd_fused_pallas", us_b["fused_pallas"],
          f"seed={us_b['seed_unfused']:.0f}us "
-         f"speedup={report['fwd_bwd_speedup_vs_seed']['fused_pallas']:.1f}x")
-    emit("pam_attention/json", 0.0, _OUT)
+         f"speedup={report['fwd_bwd_speedup_vs_seed']['fused_pallas']:.1f}x "
+         f"vs_live={report['fwd_bwd_speedup_vs_unfused_live']['fused_pallas']:.2f}x")
+    emit("pam_attention/gqa_fwd_bwd_fused_pallas", us_g["fused_pallas"],
+         f"seed_repeat={us_g['seed_unfused_repeat']:.0f}us "
+         f"speedup={report['gqa_fwd_bwd_speedup_vs_seed']['fused_pallas']:.1f}x")
+    emit("pam_attention/json", 0.0, out_path)
 
 
 if __name__ == "__main__":

@@ -249,3 +249,39 @@ def seed_pam_attention_grads(q, k, v, do, *, causal: bool = True):
     dq = seed_pam_matmul_value(ds, k)
     dk = seed_pam_matmul_value(jnp.swapaxes(ds, -1, -2), q)
     return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# PR-3 freeze: the seed GQA treatment — materialise rep copies of K/V with
+# jnp.repeat, then run the frozen unfused composition per query head. This
+# is the yardstick the shared-KV fused path (BlockSpec b -> b // rep) is
+# measured against in BENCH_pam_attention.json's gqa section.
+# ---------------------------------------------------------------------------
+
+def _seed_gqa_flatten(q4, k4, v4):
+    b, s, hq, dh = q4.shape
+    t, hkv = k4.shape[1], k4.shape[2]
+    rep = hq // hkv
+    k4 = jnp.repeat(k4, rep, axis=2)
+    v4 = jnp.repeat(v4, rep, axis=2)
+    qf = q4.transpose(0, 2, 1, 3).reshape(b * hq, s, dh)
+    kf = k4.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+    vf = v4.transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+    return qf, kf, vf
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def seed_pam_attention_gqa_grads(q4, k4, v4, do, *, causal: bool = True):
+    """Seed GQA fwd+bwd (the yardstick the bench's gqa section times):
+    repeated-KV backward, then the group's dK/dV copies summed back to Hkv
+    width (what differentiating jnp.repeat does).
+    q4: (B, S, Hq, Dh), k4/v4: (B, T, Hkv, Dh)."""
+    b, s, hq, dh = q4.shape
+    t, hkv = k4.shape[1], k4.shape[2]
+    qf, kf, vf = _seed_gqa_flatten(q4, k4, v4)
+    dof = do.transpose(0, 2, 1, 3).reshape(b * hq, s, dh)
+    dq, dk, dv = seed_pam_attention_grads(qf, kf, vf, dof, causal=causal)
+    dq = dq.reshape(b, hq, s, dh).transpose(0, 2, 1, 3)
+    dk = dk.reshape(b, hkv, hq // hkv, t, dh).sum(2).transpose(0, 2, 1, 3)
+    dv = dv.reshape(b, hkv, hq // hkv, t, dh).sum(2).transpose(0, 2, 1, 3)
+    return dq, dk, dv

@@ -9,9 +9,14 @@ tuning sweep feeds every kernel through one interface.
 
 Params are opaque tuples whose meaning is per-op:
 
-  * ``pam_matmul``:    (bm, bn, bk, g)  keyed by (M, N, K)
-  * ``pa_softmax``:    (rows,)          keyed by (R, C)
-  * ``pam_attention``: (bq, bk, g)      keyed by (S, T, Dh)
+  * ``pam_matmul``:        (bm, bn, bk, g)  keyed by (M, N, K)
+  * ``pa_softmax``:        (rows,)          keyed by (R, C)
+  * ``pam_attention``:     (bq, bk, g)      keyed by (S, T, Dh)
+  * ``pam_attention_bwd``: (bq, bk, g)      keyed by (S, T, Dh) — the
+    two-sweep recompute backward (dsig+dQ sweep and the KV-outer dK/dV
+    sweep) resolves its tiles separately from the forward: its per-step
+    work is 3-4 tile products vs the forward's 2, so the grid-step
+    overhead/VMEM trade lands on different block sizes.
 """
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ _DEFAULTS = {
     ("pa_softmax", "tpu"): (8,),
     ("pam_attention", "interpret"): (256, 256, 16),
     ("pam_attention", "tpu"): (128, 128, 8),
+    ("pam_attention_bwd", "interpret"): (256, 256, 16),
+    ("pam_attention_bwd", "tpu"): (128, 128, 8),
 }
 
 _TABLE = {
@@ -44,6 +51,12 @@ _TABLE = {
     # shape (BH=8, S=T=512, Dh=64) on the CPU interpret host — full-S query
     # tiles with half-T KV blocks win (34ms vs 50ms at 256/256).
     ("pam_attention", "interpret", 512, 512, 64): (512, 256, 16),
+    # pam_attention_bwd: the two-sweep recompute backward at the same
+    # reference shape. Both sweeps pay 3-4 tile products per grid step, so
+    # interpret-mode grid overhead dominates and the biggest legal tiles
+    # win: 512/512 = 160ms vs 185ms at 512/256 and 212ms at 256/256
+    # (g=16 beats g=32 at every block size).
+    ("pam_attention_bwd", "interpret", 512, 512, 64): (512, 512, 16),
 }
 
 

@@ -7,6 +7,14 @@ log2(e) -> paexp2 -> running max/sum with PA rescaling, the streaming form
 of the ``pa_softmax`` row kernel), and the PAM AV product — so in PAM mode
 the quadratic S×T score tensor never exists in HBM (DESIGN.md §4).
 
+GQA is shared through the grid, not through copies: Q batches over
+``B*Hq`` heads while K/V stay at their true ``B*Hkv`` width, and every
+sweep's K/V BlockSpec index map folds the query head onto its KV head
+(``b -> b // rep``). The dK/dV sweep runs a ``(B*Hkv, nk, rep, nq)`` grid
+whose two inner dims accumulate the whole query group into one Hkv-wide
+output block — gradients come back at true Hkv width with no ``jnp.repeat``
+materialisation anywhere (DESIGN.md §4.4).
+
 Masking is positional via explicit per-token position arrays (``q_pos``,
 ``k_pos``) streamed alongside the operands: ``k_pos < 0`` marks
 padded/empty KV slots (rejected in EVERY mode), causal compares
@@ -14,13 +22,16 @@ padded/empty KV slots (rejected in EVERY mode), causal compares
 same scheme the float flash kernel uses, generalised to arbitrary position
 vectors so rolling KV caches work unchanged.
 
-The backward is recompute-based (DESIGN.md §4.3): forward saves only the
-per-row streaming stats (m = running max == true row max, l = streaming PA
-sum); three sweeps re-derive score tiles on the fly and evaluate the
-*approx-derivative* PA backward of the unfused composition —
-``dsig`` (the row-scalar padiv cotangent), then dQ, then dK/dV — entirely
-with PAM tile products. Grads match the unfused `_sdpa` composition within
-the streaming-rescale tolerance (DESIGN.md §4.2).
+The backward is recompute-based (DESIGN.md §4.3) and takes TWO sweeps:
+forward saves the output ``o`` plus the per-row streaming stats (m = running
+max == true row max, l = streaming PA sum). The ``dsig`` row cotangent is
+the PA form of FlashAttention's delta trick — ``Σ_j e·dP = l ·̂ (dO·O)``
+exactly in PA exponent arithmetic, so ``dsig = -padiv(rowsum(pam(dO, O)),
+l)`` needs no KV pass at all. Sweep 1 computes it once per query block and
+streams KV tiles emitting both ``dsig`` and dQ; sweep 2 (KV-outer) emits
+dK/dV. Each sweep recomputes its ``e``/``dP`` tiles exactly once. Grads
+match the unfused `_sdpa` composition within the streaming-rescale
+tolerance (DESIGN.md §4.2).
 
 Validated in interpret mode on CPU (the repo's reference backend); the
 grids and block specs follow the same batched-grid conventions as
@@ -59,6 +70,15 @@ def _masked_scores(q, k, qp, kp, *, g, scale, causal, window):
     if window is not None:
         valid &= (qp[:, None] - kp[None, :]) < window
     return jnp.where(valid, s, _NEG)
+
+
+def _delta_dsig(do, o, l):
+    """Row cotangent of the PA softmax sum via the delta trick:
+    ``Σ_j padiv(pam(e, dP), pam(l, l)) == padiv(rowsum(pam(dO, O)), l)``
+    in exact arithmetic (Σ_j e·dP = l·(dO·O)); both engines evaluate this
+    identical PA expression (DESIGN.md §4.3). do/o: (bq, dh), l: (bq, 1).
+    """
+    return -_padiv(jnp.sum(_pam(do, o), axis=-1, keepdims=True), l)
 
 
 # ---------------------------------------------------------------------------
@@ -107,14 +127,17 @@ def _fwd_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref,
 def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
                                window, scale, bq: int, bk: int, g: int,
                                interpret: bool):
-    """q: (BH, S, Dh), k/v: (BH, T, Dh), q_pos: (S,), k_pos: (T,) int32.
+    """q: (B*Hq, S, Dh), k/v: (B*Hkv, T, Dh), q_pos: (S,), k_pos: (T,) int32.
 
-    Returns (o, m, l) with m/l the (BH, S) streaming row stats. Padding is
-    positional: padded KV slots carry k_pos == -1 and are masked in every
-    mode; padded query rows are cropped.
+    ``B*Hq`` must be a multiple of ``B*Hkv``; the query group shares its KV
+    head through the K/V BlockSpec index maps (``b -> b // rep``), so K/V
+    are never replicated in HBM. Returns (o, m, l) with m/l the (B*Hq, S)
+    streaming row stats. Padding is positional: padded KV slots carry
+    k_pos == -1 and are masked in every mode; padded query rows are cropped.
     """
     bh, s_len, dh = q.shape
     t = k.shape[1]
+    rep = bh // k.shape[0]
     bq_, bk_ = min(bq, s_len), min(bk, t)
     sp, tp = -(-s_len // bq_) * bq_, -(-t // bk_) * bk_
     qp = jnp.pad(q, ((0, 0), (0, sp - s_len), (0, 0)))
@@ -134,8 +157,8 @@ def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
             pl.BlockSpec((1, bq_), lambda b, i, j: (0, i)),
             pl.BlockSpec((1, bk_), lambda b, i, j: (0, j)),
             pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b // rep, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b // rep, j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0)),
@@ -158,37 +181,12 @@ def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
 
 
 # ---------------------------------------------------------------------------
-# Backward sweep 1: dsig[i] = -sum_j padiv(pam(e_ij, dP_ij), pam(l_i, l_i))
-# — the row-scalar cotangent of the PA softmax's sum, needed as a complete
-# row reduction before any dS can be formed (DESIGN.md §4.3).
-# ---------------------------------------------------------------------------
-
-def _dsig_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
-                 dsig_ref, acc_ref, *, g, nk, causal, window, scale):
-    kv = pl.program_id(2)
-
-    @pl.when(kv == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    s = _masked_scores(q_ref[0], k_ref[0], qp_ref[0], kp_ref[0], g=g,
-                       scale=scale, causal=causal, window=window)
-    m = m_ref[0][:, None]                          # (bq, 1)
-    l = l_ref[0][:, None]
-    e = _paexp2(_pam(s - m, _L2E))                 # masked entries: exact 0
-    dp = _pam_dot(do_ref[0], v_ref[0].T, g)        # (bq, bk)
-    acc_ref[...] += jnp.sum(_padiv(_pam(e, dp), _pam(l, l)),
-                            axis=-1, keepdims=True)
-
-    @pl.when(kv == nk - 1)
-    def _out():
-        dsig_ref[0] = -acc_ref[...][:, 0]
-
-
-# ---------------------------------------------------------------------------
-# Backward sweep 2: dQ. dS is the approx-deriv chain of the unfused
-# composition: d_e = padiv(dP, l) + dsig; d_u = pam(pam(e, ln2), d_e);
-# dS = pam(d_u, log2e) [·̂ scale]; dQ = dS ·̂ K.
+# Backward sweep 1: dsig + dQ in ONE KV pass. dsig is the delta-trick row
+# scalar (computed from o/do/l at the first KV step — no KV reduction
+# needed); each KV tile then recomputes e/dP once and accumulates
+#   d_e = padiv(dP, l) + dsig; d_u = pam(pam(e, ln2), d_e);
+#   dS = pam(d_u, log2e) [·̂ scale];  dQ += dS ·̂ K.
+# The completed dsig rows are emitted for sweep 2.
 # ---------------------------------------------------------------------------
 
 def _ds_tile(e, dp, l, dsig, *, scale):
@@ -200,41 +198,47 @@ def _ds_tile(e, dp, l, dsig, *, scale):
     return ds
 
 
-def _dq_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
-               dsig_ref, dq_ref, acc_ref, *, g, nk, causal, window, scale):
+def _dq_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, do_ref, m_ref,
+               l_ref, dq_ref, dsig_ref, acc_ref, dsig_acc,
+               *, g, nk, causal, window, scale):
     kv = pl.program_id(2)
 
     @pl.when(kv == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        dsig_acc[...] = _delta_dsig(do_ref[0], o_ref[0],
+                                    l_ref[0][:, None])
 
     s = _masked_scores(q_ref[0], k_ref[0], qp_ref[0], kp_ref[0], g=g,
                        scale=scale, causal=causal, window=window)
     m = m_ref[0][:, None]
     l = l_ref[0][:, None]
-    dsig = dsig_ref[0][:, None]
-    e = _paexp2(_pam(s - m, _L2E))
-    dp = _pam_dot(do_ref[0], v_ref[0].T, g)
-    ds = _ds_tile(e, dp, l, dsig, scale=scale)
+    e = _paexp2(_pam(s - m, _L2E))                 # masked entries: exact 0
+    dp = _pam_dot(do_ref[0], v_ref[0].T, g)        # (bq, bk)
+    ds = _ds_tile(e, dp, l, dsig_acc[...], scale=scale)
     acc_ref[...] += _pam_dot(ds, k_ref[0], g)      # (bq, dh)
 
     @pl.when(kv == nk - 1)
     def _out():
         dq_ref[0] = acc_ref[...]
+        dsig_ref[0] = dsig_acc[...][:, 0]
 
 
 # ---------------------------------------------------------------------------
-# Backward sweep 3: dK/dV with the query dim innermost — each KV tile's
-# accumulators live in VMEM across all query steps.
-#   dV = Pᵀ ·̂ dO  with P = padiv(e, l);   dK = dSᵀ ·̂ Q.
+# Backward sweep 2: dK/dV with a (B*Hkv, nk, rep, nq) grid — KV tiles
+# outermost, then the query-head group, then query blocks, so each KV
+# tile's accumulators live in VMEM across the WHOLE query group and dK/dV
+# come back at true Hkv width.
+#   dV += Pᵀ ·̂ dO  with P = padiv(e, l);   dK += dSᵀ ·̂ Q.
 # ---------------------------------------------------------------------------
 
 def _dkv_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
                 dsig_ref, dk_ref, dv_ref, dk_acc, dv_acc,
-                *, g, nq, causal, window, scale):
-    iq = pl.program_id(2)
+                *, g, rep, nq, causal, window, scale):
+    r = pl.program_id(2)
+    iq = pl.program_id(3)
 
-    @pl.when(iq == 0)
+    @pl.when(jnp.logical_and(r == 0, iq == 0))
     def _init():
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
@@ -253,7 +257,7 @@ def _dkv_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
     ds = _ds_tile(e, dp, l, dsig, scale=scale)
     dk_acc[...] += _pam_dot(ds.T, q, g)            # (bk, dh)
 
-    @pl.when(iq == nq - 1)
+    @pl.when(jnp.logical_and(r == rep - 1, iq == nq - 1))
     def _out():
         dk_ref[0] = dk_acc[...]
         dv_ref[0] = dv_acc[...]
@@ -261,17 +265,23 @@ def _dkv_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "bq", "bk", "g", "interpret"))
-def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, m, l, do, *,
+def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, o, m, l, do, *,
                                causal: bool, window, scale, bq: int, bk: int,
                                g: int, interpret: bool):
-    """Recompute backward: (dq, dk, dv) from saved row stats (m, l)."""
+    """Two-sweep recompute backward: (dq, dk, dv) from saved (o, m, l).
+
+    q/o/do/m/l batch over B*Hq; k/v over B*Hkv. dk/dv are returned at true
+    Hkv width — the group accumulation happens inside the KV-outer sweep.
+    """
     bh, s_len, dh = q.shape
-    t = k.shape[1]
+    bkv, t = k.shape[0], k.shape[1]
+    rep = bh // bkv
     bq_, bk_ = min(bq, s_len), min(bk, t)
     sp, tp = -(-s_len // bq_) * bq_, -(-t // bk_) * bk_
     qp = jnp.pad(q, ((0, 0), (0, sp - s_len), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    op = jnp.pad(o, ((0, 0), (0, sp - s_len), (0, 0)))
     dop = jnp.pad(do, ((0, 0), (0, sp - s_len), (0, 0)))
     mp = jnp.pad(m, ((0, 0), (0, sp - s_len)), constant_values=_NEG)
     lp = jnp.pad(l, ((0, 0), (0, sp - s_len)), constant_values=1.0)
@@ -284,57 +294,51 @@ def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, m, l, do, *,
     pos_q_spec = pl.BlockSpec((1, bq_), lambda b, i, j: (0, i))
     pos_k_spec = pl.BlockSpec((1, bk_), lambda b, i, j: (0, j))
     q_spec = pl.BlockSpec((1, bq_, dh), lambda b, i, j: (b, i, 0))
-    kv_spec = pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b, j, 0))
+    kv_spec = pl.BlockSpec((1, bk_, dh), lambda b, i, j: (b // rep, j, 0))
     row_spec = pl.BlockSpec((1, bq_), lambda b, i, j: (b, i))
 
-    dsig = pl.pallas_call(
-        functools.partial(_dsig_kernel, g=g, nk=nk, causal=causal,
-                          window=window, scale=scale),
-        grid=(bh, nq, nk),
-        in_specs=[pos_q_spec, pos_k_spec, q_spec, kv_spec, kv_spec, q_spec,
-                  row_spec, row_spec],
-        out_specs=row_spec,
-        out_shape=jax.ShapeDtypeStruct((bh, sp), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bq_, 1), jnp.float32)],
-        interpret=interpret,
-    )(qpos, kpos, qp, kp, vp, dop, mp, lp)
-
-    dq = pl.pallas_call(
+    dq, dsig = pl.pallas_call(
         functools.partial(_dq_kernel, g=g, nk=nk, causal=causal,
                           window=window, scale=scale),
         grid=(bh, nq, nk),
         in_specs=[pos_q_spec, pos_k_spec, q_spec, kv_spec, kv_spec, q_spec,
-                  row_spec, row_spec, row_spec],
-        out_specs=q_spec,
-        out_shape=jax.ShapeDtypeStruct((bh, sp, dh), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bq_, dh), jnp.float32)],
+                  q_spec, row_spec, row_spec],
+        out_specs=[q_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq_, dh), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
         interpret=interpret,
-    )(qpos, kpos, qp, kp, vp, dop, mp, lp, dsig)
+    )(qpos, kpos, qp, kp, vp, op, dop, mp, lp)
 
-    # KV-outer grid for dK/dV: positions/q/do are indexed by the *inner*
-    # grid dim (program_id(2)), KV tiles by program_id(1).
+    # KV-outer grid for dK/dV: KV tiles are indexed by program_id(1), the
+    # query group member by program_id(2), query blocks by program_id(3).
     dk, dv = pl.pallas_call(
-        functools.partial(_dkv_kernel, g=g, nq=nq, causal=causal,
+        functools.partial(_dkv_kernel, g=g, rep=rep, nq=nq, causal=causal,
                           window=window, scale=scale),
-        grid=(bh, nk, nq),
+        grid=(bkv, nk, rep, nq),
         in_specs=[
-            pl.BlockSpec((1, bq_), lambda b, j, i: (0, i)),
-            pl.BlockSpec((1, bk_), lambda b, j, i: (0, j)),
-            pl.BlockSpec((1, bq_, dh), lambda b, j, i: (b, i, 0)),
-            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
-            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
-            pl.BlockSpec((1, bq_, dh), lambda b, j, i: (b, i, 0)),
-            pl.BlockSpec((1, bq_), lambda b, j, i: (b, i)),
-            pl.BlockSpec((1, bq_), lambda b, j, i: (b, i)),
-            pl.BlockSpec((1, bq_), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq_), lambda b, j, r, i: (0, i)),
+            pl.BlockSpec((1, bk_), lambda b, j, r, i: (0, j)),
+            pl.BlockSpec((1, bq_, dh), lambda b, j, r, i: (b * rep + r, i, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, r, i: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, r, i: (b, j, 0)),
+            pl.BlockSpec((1, bq_, dh), lambda b, j, r, i: (b * rep + r, i, 0)),
+            pl.BlockSpec((1, bq_), lambda b, j, r, i: (b * rep + r, i)),
+            pl.BlockSpec((1, bq_), lambda b, j, r, i: (b * rep + r, i)),
+            pl.BlockSpec((1, bq_), lambda b, j, r, i: (b * rep + r, i)),
         ],
         out_specs=[
-            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
-            pl.BlockSpec((1, bk_, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, r, i: (b, j, 0)),
+            pl.BlockSpec((1, bk_, dh), lambda b, j, r, i: (b, j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bh, tp, dh), jnp.float32),
-            jax.ShapeDtypeStruct((bh, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bkv, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bkv, tp, dh), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bk_, dh), jnp.float32),

@@ -9,10 +9,18 @@ algorithm as a ``lax.scan`` over KV blocks built on the core PAM matmul
 engine — the portable fallback for non-Pallas backends, with the same
 O(S·Dh) live-memory profile.
 
-Both engines share one custom_vjp: forward saves only (q, k, v, positions,
-row stats), backward recomputes score tiles and evaluates the
-approx-derivative PA chain of the unfused composition (DESIGN.md §4.3).
-Numeric contract vs the unfused composition: DESIGN.md §4.2.
+GQA never replicates K/V: the Pallas engine shares each KV head across its
+query group through BlockSpec index maps (``b -> b // rep``); the jnp
+engine folds the group into the query-row axis (``(B*Hkv, rep*S, Dh)``
+with tiled positions — masking is purely positional, so the fold is free)
+and its per-block dK/dV contractions group-accumulate naturally. Peak
+fused-path K/V bytes are Hkv-sized on both engines.
+
+Both engines share one custom_vjp: forward saves (q, k, v, positions, o,
+row stats); the two-sweep backward recomputes score tiles once per sweep
+and evaluates the approx-derivative PA chain of the unfused composition
+with the delta-form ``dsig`` (DESIGN.md §4.3). Numeric contract vs the
+unfused composition: DESIGN.md §4.2.
 """
 from __future__ import annotations
 
@@ -39,8 +47,9 @@ def _swap(x):
 
 # ---------------------------------------------------------------------------
 # jnp streaming engine: identical math to the Pallas kernels, as a scan over
-# KV blocks. Carries (acc, m, l); the backward adds a dsig scan then one
-# scan producing dq (accumulated) and dk/dv (per-block stacked outputs).
+# KV blocks. Carries (acc, m, l); the backward computes the delta-form dsig
+# (no KV sweep) then one scan producing dq (accumulated) and dk/dv
+# (per-block stacked outputs, contracted over the folded query group).
 # ---------------------------------------------------------------------------
 
 def _kv_blocks(k, v, k_pos, bc):
@@ -69,10 +78,23 @@ def _block_scores(q, kblk, q_pos, kpblk, *, causal, window, scale):
     return jnp.where(valid, s, _NEG)
 
 
+def _fold_group(x, bkv, rows):
+    """(B*Hq, S, ...) -> (B*Hkv, rep*S, ...): query heads of one group
+    become extra query rows of their shared KV head (batch-major layout
+    makes this a pure reshape)."""
+    return x.reshape((bkv, rows) + x.shape[2:])
+
+
 def _jnp_fwd(q, k, v, q_pos, k_pos, *, causal, window, scale, bc):
-    bh, s_len, dh = q.shape
+    bhq, s_len, dh = q.shape
+    bkv = k.shape[0]
+    rep = bhq // bkv
     kb, vb, kpb, _ = _kv_blocks(k, v, k_pos, bc)
     qpos = q_pos.astype(jnp.int32)
+    if rep > 1:
+        q = _fold_group(q, bkv, rep * s_len)
+        qpos = jnp.tile(qpos, rep)
+    rows = q.shape[1]
 
     def step(carry, xs):
         acc, m_run, l_run = carry
@@ -86,87 +108,87 @@ def _jnp_fwd(q, k, v, q_pos, k_pos, *, causal, window, scale, bc):
         acc = pam_value(acc, alpha) + _pam_matmul_value(p, vblk)
         return (acc, m_new, l_new), None
 
-    acc0 = jnp.zeros((bh, s_len, dh), jnp.float32)
-    m0 = jnp.full((bh, s_len, 1), _NEG, jnp.float32)
-    l0 = jnp.zeros((bh, s_len, 1), jnp.float32)
+    acc0 = jnp.zeros((bkv, rows, dh), jnp.float32)
+    m0 = jnp.full((bkv, rows, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((bkv, rows, 1), jnp.float32)
     (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, kpb))
     o = padiv_value(acc, l)
-    return o, m[..., 0], l[..., 0]
+    return (o.reshape(bhq, s_len, dh), m.reshape(bhq, s_len),
+            l.reshape(bhq, s_len))
 
 
-def _jnp_bwd(q, k, v, q_pos, k_pos, m, l, do, *, causal, window, scale, bc):
-    bh, s_len, dh = q.shape
-    t = k.shape[1]
+def _jnp_bwd(q, k, v, q_pos, k_pos, o, m, l, do, *, causal, window, scale,
+             bc):
+    bhq, s_len, dh = q.shape
+    bkv, t = k.shape[0], k.shape[1]
+    rep = bhq // bkv
     kb, vb, kpb, tp = _kv_blocks(k, v, k_pos, bc)
     qpos = q_pos.astype(jnp.int32)
+    if rep > 1:
+        rows = rep * s_len
+        q, o, do = (_fold_group(x, bkv, rows) for x in (q, o, do))
+        m, l = (_fold_group(x, bkv, rows) for x in (m, l))
+        qpos = jnp.tile(qpos, rep)
     m = m[..., None]
     l = l[..., None]
-    ll = pam_value(l, l)
+    # Delta-form dsig (DESIGN.md §4.3): the exact-arithmetic identity
+    # Σ_j e·dP = l·(dO·O) collapses the old dsig KV sweep to one row op.
+    dsig = -padiv_value(jnp.sum(pam_value(do, o), axis=-1, keepdims=True), l)
 
-    def recompute(kblk, vblk, kpblk):
+    def grad_step(dq_acc, xs):
+        kblk, vblk, kpblk = xs
         s = _block_scores(q, kblk, qpos, kpblk, causal=causal, window=window,
                           scale=scale)
         e = paexp2_value(pam_value(s - m, _LOG2E))
         dp = _pam_matmul_value(do, _swap(vblk))
-        return e, dp
-
-    def dsig_step(acc, xs):
-        e, dp = recompute(*xs)
-        return acc + jnp.sum(padiv_value(pam_value(e, dp), ll), axis=-1,
-                             keepdims=True), None
-
-    dsig0 = jnp.zeros((bh, s_len, 1), jnp.float32)
-    dsig, _ = jax.lax.scan(dsig_step, dsig0, (kb, vb, kpb))
-    dsig = -dsig
-
-    def grad_step(dq_acc, xs):
-        kblk, vblk, kpblk = xs
-        e, dp = recompute(kblk, vblk, kpblk)
         p = padiv_value(e, l)
-        dv_blk = _pam_matmul_value(_swap(p), do)           # (BH, bc, Dh)
+        dv_blk = _pam_matmul_value(_swap(p), do)           # (B*Hkv, bc, Dh)
         de = padiv_value(dp, l) + dsig
         du = pam_value(pam_value(e, _LN2), de)
         ds = pam_value(du, _LOG2E)
         if scale is not None:
             ds = pam_value(ds, np.float32(scale))
-        dk_blk = _pam_matmul_value(_swap(ds), q)           # (BH, bc, Dh)
+        dk_blk = _pam_matmul_value(_swap(ds), q)           # (B*Hkv, bc, Dh)
         return dq_acc + _pam_matmul_value(ds, kblk), (dk_blk, dv_blk)
 
-    dq0 = jnp.zeros((bh, s_len, dh), jnp.float32)
+    dq0 = jnp.zeros(q.shape, jnp.float32)
     dq, (dkb, dvb) = jax.lax.scan(grad_step, dq0, (kb, vb, kpb))
-    dk = jnp.moveaxis(dkb, 0, 1).reshape(bh, tp, dh)[:, :t]
-    dv = jnp.moveaxis(dvb, 0, 1).reshape(bh, tp, dh)[:, :t]
-    return dq, dk, dv
+    dk = jnp.moveaxis(dkb, 0, 1).reshape(bkv, tp, dh)[:, :t]
+    dv = jnp.moveaxis(dvb, 0, 1).reshape(bkv, tp, dh)[:, :t]
+    return dq.reshape(bhq, s_len, dh), dk, dv
 
 
 # ---------------------------------------------------------------------------
-# custom_vjp glue (per static numeric configuration).
+# custom_vjp glue (per static numeric configuration). Forward and backward
+# resolve their tile params independently (the two-sweep backward prefers
+# different KV block sizes — autotune op "pam_attention_bwd").
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
 def _build(causal: bool, window, scale, impl: str, bq: int, bk: int, g: int,
-           interpret: bool):
+           bbq: int, bbk: int, bg: int, interpret: bool):
     if impl == "pallas":
         def fwd_fn(q, k, v, qpos, kpos):
             return _pk.pam_flash_attention_fwd_bh(
                 q, k, v, qpos, kpos, causal=causal, window=window,
                 scale=scale, bq=bq, bk=bk, g=g, interpret=interpret)
 
-        def bwd_fn(q, k, v, qpos, kpos, m, l, do):
+        def bwd_fn(q, k, v, qpos, kpos, o, m, l, do):
             return _pk.pam_flash_attention_bwd_bh(
-                q, k, v, qpos, kpos, m, l, do, causal=causal, window=window,
-                scale=scale, bq=bq, bk=bk, g=g, interpret=interpret)
+                q, k, v, qpos, kpos, o, m, l, do, causal=causal,
+                window=window, scale=scale, bq=bbq, bk=bbk, g=bg,
+                interpret=interpret)
     else:
         fwd_jit = jax.jit(functools.partial(
             _jnp_fwd, causal=causal, window=window, scale=scale, bc=bk))
         bwd_jit = jax.jit(functools.partial(
-            _jnp_bwd, causal=causal, window=window, scale=scale, bc=bk))
+            _jnp_bwd, causal=causal, window=window, scale=scale, bc=bbk))
 
         def fwd_fn(q, k, v, qpos, kpos):
             return fwd_jit(q, k, v, qpos, kpos)
 
-        def bwd_fn(q, k, v, qpos, kpos, m, l, do):
-            return bwd_jit(q, k, v, qpos, kpos, m, l, do)
+        def bwd_fn(q, k, v, qpos, kpos, o, m, l, do):
+            return bwd_jit(q, k, v, qpos, kpos, o, m, l, do)
 
     @jax.custom_vjp
     def att(q, k, v, qpos, kpos):
@@ -174,11 +196,11 @@ def _build(causal: bool, window, scale, impl: str, bq: int, bk: int, g: int,
 
     def fwd(q, k, v, qpos, kpos):
         o, m, l = fwd_fn(q, k, v, qpos, kpos)
-        return o, (q, k, v, qpos, kpos, m, l)
+        return o, (q, k, v, qpos, kpos, o, m, l)
 
     def bwd(res, do):
-        q, k, v, qpos, kpos, m, l = res
-        dq, dk, dv = bwd_fn(q, k, v, qpos, kpos, m, l,
+        q, k, v, qpos, kpos, o, m, l = res
+        dq, dk, dv = bwd_fn(q, k, v, qpos, kpos, o, m, l,
                             jnp.asarray(do, jnp.float32))
         zero = lambda p: np.zeros(np.shape(p), jax.dtypes.float0)
         return dq, dk, dv, zero(qpos), zero(kpos)
@@ -194,30 +216,38 @@ def pam_flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
 
     q: (B, S, Hq, Dh), k/v: (B, T, Hkv, Dh) with Hq % Hkv == 0;
     q_pos: (S,), k_pos: (T,) absolute positions (k_pos < 0 = empty slot).
-    ``scale``: None means the caller already folded the 1/sqrt(dh) into q
-    (attn_scale_in_q); a float is PAM-multiplied into the score tiles —
-    matching ``scale_const`` on the unfused score tensor. ``impl``:
-    "pallas" (kernels; interpret on CPU) or "jnp" (streaming scan).
+    K/V are flattened to their TRUE (B*Hkv, T, Dh) width — the query group
+    shares its KV head through the engines' index maps, never via
+    ``jnp.repeat``. ``scale``: None means the caller already folded the
+    1/sqrt(dh) into q (attn_scale_in_q); a float is PAM-multiplied into the
+    score tiles — matching ``scale_const`` on the unfused score tensor.
+    ``impl``: "pallas" (kernels; interpret on CPU) or "jnp" (streaming
+    scan). ``bq``/``bk``/``g`` override BOTH sweeps' tile params (tests);
+    by default forward and backward resolve independently from
+    ``kernels/autotune.py``.
     """
     b, s_len, hq, dh = q.shape
     t, hkv = k.shape[1], k.shape[2]
-    if hq != hkv:
-        rep = hq // hkv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
+    if hq % hkv:
+        # rep = bh // bkv truncates, so a non-divisible head count would
+        # silently map late query heads onto a clamped KV block index.
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got Hq={hq} Hkv={hkv}")
     qf = jnp.asarray(q, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, s_len, dh)
-    kf = jnp.asarray(k, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
-    vf = jnp.asarray(v, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, t, dh)
+    kf = jnp.asarray(k, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
+    vf = jnp.asarray(v, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
 
     interpret = use_interpret()
     abq, abk, ag = autotune.tile_params("pam_attention", (s_len, t, dh),
                                         interpret)
+    bbq, bbk, bg = autotune.tile_params("pam_attention_bwd", (s_len, t, dh),
+                                        interpret)
     bq_, bk_, g_ = bq or abq, bk or abk, g or ag
+    bbq_, bbk_, bg_ = bq or bbq, bk or bbk, g or bg
     scale_ = None if scale is None else float(np.float32(scale))
     window_ = None if window is None else int(window)
 
     att = _build(bool(causal), window_, scale_, impl, int(bq_), int(bk_),
-                 int(g_), interpret)
+                 int(g_), int(bbq_), int(bbk_), int(bg_), interpret)
     o = att(qf, kf, vf, jnp.asarray(q_pos, jnp.int32),
             jnp.asarray(k_pos, jnp.int32))
     return o.reshape(b, hq, s_len, dh).transpose(0, 2, 1, 3)

@@ -229,15 +229,31 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
             kc = k[:, -smax:].astype(layer_cache["k"].dtype)
             vc = v[:, -smax:].astype(layer_cache["v"].dtype)
             kp = positions[0, -smax:].astype(jnp.int32)
+        elif s == 1:
+            # decode hot path: a single-row write can never cross the wrap,
+            # so keep the cheap dynamic_update_slice (slot < smax always).
+            slot = jnp.mod(positions[0, 0], smax)
+            kc = jax.lax.dynamic_update_slice(
+                layer_cache["k"], k.astype(layer_cache["k"].dtype),
+                (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
+            vc = jax.lax.dynamic_update_slice(
+                layer_cache["v"], v.astype(layer_cache["v"].dtype),
+                (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
+            kp = jax.lax.dynamic_update_slice(
+                layer_cache["kpos"], positions[0].astype(jnp.int32), (slot,))
         else:
-            start = positions[0, 0]                   # contiguous writes
-            slot = jnp.mod(start, smax)
-            kc = jax.lax.dynamic_update_slice(layer_cache["k"], k.astype(layer_cache["k"].dtype),
-                                              (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
-            vc = jax.lax.dynamic_update_slice(layer_cache["v"], v.astype(layer_cache["v"].dtype),
-                                              (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
-            kp = jax.lax.dynamic_update_slice(layer_cache["kpos"], positions[0].astype(jnp.int32),
-                                              (slot,))
+            # Wrap-aware contiguous write: a chunk whose slots cross the
+            # rolling-window boundary must split across the wrap. A plain
+            # dynamic_update_slice CLAMPS its start index, which would
+            # silently shift the whole chunk into the wrong slots — so
+            # scatter each row to its own slot = pos % smax instead.
+            slots = jnp.mod(positions[0].astype(jnp.int32), smax)
+            kc = layer_cache["k"].at[:, slots].set(
+                k.astype(layer_cache["k"].dtype))
+            vc = layer_cache["v"].at[:, slots].set(
+                v.astype(layer_cache["v"].dtype))
+            kp = layer_cache["kpos"].at[slots].set(
+                positions[0].astype(jnp.int32))
         kc = constrain(kc, ("cache_batch", "cache_seq", "cache_kv", None))
         vc = constrain(vc, ("cache_batch", "cache_seq", "cache_kv", None))
         new_cache = {"k": kc, "v": vc, "kpos": kp}

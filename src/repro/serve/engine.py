@@ -57,9 +57,14 @@ class Engine:
                 self.model.cfg.cdtype)
         logits, cache = self._prefill(self.params, batch, cache)
 
+        # One key per sampling step, each a fresh split — the root key is
+        # only ever a split parent. (Sampling the first token with the root
+        # key and then splitting that same key would reuse key material,
+        # correlating the first sample with the whole stream.)
         key = jax.random.PRNGKey(self.cfg.seed)
         out = []
-        tok = self._sample(logits, key)
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
         for i in range(max_new_tokens):
             out.append(tok)
             key, sub = jax.random.split(key)

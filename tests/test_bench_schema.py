@@ -4,6 +4,8 @@ import json
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.check_bench_schema import (bench_files, validate_file,
@@ -48,6 +50,53 @@ def test_rejects_unreadable(tmp_path):
     assert any("unreadable" in e for e in validate_file(str(p)))
 
 
+def test_attention_requires_v2_backward_fields():
+    """BENCH_pam_attention.json is schema v2: backward-engine provenance,
+    the vs-unfused-live backward ratio, GQA KV accounting and the kernel
+    fingerprint are all mandatory."""
+    base = {"benchmark": "pam_attention", "schema_version": 1,
+            "generated_utc": "t", "backend": "cpu",
+            "pallas_mode": "interpret",
+            "timing": {"rounds": 1, "stat": "min", "unit": "us"},
+            "forward_us": {"a": 1.0}, "fwd_bwd_us": {"a": 1.0},
+            "forward_speedup_vs_seed": {"a": 1.0},
+            "slowdown_vs_native": {"a": 1.0}}
+    errs = validate_report(base, "BENCH_pam_attention.json")
+    assert any("schema_version must be 2" in e for e in errs)
+    base["schema_version"] = 2
+    errs = validate_report(base, "BENCH_pam_attention.json")
+    assert any("backward" in e for e in errs)
+    assert any("fwd_bwd_speedup_vs_unfused_live" in e for e in errs)
+    assert any("gqa" in e for e in errs)
+    assert any("flash_attention_fingerprint" in e for e in errs)
+    base.update({
+        "backward": {"engine": "two_sweep_recompute", "sweeps": 2},
+        "fwd_bwd_speedup_vs_unfused_live": {"a": 1.0},
+        "gqa": {"kv_bytes_fused": 1, "kv_bytes_repeat": 2,
+                "kv_repeat_free": True},
+        "flash_attention_fingerprint": "abc",
+    })
+    assert validate_report(base, "BENCH_pam_attention.json") == []
+
+
+def test_rejects_stale_attention_fingerprint(tmp_path):
+    """A committed attention trajectory point generated from OLD kernel
+    sources must fail validation — flash_attention/ changes force a bench
+    re-run."""
+    import benchmarks.check_bench_schema as cbs
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_pam_attention.json")) as f:
+        report = json.load(f)
+    report["flash_attention_fingerprint"] = "0" * 16
+    p = tmp_path / "BENCH_pam_attention.json"
+    p.write_text(json.dumps(report))
+    errs = cbs.validate_file(str(p))
+    assert any("stale" in e for e in errs)
+    # (the committed file's own freshness is covered by
+    # test_committed_trajectory_files_valid — validate_file recomputes the
+    # digest of src/repro/kernels/flash_attention/*.py on every run)
+
+
 def test_rejects_non_numeric_us(tmp_path):
     bad = {"benchmark": "z", "schema_version": 1, "generated_utc": "t",
            "backend": "cpu", "pallas_mode": "interpret",
@@ -57,3 +106,34 @@ def test_rejects_non_numeric_us(tmp_path):
            "slowdown_vs_native": {"a": 1.0}}
     errs = validate_report(bad, "BENCH_z.json")
     assert any("forward_us" in e for e in errs)
+
+
+@pytest.mark.slow
+def test_smoke_bench_runs_gates_and_validates(tmp_path):
+    """`make bench-fast` path: the attention bench at smoke shapes must run
+    its correctness gates and produce a structurally v2-complete report
+    (written to a throwaway path, never the tracked trajectory point)."""
+    from benchmarks import pam_attention_bench
+    out = tmp_path / "BENCH_smoke.json"
+    pam_attention_bench.main(["--smoke", "--out", str(out)])
+    report = json.loads(out.read_text())
+    assert report["backward"]["sweeps"] == 2
+    assert report["gqa"]["kv_repeat_free"] is True
+    assert report["gates_passed"], "no gates ran"
+
+
+def test_bench_gates_exit_nonzero_on_failure(capsys):
+    """A tripped correctness gate must abort the bench with a nonzero exit
+    (no JSON gets written) — a regressed kernel can't leave a green file."""
+    from benchmarks.pam_attention_bench import _Gates
+
+    def boom():
+        raise AssertionError("kernel regressed")
+
+    g = _Gates()
+    g.run("ok", lambda: None)
+    g.run("boom", boom)
+    with pytest.raises(SystemExit) as e:
+        g.finish()
+    assert e.value.code == 2
+    assert "boom" in capsys.readouterr().err

@@ -188,9 +188,18 @@ class TestCompositionTier:
         self._assert_close(*self._ref_and_fused(rng, s=96, t=96, dh=16,
                                                 window=24))
 
-    def test_gqa_groups(self, rng):
-        self._assert_close(*self._ref_and_fused(rng, s=64, t=64, dh=16,
-                                                hq=4, hkv=2))
+    @pytest.mark.parametrize("impl", ["pallas", "jnp"])
+    @pytest.mark.parametrize("hq,hkv", [(4, 2), (8, 2)])
+    def test_gqa_groups(self, rng, impl, hq, hkv):
+        """dK/dV parity at TRUE Hkv width: the unfused reference reaches
+        Hkv-wide grads by differentiating through jnp.repeat (summing the
+        group); the fused path must match via its in-kernel group
+        accumulation — without ever materialising repeated K/V."""
+        o_r, g_r, o_f, g_f = self._ref_and_fused(rng, s=64, t=64, dh=16,
+                                                 hq=hq, hkv=hkv, impl=impl)
+        assert g_f[1].shape == (2, 64, hkv, 16)
+        assert g_f[2].shape == (2, 64, hkv, 16)
+        self._assert_close(o_r, g_r, o_f, g_f)
 
     def test_ragged_tail(self, rng):
         self._assert_close(*self._ref_and_fused(rng, s=70, t=70, dh=16))
@@ -198,6 +207,43 @@ class TestCompositionTier:
     def test_noncausal_cross_shape(self, rng):
         self._assert_close(*self._ref_and_fused(rng, s=40, t=70, dh=16,
                                                 causal=False))
+
+
+class TestGqaSharing:
+    """The fused GQA path must keep K/V at Hkv width end to end — the KV
+    head is shared through index maps (Pallas) / the folded query-row axis
+    (jnp), never via jnp.repeat."""
+
+    def test_rejects_non_divisible_head_counts(self):
+        """Hq % Hkv != 0 must fail loudly — the b // rep index map would
+        otherwise clamp and silently mis-share KV heads."""
+        q = jnp.zeros((1, 8, 3, 8), jnp.float32)
+        kv = jnp.zeros((1, 8, 2, 8), jnp.float32)
+        pos = jnp.arange(8)
+        with pytest.raises(ValueError, match="Hq % Hkv"):
+            pam_flash_attention(q, kv, kv, pos, pos)
+
+    @pytest.mark.parametrize("impl", ["pallas", "jnp"])
+    def test_no_repeated_kv_intermediate(self, impl):
+        b, s, t, hq, hkv, dh = 1, 16, 48, 4, 2, 8
+        q = jnp.zeros((b, s, hq, dh), jnp.float32)
+        k = jnp.zeros((b, t, hkv, dh), jnp.float32)
+        v = jnp.zeros((b, t, hkv, dh), jnp.float32)
+        qp = jnp.arange(t - s, t)
+        kp = jnp.arange(t)
+
+        def loss(q, k, v):
+            return jnp.sum(pam_flash_attention(q, k, v, qp, kp, causal=True,
+                                               scale=0.5, impl=impl,
+                                               bq=16, bk=16))
+
+        txt = str(jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v))
+        # A repeat-materialised KV would show up as a (B*Hq, T, Dh) or
+        # (B, T, Hq, Dh) f32 intermediate somewhere in the jaxpr.
+        for bad in (f"f32[{b * hq},{t},{dh}]", f"f32[{b},{t},{hq},{dh}]"):
+            assert bad not in txt, f"repeated-KV intermediate {bad} found"
+        # ... while the true-width KV arrays are there.
+        assert f"f32[{b * hkv},{t},{dh}]" in txt
 
 
 class TestModelDispatch:
@@ -255,7 +301,7 @@ class TestModelDispatch:
 
 class TestBackwardKernels:
     def test_bwd_matches_jnp_engine(self, rng):
-        """The three Pallas backward sweeps == the jnp streaming backward."""
+        """The two Pallas backward sweeps == the jnp streaming backward."""
         from repro.kernels.flash_attention.pam_ops import _jnp_bwd
         bh, s, dh = 3, 48, 16
         q, k, v = _mk(rng, bh, s, s, dh)
@@ -264,11 +310,75 @@ class TestBackwardKernels:
         scale = float(np.float32(1.0 / np.sqrt(dh)))
         o, m, l = _fwd(q, k, v, scale=scale, bq=16, bk=16)
         got = pam_flash_attention_bwd_bh(
-            q, k, v, pos, pos, m, l, do, causal=True, window=None,
+            q, k, v, pos, pos, o, m, l, do, causal=True, window=None,
             scale=scale, bq=16, bk=16, g=16, interpret=True)
-        want = _jnp_bwd(q, k, v, pos, pos, m, l, do, causal=True,
+        want = _jnp_bwd(q, k, v, pos, pos, o, m, l, do, causal=True,
                         window=None, scale=scale, bc=16)
         for name, a, b in zip(("dq", "dk", "dv"), got, want):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-5, atol=1e-5,
                                        err_msg=name)
+
+    def test_bwd_gqa_group_accumulation(self, rng):
+        """Pallas dK/dV group accumulation (the (B*Hkv, nk, rep, nq) grid)
+        == the jnp engine's folded-group contraction, at true Hkv width."""
+        from repro.kernels.flash_attention.pam_ops import _jnp_bwd, _jnp_fwd
+        bkv, rep, s, dh = 2, 3, 32, 16
+        q = jnp.asarray(rng.standard_normal((bkv * rep, s, dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((bkv, s, dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((bkv, s, dh)), jnp.float32)
+        do = jnp.asarray(rng.standard_normal((bkv * rep, s, dh)), jnp.float32)
+        pos = jnp.arange(s)
+        scale = float(np.float32(1.0 / np.sqrt(dh)))
+        o, m, l = pam_flash_attention_fwd_bh(
+            q, k, v, pos, pos, causal=True, window=None, scale=scale,
+            bq=16, bk=16, g=16, interpret=True)
+        got = pam_flash_attention_bwd_bh(
+            q, k, v, pos, pos, o, m, l, do, causal=True, window=None,
+            scale=scale, bq=16, bk=16, g=16, interpret=True)
+        want = _jnp_bwd(q, k, v, pos, pos, o, m, l, do, causal=True,
+                        window=None, scale=scale, bc=16)
+        assert got[1].shape == (bkv, s, dh) and got[2].shape == (bkv, s, dh)
+        for name, a, b in zip(("dq", "dk", "dv"), got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5, err_msg=name)
+
+    def test_k1_bit_exact_recompute_through_backward(self, rng):
+        """Dh=1 makes every recomputed score a single PAM product (bit-exact
+        vs pam_value under the §2.3 contract). With one KV block there is no
+        streaming rescale either, so the two-sweep backward must equal a
+        dense value-level evaluation of the §4.3 chain on pam_value-
+        recomputed tiles to f32 sum order."""
+        from repro.core.pam import padiv_value, paexp2_value
+        from repro.kernels.pa_prims import _LOG2E, _LN2
+        bh, s, dh = 2, 24, 1
+        q, k, v = _mk(rng, bh, s, s, dh)
+        do = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
+        pos = jnp.arange(s)
+        o, m, l = pam_flash_attention_fwd_bh(
+            q, k, v, pos, pos, causal=True, window=None, scale=None,
+            bq=s, bk=s, g=16, interpret=True)
+        got = pam_flash_attention_bwd_bh(
+            q, k, v, pos, pos, o, m, l, do, causal=True, window=None,
+            scale=None, bq=s, bk=s, g=16, interpret=True)
+
+        # Dense value-level reference: every product via pam_value.
+        sc = pam_value(q, jnp.swapaxes(k, -1, -2))          # Dh=1: (bh,s,s)
+        mask = (pos[None, :] <= pos[:, None])[None]
+        sc = jnp.where(mask, sc, np.float32(-1e30))
+        e = paexp2_value(pam_value(sc - m[..., None], _LOG2E))
+        ll = l[..., None]
+        p = padiv_value(e, ll)
+        dp = pam_value(do, jnp.swapaxes(v, -1, -2))         # Dh=1 product
+        dsig = -padiv_value(jnp.sum(pam_value(do, o), -1, keepdims=True), ll)
+        de = padiv_value(dp, ll) + dsig
+        ds = pam_value(pam_value(pam_value(e, _LN2), de), _LOG2E)
+        dq = jnp.sum(pam_value(ds, jnp.swapaxes(k, -1, -2)), -1,
+                     keepdims=True)
+        dk = jnp.sum(pam_value(jnp.swapaxes(ds, -1, -2),
+                               jnp.swapaxes(q, -1, -2)), -1, keepdims=True)
+        dv = jnp.sum(pam_value(jnp.swapaxes(p, -1, -2),
+                               jnp.swapaxes(do, -1, -2)), -1, keepdims=True)
+        for name, a, b in zip(("dq", "dk", "dv"), got, (dq, dk, dv)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6, err_msg=name)
