@@ -26,11 +26,12 @@ bench:
 	  $(PY) -m benchmarks.$$mod; done
 	$(PY) -m benchmarks.check_bench_schema
 
-# Smoke-shape attention bench for the test tier: same correctness gates
-# and report plumbing as `bench`, tiny shapes, throwaway output path (the
-# committed BENCH_pam_attention.json is never touched).
+# Smoke-shape attention + optimizer benches for the test tier: same
+# correctness gates and report plumbing as `bench`, tiny shapes, throwaway
+# output paths (the committed BENCH_*.json files are never touched).
 bench-fast:
 	$(PY) -m benchmarks.pam_attention_bench --smoke
+	$(PY) -m benchmarks.pam_optim_bench --smoke
 
 # Full benchmark suite (paper tables/figures + trajectory harness).
 bench-all:

@@ -16,6 +16,13 @@ byte accounting, and a ``flash_attention_fingerprint`` — a digest of
 recomputes that digest, so ANY change to the fused kernels without
 regenerating the trajectory point fails the test tier.
 
+``BENCH_pam_optim.json`` (the fused PA-AdamW family, DESIGN.md §5) must
+carry a ``pam_optim_fingerprint`` (same freshness mechanism, digest of
+``src/repro/kernels/pam_optim/*.py``), a non-empty ``gates_passed``
+record, the ``update_speedup_vs_seed`` ratios, and a
+``multiplication_audit`` object whose ``tensor_total`` is 0 — a leaky
+optimizer cannot commit a trajectory point.
+
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
 or import ``validate_report`` / ``validate_file`` from tests.
 """
@@ -39,11 +46,12 @@ _REQUIRED_TIMING = ("rounds", "stat", "unit")
 _EXPECTED_VERSION = {"pam_attention": 2}
 
 
-def flash_attention_fingerprint(root: str = _ROOT) -> str:
-    """Digest of the fused-attention kernel sources. Recorded by the bench
-    at generation time and recomputed here: a stale BENCH_pam_attention.json
-    (kernels edited, bench not re-run) fails validation."""
-    d = os.path.join(root, "src", "repro", "kernels", "flash_attention")
+def kernel_fingerprint(subdir: str, root: str = _ROOT) -> str:
+    """Digest of one kernel family's sources (``src/repro/kernels/<subdir>``).
+    Recorded by the family's bench at generation time and recomputed here:
+    a stale trajectory point (kernels edited, bench not re-run) fails
+    validation."""
+    d = os.path.join(root, "src", "repro", "kernels", subdir)
     h = hashlib.sha256()
     for p in sorted(glob.glob(os.path.join(d, "*.py"))):
         h.update(os.path.basename(p).encode() + b"\0")
@@ -51,6 +59,14 @@ def flash_attention_fingerprint(root: str = _ROOT) -> str:
             h.update(f.read())
         h.update(b"\0")
     return h.hexdigest()[:16]
+
+
+def flash_attention_fingerprint(root: str = _ROOT) -> str:
+    return kernel_fingerprint("flash_attention", root)
+
+
+def pam_optim_fingerprint(root: str = _ROOT) -> str:
+    return kernel_fingerprint("pam_optim", root)
 
 
 def _is_num(x) -> bool:
@@ -111,6 +127,8 @@ def validate_report(report, name: str) -> list:
 
     if expect_ver >= 2:
         errs.extend(_validate_v2_attention(report, name))
+    if report.get("benchmark") == "pam_optim":
+        errs.extend(_validate_pam_optim(report, name))
 
     bench = report.get("benchmark")
     if isinstance(bench, str) and name.startswith("BENCH_"):
@@ -151,6 +169,31 @@ def _validate_v2_attention(report, name: str) -> list:
     return errs
 
 
+def _validate_pam_optim(report, name: str) -> list:
+    """Fused PA-AdamW trajectory fields (DESIGN.md §5): the fused-kernel
+    source fingerprint, the correctness-gate record, and the
+    multiplication-audit summary are all mandatory."""
+    errs = []
+    if not isinstance(report.get("pam_optim_fingerprint"), str):
+        errs.append(f"{name}: pam_optim requires 'pam_optim_fingerprint'")
+    gates = report.get("gates_passed")
+    if not (isinstance(gates, list) and gates):
+        errs.append(f"{name}: pam_optim requires a non-empty 'gates_passed' "
+                    f"list")
+    if not _numeric_dict(report.get("update_speedup_vs_seed")):
+        errs.append(f"{name}: pam_optim requires numeric "
+                    f"'update_speedup_vs_seed'")
+    audit = report.get("multiplication_audit")
+    if not isinstance(audit, dict):
+        errs.append(f"{name}: pam_optim requires a 'multiplication_audit' "
+                    f"object")
+    elif audit.get("tensor_total") != 0:
+        errs.append(f"{name}: multiplication_audit.tensor_total must be 0 — "
+                    f"the fused PA update may not emit tensor-shaped "
+                    f"multiplies")
+    return errs
+
+
 def validate_file(path: str) -> list:
     name = os.path.basename(path)
     try:
@@ -159,17 +202,23 @@ def validate_file(path: str) -> list:
     except (OSError, json.JSONDecodeError) as e:
         return [f"{name}: unreadable ({e})"]
     errs = validate_report(report, name)
-    # Freshness: the committed attention trajectory point must have been
-    # generated from the CURRENT fused-kernel sources.
-    if (isinstance(report, dict) and report.get("benchmark") == "pam_attention"
-            and isinstance(report.get("flash_attention_fingerprint"), str)):
-        want = flash_attention_fingerprint()
-        got = report["flash_attention_fingerprint"]
-        if got != want:
-            errs.append(
-                f"{name}: stale — flash_attention_fingerprint {got!r} does "
-                f"not match the current kernels ({want!r}); re-run "
-                f"`python -m benchmarks.pam_attention_bench`")
+    # Freshness: a committed trajectory point must have been generated from
+    # the CURRENT sources of its kernel family.
+    _FRESH = {"pam_attention": ("flash_attention_fingerprint",
+                                "flash_attention", "pam_attention_bench"),
+              "pam_optim": ("pam_optim_fingerprint",
+                            "pam_optim", "pam_optim_bench")}
+    bench = report.get("benchmark") if isinstance(report, dict) else None
+    if bench in _FRESH:
+        field, subdir, module = _FRESH[bench]
+        got = report.get(field)
+        if isinstance(got, str):
+            want = kernel_fingerprint(subdir)
+            if got != want:
+                errs.append(
+                    f"{name}: stale — {field} {got!r} does not match the "
+                    f"current kernels ({want!r}); re-run "
+                    f"`python -m benchmarks.{module}`")
     return errs
 
 

@@ -6,7 +6,9 @@ between baseline and PA variants — the paper's central "drop-in" claim.
 """
 from __future__ import annotations
 
+import sys
 import time
+import traceback
 
 import numpy as np
 import jax
@@ -45,6 +47,37 @@ def train_lm(cfg: ModelConfig, steps: int = 80, data: DataConfig = DATA,
         params, st, m = step(params, st, b)
         losses.append(float(m["loss"]))
     return float(np.mean(losses[-10:])), losses
+
+
+class Gates:
+    """Correctness gates shared by the trajectory benches. Failures
+    accumulate; ``finish`` exits nonzero (before any JSON is written) if
+    any gate tripped, so a regressed engine can never commit a
+    green-looking trajectory point."""
+
+    def __init__(self, bench: str = "bench"):
+        self.bench = bench
+        self.failures = []
+        self.passed = []
+
+    def run(self, name, fn):
+        try:
+            fn()
+        except Exception as e:      # noqa: BLE001 — any failure gates
+            msg = str(e).strip().splitlines()
+            self.failures.append(f"{name}: {msg[0] if msg else type(e).__name__}")
+            traceback.print_exc()
+        else:
+            self.passed.append(name)
+
+    def finish(self):
+        if self.failures:
+            for f in self.failures:
+                print(f"GATE FAILED — {f}", file=sys.stderr)
+            print(f"{self.bench}: {len(self.failures)} correctness "
+                  f"gate(s) failed; refusing to write a trajectory point",
+                  file=sys.stderr)
+            sys.exit(2)
 
 
 def interleaved_min_ms(fns: dict, rounds: int) -> dict:

@@ -32,7 +32,6 @@ import os
 import sys
 import tempfile
 import time
-import traceback
 
 import numpy as np
 import jax
@@ -53,32 +52,11 @@ _OUT = os.path.join(_ROOT, "BENCH_pam_attention.json")
 _CONTRACT_ATOL = 0.2                     # DESIGN.md §4.2 fused-vs-unfused
 
 
-class _Gates:
-    """Correctness gates. Failures accumulate; `finish` exits nonzero
-    (before any JSON is written) if any gate tripped."""
-
-    def __init__(self):
-        self.failures = []
-        self.passed = []
-
-    def run(self, name, fn):
-        try:
-            fn()
-        except Exception as e:      # noqa: BLE001 — any failure gates
-            msg = str(e).strip().splitlines()
-            self.failures.append(f"{name}: {msg[0] if msg else type(e).__name__}")
-            traceback.print_exc()
-        else:
-            self.passed.append(name)
-
-    def finish(self):
-        if self.failures:
-            for f in self.failures:
-                print(f"GATE FAILED — {f}", file=sys.stderr)
-            print(f"pam_attention_bench: {len(self.failures)} correctness "
-                  f"gate(s) failed; refusing to write a trajectory point",
-                  file=sys.stderr)
-            sys.exit(2)
+def _Gates():
+    """Correctness-gate collector (shared ``common.Gates``, named for this
+    bench's failure banner)."""
+    from .common import Gates
+    return Gates("pam_attention_bench")
 
 
 def _grad_contract(name, a, b, atol=_CONTRACT_ATOL):

@@ -1,0 +1,243 @@
+"""Fused PA-AdamW optimizer benchmark -> BENCH_pam_optim.json at repo root.
+
+Measures the fused PA AdamW update (``kernels/pam_optim`` — Pallas kernel
+and jnp engine, dispatched through the live ``optim.adamw_update``) against
+the frozen value-level seed chain (``seed_reference.seed_pa_adamw_update``,
+the pre-fusion per-op composition) and the native float AdamW update — all
+full optimizer steps (global-norm clip scale included) on a transformer-
+shaped parameter tree, in-process and interleaved per the perf-trajectory
+protocol (ROADMAP.md "Benchmark protocol").
+
+Correctness gates the file's existence (exit nonzero, no JSON on failure):
+
+  * the two fused engines must agree BIT FOR BIT (f32 and bf16 moments),
+  * the fused update must be bit-identical to the frozen value-level seed
+    chain (same PA ops, fused layout — parity is the §5 contract),
+  * extreme ±1e20 gradients must stay finite,
+  * the update jaxpr must audit multiplication-free
+    (``launch.hlo_stats.jaxpr_mul_stats``: zero tensor-shaped mul-family
+    ops on both engines, O(1) scalar schedule and power-of-two literal
+    scales exempt).
+
+``--smoke`` runs the same gates + timing at tiny shapes and writes the
+JSON to a throwaway path — a `make bench-fast` entry for the test tier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PAConfig
+from repro.kernels._backend import use_interpret
+from repro.kernels import autotune
+from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from .common import Gates, emit, interleaved_min_ms
+from .check_bench_schema import pam_optim_fingerprint, validate_file
+from .seed_reference import seed_pa_adamw_update
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_OUT = os.path.join(_ROOT, "BENCH_pam_optim.json")
+
+PA_JNP = PAConfig(mode="full", impl="jnp")
+PA_PALLAS = PAConfig(mode="full", impl="pallas")
+
+
+def _tree(d_model: int, seed: int = 0):
+    """A transformer-block-shaped parameter tree (embedding, attention,
+    gated-free FFN, norms) — representative leaf-size mix for the per-leaf
+    grid driver."""
+    rng = np.random.default_rng(seed)
+    shapes = {
+        "emb": (16 * d_model, d_model),
+        "wq": (d_model, d_model), "wk": (d_model, d_model),
+        "wv": (d_model, d_model), "wo": (d_model, d_model),
+        "ff_in": (d_model, 4 * d_model), "ff_out": (4 * d_model, d_model),
+        "norm_scale": (d_model,), "norm_bias": (d_model,),
+    }
+    mk = lambda s: jnp.asarray(rng.standard_normal(s) * 0.05, jnp.float32)
+    params = {k: mk(s) for k, s in shapes.items()}
+    grads = {k: mk(s) for k, s in shapes.items()}
+    return params, grads
+
+
+def _bits(tree):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(tree)]
+
+
+def _assert_bit_equal(a, b, what):
+    for i, (x, y) in enumerate(zip(_bits(a), _bits(b))):
+        assert x == y, f"{what}: leaf {i} differs bitwise"
+
+
+def _update_fns(cfg: OptConfig):
+    """name -> jitted full-update fn (params, grads, state) -> outputs."""
+    return {
+        "fused_pallas": jax.jit(lambda p, g, s: adamw_update(
+            p, g, s, cfg, pa=PA_PALLAS)),
+        "fused_jnp": jax.jit(lambda p, g, s: adamw_update(
+            p, g, s, cfg, pa=PA_JNP)),
+        "seed_value_level": jax.jit(lambda p, g, s: seed_pa_adamw_update(
+            p, g, s, cfg)),
+        "native": jax.jit(lambda p, g, s: adamw_update(p, g, s, cfg)),
+    }
+
+
+def _parity_gates(gates, cfg_f32, cfg_bf16):
+    params, grads = _tree(64, seed=3)
+
+    def check(cfg, tag):
+        fns = _update_fns(cfg)
+        st = init_opt_state(params, cfg)
+        st = {**st, "step": jnp.asarray(4, jnp.int32)}   # mid-run state
+        outs = {k: f(params, grads, st) for k, f in fns.items()
+                if k != "native"}
+        for name in ("fused_pallas", "fused_jnp"):
+            p2, s2, _ = outs[name]
+            ps, ss, _ = outs["seed_value_level"]
+            _assert_bit_equal(p2, ps, f"{tag} {name} params vs seed")
+            _assert_bit_equal(s2["m"], ss["m"], f"{tag} {name} m vs seed")
+            _assert_bit_equal(s2["v"], ss["v"], f"{tag} {name} v vs seed")
+
+    gates.run("bit_parity_f32_vs_seed", lambda: check(cfg_f32, "f32"))
+    gates.run("bit_parity_bf16_vs_seed", lambda: check(cfg_bf16, "bf16"))
+
+    def extreme():
+        cfg = cfg_f32
+        g = jax.tree.map(lambda x: jnp.where(x > 0, 1e20, -1e20), grads)
+        st = init_opt_state(params, cfg)
+        for impl, pa in (("pallas", PA_PALLAS), ("jnp", PA_JNP)):
+            p2, _, _ = adamw_update(params, g, st, cfg, pa=pa)
+            for leaf in jax.tree.leaves(p2):
+                assert bool(jnp.isfinite(leaf).all()), f"{impl} non-finite"
+        ps, _, _ = seed_pa_adamw_update(params, g, st, cfg)
+        p2, _, _ = adamw_update(params, g, st, cfg, pa=PA_JNP)
+        _assert_bit_equal(p2, ps, "extreme-grad params vs seed")
+
+    gates.run("extreme_gradients_finite_and_parity", extreme)
+
+
+def _audit_gate(gates, cfg):
+    params, grads = _tree(32, seed=5)
+    st = init_opt_state(params, cfg)
+
+    def check(pa, tag):
+        jx = jax.make_jaxpr(lambda p, g, s: adamw_update(p, g, s, cfg,
+                                                         pa=pa))(params,
+                                                                 grads, st)
+        s = jaxpr_mul_stats(jx)
+        assert s["tensor_total"] == 0, (
+            f"{tag} update emits tensor-shaped multiplies: "
+            f"{s['tensor_sites']}")
+        return s
+
+    gates.run("update_jaxpr_mult_free_jnp", lambda: check(PA_JNP, "jnp"))
+    gates.run("update_jaxpr_mult_free_pallas",
+              lambda: check(PA_PALLAS, "pallas"))
+    return check
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 round, throwaway output path")
+    ap.add_argument("--out", default=None, help="output JSON path override")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        d_model, rounds = 64, 1
+        out_path = args.out or os.path.join(tempfile.gettempdir(),
+                                            "BENCH_pam_optim.smoke.json")
+    else:
+        d_model, rounds = 256, 5
+        out_path = args.out or _OUT
+
+    cfg = OptConfig(peak_lr=3e-4, warmup_steps=10, total_steps=1000,
+                    grad_clip=1.0, weight_decay=1e-4)
+    cfg_bf16 = OptConfig(peak_lr=3e-4, warmup_steps=10, total_steps=1000,
+                         grad_clip=1.0, weight_decay=1e-4,
+                         moment_dtype="bfloat16")
+
+    # -- correctness gates (all run; any failure -> exit 2, no JSON) ------
+    gates = Gates("pam_optim_bench")
+    _parity_gates(gates, cfg, cfg_bf16)
+    _audit_gate(gates, cfg)
+    gates.finish()
+
+    params, grads = _tree(d_model)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    st = init_opt_state(params, cfg)
+    st = {**st, "step": jnp.asarray(7, jnp.int32)}
+    fns = _update_fns(cfg)
+    ms = interleaved_min_ms({k: (f, (params, grads, st))
+                             for k, f in fns.items()}, rounds)
+    us = {k: v * 1e3 for k, v in ms.items()}
+
+    # audit summary for the report (recomputed on the jnp engine's jaxpr)
+    audit = jaxpr_mul_stats(jax.make_jaxpr(
+        lambda p, g, s: adamw_update(p, g, s, cfg, pa=PA_JNP))(params, grads,
+                                                               st))
+
+    interpret = use_interpret()
+    rows, cols = autotune.tile_params("pam_optim", (n_params,), interpret)
+    report = {
+        "benchmark": "pam_optim",
+        "schema_version": 1,
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "pallas_mode": "interpret" if interpret else "compiled",
+        "pam_optim_fingerprint": pam_optim_fingerprint(),
+        "shape": {"leaves": len(jax.tree.leaves(params)),
+                  "params": int(n_params), "d_model": d_model,
+                  "grad_clip": cfg.grad_clip},
+        "timing": {"rounds": rounds, "stat": "min", "unit": "us"},
+        "engine": {
+            "fused": "pa_adamw_math per VMEM tile (kernels/pam_optim)",
+            "tiles": {"rows": int(rows), "cols": int(cols)},
+            "donated_buffers": True,
+            "moment_dtypes_gated": ["float32", "bfloat16"],
+        },
+        "update_us": {k: round(v, 1) for k, v in us.items()},
+        "update_speedup_vs_seed": {
+            "fused_pallas": round(us["seed_value_level"] / us["fused_pallas"], 2),
+            "fused_jnp": round(us["seed_value_level"] / us["fused_jnp"], 2),
+        },
+        "slowdown_vs_native": {
+            "fused_pallas": round(us["fused_pallas"] / us["native"], 1),
+            "fused_jnp": round(us["fused_jnp"] / us["native"], 1),
+        },
+        "multiplication_audit": {
+            "tensor_total": audit["tensor_total"],
+            "pow2_literal_scales": audit["pow2"],
+            "scalar_schedule": audit["scalar"],
+        },
+        "gates_passed": gates.passed,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+    errs = validate_file(out_path) if out_path == _OUT else []
+    if errs:
+        for e in errs:
+            print(f"pam_optim_bench: schema self-check: {e}", file=sys.stderr)
+        sys.exit(2)
+
+    emit("pam_optim/update_fused_pallas", us["fused_pallas"],
+         f"seed={us['seed_value_level']:.0f}us "
+         f"speedup={report['update_speedup_vs_seed']['fused_pallas']:.2f}x")
+    emit("pam_optim/update_fused_jnp", us["fused_jnp"],
+         f"speedup={report['update_speedup_vs_seed']['fused_jnp']:.2f}x "
+         f"vs_native={report['slowdown_vs_native']['fused_jnp']:.1f}x")
+    emit("pam_optim/json", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    main()

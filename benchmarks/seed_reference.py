@@ -9,6 +9,13 @@ These are verbatim-behavior copies of earlier-generation engines:
     (seed-matmul scores -> value-level PA softmax -> seed-matmul AV), the
     yardsticks for ``BENCH_pa_softmax.json`` / ``BENCH_pam_attention.json``.
 
+  * PR-4 freeze — the value-level PA AdamW update (the pre-fusion
+    ``adamw_update`` PA branch: a chain of ~15 separate ``pam_value`` /
+    ``padiv_value`` jnp ops per parameter, each intermediate materialized),
+    the yardstick for ``BENCH_pam_optim.json``. Includes the seed's
+    ``grad_clip == 0`` native-norm leak (metrics-only; the live path
+    routes that norm through PA ops).
+
 They exist so every future ``BENCH_<name>.json`` measures the live engine
 against the SAME fixed yardstick, in-process and under identical load — the
 perf trajectory stays comparable across PRs even as the engines are
@@ -26,7 +33,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.pam import pam_value, padiv_value, paexp2_value
+from repro.core import floatbits as _fb
+from repro.core.pam import (pam_value, padiv_value, paexp2_value,
+                            palog2_value)
 
 _CHUNK_TARGET = 1 << 22          # seed's fixed chunk budget (elements)
 
@@ -285,3 +294,70 @@ def seed_pam_attention_gqa_grads(q4, k4, v4, do, *, causal: bool = True):
     dk = dk.reshape(b, hkv, hq // hkv, t, dh).sum(2).transpose(0, 2, 1, 3)
     dv = dv.reshape(b, hkv, hq // hkv, t, dh).sum(2).transpose(0, 2, 1, 3)
     return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# PR-4 freeze: the value-level PA AdamW update — the pre-fusion
+# ``optim/adamw.py`` PA branch, op for op (clip norm + scale, paexp2/palog2
+# bias correction, per-leaf pam/padiv/pasqrt chain). Every intermediate is a
+# separate jnp op; this is the yardstick the fused ``kernels/pam_optim``
+# engines are measured (and bit-parity-tested) against.
+# ---------------------------------------------------------------------------
+
+
+def _seed_pasqrt(a):
+    return paexp2_value(_fb.pow2_mul(palog2_value(a), -1))
+
+
+def _seed_pa_global_norm(grads):
+    sq = sum(jnp.sum(pam_value(g.astype(jnp.float32), g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    return _seed_pasqrt(sq)
+
+
+def _seed_global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def seed_pa_adamw_update(params, grads, state, cfg):
+    """Seed value-level PA AdamW step. ``cfg`` is a live ``OptConfig`` (the
+    hyperparameters are data, not behavior); ``lr`` comes from the live
+    O(1)-scalar schedule — neither is part of the measured hot path."""
+    from repro.optim import lr_at
+    step = state["step"] + 1
+    lr = lr_at(step, cfg)
+
+    if cfg.grad_clip > 0:
+        gn = _seed_pa_global_norm(grads)
+        scale = padiv_value(np.float32(cfg.grad_clip),
+                            jnp.maximum(gn, np.float32(cfg.grad_clip)))
+        grads = jax.tree.map(lambda g: pam_value(g.astype(jnp.float32), scale),
+                             grads)
+    else:
+        # the seed's native-norm leak, kept verbatim (touches metrics only)
+        gn = _seed_global_norm(grads)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - paexp2_value(pam_value(t, palog2_value(np.float32(cfg.b1))))
+    bc2 = 1.0 - paexp2_value(pam_value(t, palog2_value(np.float32(cfg.b2))))
+
+    def upd(p, g, m, v):
+        pf, m32, v32 = (x.astype(jnp.float32) for x in (p, m, v))
+        m_new = pam_value(np.float32(cfg.b1), m32) + pam_value(np.float32(1 - cfg.b1), g)
+        v_new = pam_value(np.float32(cfg.b2), v32) + pam_value(np.float32(1 - cfg.b2),
+                                                               pam_value(g, g))
+        mhat = padiv_value(m_new, bc1)
+        vhat = padiv_value(v_new, bc2)
+        upd_ = padiv_value(mhat, _seed_pasqrt(vhat) + np.float32(cfg.eps))
+        new_p = pf - pam_value(lr, upd_) - pam_value(pam_value(lr, np.float32(cfg.weight_decay)), pf)
+        return (new_p.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return (new_p, {"m": new_m, "v": new_v, "step": step},
+            {"grad_norm": gn, "lr": lr})

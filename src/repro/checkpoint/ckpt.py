@@ -112,6 +112,12 @@ class Checkpointer:
             got = zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
             if got != ref["crc32"]:
                 raise IOError(f"checkpoint leaf {i} failed crc32 integrity check")
+            if str(a.dtype) != ref["dtype"]:
+                # npz stores extension dtypes (bfloat16 moments, fp8) as raw
+                # void bytes; reinterpret via the manifest's recorded dtype
+                # (ml_dtypes registers the names with numpy).
+                import ml_dtypes  # noqa: F401 — dtype-name registration
+                a = a.view(np.dtype(ref["dtype"]))
             out.append(a)
         tree = treedef.unflatten(out)
         if shardings is not None:

@@ -104,6 +104,13 @@ def palog2_value(a):
     return jnp.where(jnp.isnan(a), jnp.float32(jnp.nan), out)
 
 
+def pasqrt_value(a):
+    """Value-level pasqrt(A) = paexp2(palog2(A) ÷ 2) (paper Eq. 20); the ÷2
+    is an exact power-of-two exponent shift. Matches the ``pasqrt``
+    custom-vjp op's forward bit for bit."""
+    return paexp2_value(fb.pow2_mul(palog2_value(a), -1))
+
+
 # -- Exact-derivative scale factors (all signed powers of two) --------------
 
 def _pam_carry(a, b):

@@ -17,6 +17,8 @@ Params are opaque tuples whose meaning is per-op:
     sweep) resolves its tiles separately from the forward: its per-step
     work is 3-4 tile products vs the forward's 2, so the grid-step
     overhead/VMEM trade lands on different block sizes.
+  * ``pam_optim``:         (rows, cols)     keyed by (n_elements,) — the
+    fused PA-AdamW update kernel's per-leaf tile plane (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -30,6 +32,14 @@ _DEFAULTS = {
     ("pam_attention", "tpu"): (128, 128, 8),
     ("pam_attention_bwd", "interpret"): (256, 256, 16),
     ("pam_attention_bwd", "tpu"): (128, 128, 8),
+    # pam_optim: the elementwise update chain has no reuse, so interpret
+    # mode is pure grid-step overhead — the biggest measured plane wins
+    # (512x4096 = one step for leaves up to 2M elements: 13.4ms vs 105ms
+    # at 256x1024 on the 2M reference leaf). The tpu default is an untimed
+    # sublane-aligned guess (16 rows: legal for bf16 moment tiles; seven
+    # live (16, 1024) f32 planes ~ 0.5 MB VMEM).
+    ("pam_optim", "interpret"): (512, 4096),
+    ("pam_optim", "tpu"): (16, 1024),
 }
 
 _TABLE = {

@@ -1,0 +1,6 @@
+from .ops import pa_adamw_update, tree_unzip3
+from .ref import pa_adamw_math, pa_adamw_leaf_ref
+from .kernel import pa_adamw_leaf_pallas
+
+__all__ = ["pa_adamw_update", "tree_unzip3", "pa_adamw_math",
+           "pa_adamw_leaf_ref", "pa_adamw_leaf_pallas"]

@@ -1,0 +1,57 @@
+"""Public wrapper: fused PA AdamW update over parameter trees.
+
+``pa_adamw_update`` is the optimizer-side entry ``optim/adamw.py``
+dispatches to when the PA optimizer is active: ``impl="pallas"`` drives the
+fused kernel leaf by leaf (flattened planes, donated buffers, tile params
+from the shared autotune registry); any other impl runs the jnp engine —
+the same ``pa_adamw_math`` mapped over leaves, bit-identical by
+construction. Scalar inputs (t, lr, clip scale) are computed once by the
+caller; hyperparameters are static and baked into the kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import autotune
+from .._backend import use_interpret
+from .kernel import pa_adamw_leaf_pallas
+from .ref import pa_adamw_leaf_ref
+
+
+def tree_unzip3(out):
+    """Split a tree of (a, b, c) leaf tuples into three trees (the shared
+    unzip for per-leaf optimizer updates)."""
+    leaves, treedef = jax.tree.flatten(out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+    return tuple(treedef.unflatten([l[i] for l in leaves]) for i in range(3))
+
+
+def pa_adamw_update(params, grads, m, v, t, lr, scale, *, b1, b2, eps,
+                    weight_decay, impl: str = "jnp"):
+    """Fused PA AdamW step over pytrees. ``scale`` is the traced clip scale
+    or None (grad_clip == 0: gradients enter the chain unscaled, matching
+    the value-level seed bit for bit). Returns (new_params, new_m, new_v)."""
+    apply_scale = scale is not None
+    hyp = dict(b1=float(b1), b2=float(b2), eps=float(eps),
+               wd=float(weight_decay), apply_scale=apply_scale)
+    t = jnp.asarray(t, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+    scale_ = jnp.float32(0) if scale is None else jnp.asarray(scale,
+                                                              jnp.float32)
+
+    if impl == "pallas":
+        interpret = use_interpret()
+        scalars = jnp.stack([t, lr, scale_])
+
+        def upd(p, g, mm, vv):
+            rows, cols = autotune.tile_params("pam_optim", (p.size,),
+                                              interpret)
+            return pa_adamw_leaf_pallas(p, g, mm, vv, scalars,
+                                        rows=int(rows), cols=int(cols),
+                                        interpret=interpret, **hyp)
+    else:
+        def upd(p, g, mm, vv):
+            return pa_adamw_leaf_ref(p, g, mm, vv, t, lr, scale_, **hyp)
+
+    return tree_unzip3(jax.tree.map(upd, params, grads, m, v))

@@ -1,0 +1,68 @@
+"""Shared PA AdamW update math + the jnp engine (DESIGN.md §5).
+
+``pa_adamw_math`` is the single elementwise definition of the fused
+piecewise-affine AdamW step (paper §2.6): clip-scale apply, m/v moment
+updates, ``paexp2``/``palog2`` bias correction, ``pasqrt``, ``padiv``, lr
+apply and decoupled weight decay — every multiplication/division/sqrt a PA
+op, every power-of-two scale an exact exponent add. Both execution engines
+call this exact function — the Pallas kernel traces it per VMEM tile
+(``kernel.py``), the jnp engine maps it over leaves — so the engines are
+bit-identical by construction, and both are bit-identical to the frozen
+value-level seed chain (``benchmarks/seed_reference.seed_pa_adamw_update``,
+the pre-fusion ``adamw_update`` PA branch), which used the same
+``pam_value``/``padiv_value`` compositions op for op.
+
+The optimizer is value-level (never differentiated through), so the raw
+``*_value`` forwards are used directly — no ``custom_vjp`` wrappers.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pam import (pam_value, padiv_value, paexp2_value,
+                            palog2_value, pasqrt_value)
+
+
+def pa_adamw_math(pf, g, m32, v32, t, lr, scale, *, b1, b2, eps, wd,
+                  apply_scale):
+    """One fused PA AdamW step on f32 operands; returns (new_p, m_new, v_new)
+    in f32 (caller encodes back to the storage dtypes).
+
+    ``t``/``lr``/``scale`` are traced scalars; ``b1``/``b2``/``eps``/``wd``
+    are static python floats baked in as f32 immediates. ``apply_scale`` is
+    static: the clip scale is a PAM when ``grad_clip > 0`` and entirely
+    absent otherwise (bit parity with the unscaled seed path — PAM by 1.0
+    would still flush denormal gradients).
+    """
+    b1_ = np.float32(b1)
+    b2_ = np.float32(b2)
+    if apply_scale:
+        g = pam_value(g, scale)
+    # Bias correction b^t = paexp2(t ·̂ palog2 b): O(1) scalar PA schedule,
+    # recomputed per tile in the kernel (same ops, same bits).
+    bc1 = 1.0 - paexp2_value(pam_value(t, palog2_value(b1_)))
+    bc2 = 1.0 - paexp2_value(pam_value(t, palog2_value(b2_)))
+    m_new = pam_value(b1_, m32) + pam_value(np.float32(1 - b1), g)
+    v_new = pam_value(b2_, v32) + pam_value(np.float32(1 - b2),
+                                            pam_value(g, g))
+    mhat = padiv_value(m_new, bc1)
+    vhat = padiv_value(v_new, bc2)
+    upd = padiv_value(mhat, pasqrt_value(vhat) + np.float32(eps))
+    new_p = pf - pam_value(lr, upd) - pam_value(pam_value(lr, np.float32(wd)),
+                                                pf)
+    return new_p, m_new, v_new
+
+
+def pa_adamw_leaf_ref(p, g, m, v, t, lr, scale, *, b1, b2, eps, wd,
+                      apply_scale):
+    """jnp engine for one leaf: decode to f32, shared math, encode back to
+    the storage dtypes (bf16 moments round-to-nearest-even, as the kernel's
+    in-VMEM encode does)."""
+    pf, g32, m32, v32 = (jnp.asarray(x).astype(jnp.float32)
+                         for x in (p, g, m, v))
+    new_p, m_new, v_new = pa_adamw_math(pf, g32, m32, v32, t, lr, scale,
+                                        b1=b1, b2=b2, eps=eps, wd=wd,
+                                        apply_scale=apply_scale)
+    return (new_p.astype(p.dtype), m_new.astype(m.dtype),
+            v_new.astype(v.dtype))

@@ -1,6 +1,27 @@
-"""Parse collective traffic out of compiled HLO text (for §Roofline).
+"""Compiled-program statistics: collective traffic (for §Roofline) and the
+multiplication audit (for the paper's multiplication-free claim).
 
-cost_analysis() does not attribute collective bytes, so we regex the module:
+``jaxpr_mul_stats`` walks a (Closed)Jaxpr — recursing through scan/cond/
+pjit/custom-vjp/pallas sub-jaxprs — and counts multiplication-family
+primitives (mul, div, pow, integer_pow, sqrt, rsqrt, square) on floating
+tensor outputs, plus contractions (dot_general, conv_general_dilated),
+which are multiplication work regardless of output shape. Exemptions,
+each implementable without a multiplier (contractions get none):
+
+  * scalar-shaped elementwise results — the O(1) per-step schedule (lr,
+    loss mean, bias-correction scalars);
+  * mul where either operand — and div where the DIVISOR — is a scalar
+    literal that is an exact power of two: an exponent add on the bit
+    pattern (``floatbits.pow2_mul`` semantics; the paper's "power-of-two
+    scales are exact under PAM"). ``2 / x`` is a real per-element
+    reciprocal and is not exempt;
+  * integer-dtype ops — addressing/bit arithmetic, not float compute.
+
+The full-PA train step must report ``tensor_total == 0``
+(tests/test_pam_optim.py's audit gate; DESIGN.md §5).
+
+Collectives: cost_analysis() does not attribute collective bytes, so we
+regex the compiled-HLO module text:
 every all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute op contributes ring-model bytes-on-the-wire per device:
 
@@ -17,6 +38,90 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 from typing import Dict
+
+import numpy as np
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Multiplication audit (jaxpr-level).
+# ---------------------------------------------------------------------------
+
+MUL_FAMILY = ("mul", "div", "pow", "integer_pow", "sqrt", "rsqrt", "square")
+# Contractions are multiplication work regardless of output shape (a dot
+# producing a scalar still multiplies per element) — no exemptions apply.
+CONTRACTIONS = ("dot_general", "conv_general_dilated")
+
+
+def _is_pow2_scalar_literal(var) -> bool:
+    if not isinstance(var, jax.core.Literal):
+        return False
+    val = np.asarray(var.val)
+    if val.size != 1 or not np.issubdtype(val.dtype, np.floating):
+        return False
+    f = abs(float(val.reshape(())))
+    return f > 0 and np.isfinite(f) and np.frexp(f)[0] == 0.5
+
+
+def _eqn_site(eqn) -> str:
+    try:
+        frames = [f for f in eqn.source_info.traceback.frames
+                  if "site-packages" not in f.file_name]
+        f = frames[0]
+        return f"{f.file_name.split('/')[-1]}:{f.line_num}"
+    except Exception:   # noqa: BLE001 — source info is best-effort
+        return "?"
+
+
+def jaxpr_mul_stats(jaxpr) -> Dict:
+    """Audit a (Closed)Jaxpr for multiplication-family ops.
+
+    Returns ``{"tensor": {prim: n}, "scalar": {prim: n}, "pow2": n,
+    "integer": n, "tensor_total": n, "tensor_sites": [...]}`` where
+    ``tensor`` counts the violations — floating, tensor-shaped, not a
+    power-of-two literal scale — and ``tensor_sites`` holds one
+    ``prim@file:line`` entry per violation (dedup'd, for failure messages).
+    """
+    stats = {"tensor": defaultdict(int), "scalar": defaultdict(int),
+             "pow2": 0, "integer": 0}
+    sites = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name in MUL_FAMILY or name in CONTRACTIONS:
+                aval = eqn.outvars[0].aval
+                # The pow2 exemption is an exponent add: either mul operand,
+                # but ONLY the divisor of a div (2 / x is a real reciprocal).
+                pow2_ok = (
+                    (name == "mul" and any(_is_pow2_scalar_literal(v)
+                                           for v in eqn.invars))
+                    or (name == "div"
+                        and _is_pow2_scalar_literal(eqn.invars[1])))
+                if not np.issubdtype(np.dtype(aval.dtype), np.floating):
+                    stats["integer"] += 1
+                elif name in CONTRACTIONS:
+                    stats["tensor"][name] += 1
+                    sites.append(f"{name}@{_eqn_site(eqn)}")
+                elif aval.shape == ():
+                    stats["scalar"][name] += 1
+                elif pow2_ok:
+                    stats["pow2"] += 1
+                else:
+                    stats["tensor"][name] += 1
+                    sites.append(f"{name}@{_eqn_site(eqn)}")
+            for p in eqn.params.values():
+                for item in (p if isinstance(p, (tuple, list)) else (p,)):
+                    if isinstance(item, jax.core.ClosedJaxpr):
+                        walk(item.jaxpr)
+                    elif isinstance(item, jax.core.Jaxpr):
+                        walk(item)
+
+    walk(jaxpr.jaxpr if isinstance(jaxpr, jax.core.ClosedJaxpr) else jaxpr)
+    return {"tensor": dict(stats["tensor"]), "scalar": dict(stats["scalar"]),
+            "pow2": stats["pow2"], "integer": stats["integer"],
+            "tensor_total": sum(stats["tensor"].values()),
+            "tensor_sites": sorted(set(sites))}
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

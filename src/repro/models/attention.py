@@ -204,7 +204,8 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
     """
     b, s, _ = h.shape
     q, k, v = _qkv(h, p, cfg)
-    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta, jnp.float32)
+    cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta,
+                           jnp.float32, pa=cfg.pa)
     q = apply_rope(q, cos, sin, cfg)
     k = apply_rope(k, cos, sin, cfg)
 

@@ -233,11 +233,29 @@ def activation(x, cfg: ModelConfig):
 # RoPE.
 # ---------------------------------------------------------------------------
 
-def rope_tables(positions, head_dim: int, theta: float, dtype):
-    """cos/sin tables for the given positions: (..., S, head_dim/2)."""
+def rope_tables(positions, head_dim: int, theta: float, dtype, pa=None):
+    """cos/sin tables for the given positions: (..., S, head_dim/2).
+
+    In full-PA mode the angle table ``positions * freqs`` may not emit a
+    tensor-shaped native multiply (the train-step multiplication audit,
+    DESIGN.md §5): the product is rebuilt from the binary expansion of the
+    non-negative int32 position — ``p·f = Σ_b bit_b(p) · ldexp(f, b)``,
+    each term an exact power-of-two scale of the static frequency vector —
+    so only selects and adds are traced. All 31 magnitude bits are summed,
+    so any valid position is covered; values differ from the native product
+    by f32 sum rounding only. The ``hw`` impl (dataflow stand-in, DESIGN.md
+    §3) keeps the native product like every other PA dispatch site.
+    """
     half = head_dim // 2
     freqs = (1.0 / theta) ** (np.arange(half, dtype=np.float32) / half)
-    ang = positions[..., None].astype(jnp.float32) * freqs
+    if pa is not None and pa.nonlin_is_pa and pa.impl != "hw":
+        pos = positions[..., None].astype(jnp.int32)
+        ang = jnp.zeros(pos.shape[:-1] + freqs.shape, jnp.float32)
+        for b in range(31):
+            term = np.ldexp(freqs, b)            # exact, computed at trace time
+            ang = ang + jnp.where((pos >> b) & 1 != 0, term, np.float32(0))
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
     return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
 
 

@@ -6,6 +6,13 @@ with PA ops, so together with PA forward/backward passes training is fully
 multiplication-free. Moments can optionally be stored in bfloat16
 (mantissa-truncated) — a PAM-friendly memory optimisation (Appendix D shows
 >=4 mantissa bits suffice).
+
+The PA elementwise update is FUSED (DESIGN.md §5): ``kernels/pam_optim``
+runs the whole chain per VMEM tile — a Pallas kernel for ``impl="pallas"``,
+a jnp engine with identical math otherwise; both are bit-identical to the
+value-level chain this module used to inline (frozen as
+``benchmarks/seed_reference.seed_pa_adamw_update``). Only the O(1) scalar
+schedule (lr, global-norm clip scale) stays out here.
 """
 from __future__ import annotations
 
@@ -17,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import PAConfig
-from repro.core.pam import (pam_value, padiv_value, paexp2_value,
-                            palog2_value, pasqrt as _pasqrt)
+from repro.core.pam import pam_value, padiv_value, pasqrt as _pasqrt
+from repro.kernels.pam_optim import pa_adamw_update, tree_unzip3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,55 +91,50 @@ def _global_norm(grads):
 def adamw_update(params, grads, state, cfg: OptConfig,
                  pa: Optional[PAConfig] = None, lr=None):
     """One AdamW step. If ``pa`` is PA-active, the whole update is computed
-    with PA ops (value-level: the optimizer isn't differentiated through)."""
+    with PA ops (value-level: the optimizer isn't differentiated through),
+    with the elementwise chain fused per parameter block by
+    ``kernels/pam_optim`` (Pallas for ``impl="pallas"``, jnp otherwise)."""
     use_pa = pa is not None and pa.optimizer_is_pa and pa.impl != "hw"
     step = state["step"] + 1
     lr = lr_at(step, cfg) if lr is None else jnp.asarray(lr, jnp.float32)
+    t = step.astype(jnp.float32)
 
-    if cfg.grad_clip > 0:
-        if use_pa:
-            gn = _pa_global_norm(grads)
+    if use_pa:
+        # The norm is PA regardless of clipping — the grad_clip == 0 branch
+        # used to fall through to jnp.square, a native-multiply leak in the
+        # multiplication-free train step.
+        gn = _pa_global_norm(grads)
+        scale = None
+        if cfg.grad_clip > 0:
             scale = padiv_value(np.float32(cfg.grad_clip),
                                 jnp.maximum(gn, np.float32(cfg.grad_clip)))
-            grads = jax.tree.map(lambda g: pam_value(g.astype(jnp.float32), scale), grads)
-        else:
-            gn = _global_norm(grads)
-            scale = cfg.grad_clip / jnp.maximum(gn, cfg.grad_clip)
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        new_p, new_m, new_v = pa_adamw_update(
+            params, grads, state["m"], state["v"], t, lr, scale,
+            b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+            weight_decay=cfg.weight_decay, impl=pa.impl)
+        return (new_p, {"m": new_m, "v": new_v, "step": step},
+                {"grad_norm": gn, "lr": lr})
+
+    gn = _global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = cfg.grad_clip / jnp.maximum(gn, cfg.grad_clip)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
     else:
-        gn = _global_norm(grads)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 
-    t = step.astype(jnp.float32)
-    if use_pa:
-        bc1 = 1.0 - paexp2_value(pam_value(t, palog2_value(np.float32(cfg.b1))))
-        bc2 = 1.0 - paexp2_value(pam_value(t, palog2_value(np.float32(cfg.b2))))
-    else:
-        bc1 = 1.0 - cfg.b1 ** t
-        bc2 = 1.0 - cfg.b2 ** t
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
 
     def upd(p, g, m, v):
         pf, m32, v32 = (x.astype(jnp.float32) for x in (p, m, v))
-        if use_pa:
-            m_new = pam_value(np.float32(cfg.b1), m32) + pam_value(np.float32(1 - cfg.b1), g)
-            v_new = pam_value(np.float32(cfg.b2), v32) + pam_value(np.float32(1 - cfg.b2),
-                                                                   pam_value(g, g))
-            mhat = padiv_value(m_new, bc1)
-            vhat = padiv_value(v_new, bc2)
-            upd_ = padiv_value(mhat, _pasqrt(vhat) + np.float32(cfg.eps))
-            new_p = pf - pam_value(lr, upd_) - pam_value(pam_value(lr, np.float32(cfg.weight_decay)), pf)
-        else:
-            m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
-            v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
-            upd_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
-            new_p = pf - lr * upd_ - lr * cfg.weight_decay * pf
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+        upd_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        new_p = pf - lr * upd_ - lr * cfg.weight_decay * pf
         return (new_p.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype))
 
-    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
-    new_p = treedef.unflatten([l[0] for l in leaves])
-    new_m = treedef.unflatten([l[1] for l in leaves])
-    new_v = treedef.unflatten([l[2] for l in leaves])
+    new_p, new_m, new_v = tree_unzip3(
+        jax.tree.map(upd, params, grads, state["m"], state["v"]))
     metrics = {"grad_norm": gn, "lr": lr}
     return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
 

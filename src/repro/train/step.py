@@ -12,11 +12,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import PAConfig
+from repro.core import floatbits as fb
 from repro.core.floatbits import mantissa_round
+from repro.core.pam import pam_value
 from repro.models.registry import Model
 from repro.optim import OptConfig, adamw_update, init_opt_state
 
@@ -51,9 +54,24 @@ def make_train_step(model: Model, opt_cfg: OptConfig,
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), micro)
-            inv = 1.0 / train_cfg.microbatches
-            loss = loss_sum * inv
-            grads = jax.tree.map(lambda g: g * inv, gsum)
+            n = train_cfg.microbatches
+            # loss is a scalar metric: native mean (O(1) scalar, exempt from
+            # the multiplication-free audit). The gradient average is
+            # tensor-shaped and feeds the PA optimizer, so in PA mode it
+            # must not emit native multiplies: a power-of-two microbatch
+            # count is an exponent shift (bit-identical to * 1/n except
+            # that subnormal results flush to zero), anything else is a
+            # PAM by 1/n.
+            loss = loss_sum * (1.0 / n)
+            if pa.optimizer_is_pa and pa.impl != "hw":
+                if n & (n - 1) == 0:
+                    shift = 1 - n.bit_length()          # 2^-log2(n), exact
+                    grads = jax.tree.map(lambda g: fb.pow2_mul(g, shift), gsum)
+                else:
+                    inv = np.float32(1.0 / n)
+                    grads = jax.tree.map(lambda g: pam_value(g, inv), gsum)
+            else:
+                grads = jax.tree.map(lambda g: g * (1.0 / n), gsum)
         else:
             loss, grads = jax.value_and_grad(model.loss)(params, batch)
 

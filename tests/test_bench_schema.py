@@ -97,6 +97,63 @@ def test_rejects_stale_attention_fingerprint(tmp_path):
     # digest of src/repro/kernels/flash_attention/*.py on every run)
 
 
+def test_pam_optim_requires_fingerprint_gates_and_audit():
+    """BENCH_pam_optim.json must carry the fused-kernel source fingerprint,
+    a non-empty gate record, the vs-seed ratio and a clean multiplication
+    audit — a leaky or unverified optimizer can't commit a trajectory
+    point."""
+    base = {"benchmark": "pam_optim", "schema_version": 1,
+            "generated_utc": "t", "backend": "cpu",
+            "pallas_mode": "interpret",
+            "timing": {"rounds": 1, "stat": "min", "unit": "us"},
+            "update_us": {"a": 1.0},
+            "forward_speedup_vs_seed": {"a": 1.0},
+            "slowdown_vs_native": {"a": 1.0}}
+    errs = validate_report(base, "BENCH_pam_optim.json")
+    assert any("pam_optim_fingerprint" in e for e in errs)
+    assert any("gates_passed" in e for e in errs)
+    assert any("update_speedup_vs_seed" in e for e in errs)
+    assert any("multiplication_audit" in e for e in errs)
+    base.update({
+        "pam_optim_fingerprint": "abc",
+        "gates_passed": ["bit_parity_f32_vs_seed"],
+        "update_speedup_vs_seed": {"fused_jnp": 1.0},
+        "multiplication_audit": {"tensor_total": 1},
+    })
+    errs = validate_report(base, "BENCH_pam_optim.json")
+    assert any("tensor_total must be 0" in e for e in errs)
+    base["multiplication_audit"] = {"tensor_total": 0}
+    assert validate_report(base, "BENCH_pam_optim.json") == []
+
+
+def test_rejects_stale_pam_optim_fingerprint(tmp_path):
+    """Editing kernels/pam_optim/ without re-running the bench must fail
+    validation of the committed trajectory point."""
+    import benchmarks.check_bench_schema as cbs
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_pam_optim.json")) as f:
+        report = json.load(f)
+    report["pam_optim_fingerprint"] = "0" * 16
+    p = tmp_path / "BENCH_pam_optim.json"
+    p.write_text(json.dumps(report))
+    errs = cbs.validate_file(str(p))
+    assert any("stale" in e for e in errs)
+
+
+@pytest.mark.slow
+def test_smoke_optim_bench_runs_gates_and_validates(tmp_path):
+    """`make bench-fast` optimizer entry: the bench at smoke shapes must run
+    its bit-parity + audit gates and produce a structurally complete report
+    (thrown-away output path; the tracked trajectory point is untouched)."""
+    from benchmarks import pam_optim_bench
+    out = tmp_path / "BENCH_optim_smoke.json"
+    pam_optim_bench.main(["--smoke", "--out", str(out)])
+    report = json.loads(out.read_text())
+    assert report["multiplication_audit"]["tensor_total"] == 0
+    assert "bit_parity_f32_vs_seed" in report["gates_passed"]
+    assert "update_jaxpr_mult_free_pallas" in report["gates_passed"]
+
+
 def test_rejects_non_numeric_us(tmp_path):
     bad = {"benchmark": "z", "schema_version": 1, "generated_utc": "t",
            "backend": "cpu", "pallas_mode": "interpret",
