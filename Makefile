@@ -26,12 +26,14 @@ bench:
 	  $(PY) -m benchmarks.$$mod; done
 	$(PY) -m benchmarks.check_bench_schema
 
-# Smoke-shape attention + optimizer benches for the test tier: same
-# correctness gates and report plumbing as `bench`, tiny shapes, throwaway
-# output paths (the committed BENCH_*.json files are never touched).
+# Smoke-shape attention + optimizer + serving benches for the test tier:
+# same correctness gates and report plumbing as `bench`, tiny shapes /
+# traces, throwaway output paths (the committed BENCH_*.json files are
+# never touched).
 bench-fast:
 	$(PY) -m benchmarks.pam_attention_bench --smoke
 	$(PY) -m benchmarks.pam_optim_bench --smoke
+	$(PY) -m benchmarks.serve_bench --smoke
 
 # Full benchmark suite (paper tables/figures + trajectory harness).
 bench-all:

@@ -23,6 +23,14 @@ record, the ``update_speedup_vs_seed`` ratios, and a
 ``multiplication_audit`` object whose ``tensor_total`` is 0 — a leaky
 optimizer cannot commit a trajectory point.
 
+``BENCH_serve.json`` (the continuous-batching serving engine, DESIGN.md
+§6) must carry a ``serve_fingerprint`` (digest of ``src/repro/serve/*.py``
+— the freshness mechanism generalised from kernel families to the serving
+subsystem), a non-empty ``gates_passed`` record including the per-request
+token-parity gate, the ``throughput_speedup_vs_seed`` ratios, a
+``slot_occupancy`` section, and a clean decode-step
+``multiplication_audit`` (tensor_total == 0 in full-PA mode).
+
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
 or import ``validate_report`` / ``validate_file`` from tests.
 """
@@ -46,12 +54,12 @@ _REQUIRED_TIMING = ("rounds", "stat", "unit")
 _EXPECTED_VERSION = {"pam_attention": 2}
 
 
-def kernel_fingerprint(subdir: str, root: str = _ROOT) -> str:
-    """Digest of one kernel family's sources (``src/repro/kernels/<subdir>``).
-    Recorded by the family's bench at generation time and recomputed here:
-    a stale trajectory point (kernels edited, bench not re-run) fails
-    validation."""
-    d = os.path.join(root, "src", "repro", "kernels", subdir)
+def source_fingerprint(rel_dir: str, root: str = _ROOT) -> str:
+    """Digest of one subsystem's sources (``src/repro/<rel_dir>/*.py``).
+    Recorded by the subsystem's bench at generation time and recomputed
+    here: a stale trajectory point (sources edited, bench not re-run)
+    fails validation."""
+    d = os.path.join(root, "src", "repro", *rel_dir.split("/"))
     h = hashlib.sha256()
     for p in sorted(glob.glob(os.path.join(d, "*.py"))):
         h.update(os.path.basename(p).encode() + b"\0")
@@ -61,12 +69,21 @@ def kernel_fingerprint(subdir: str, root: str = _ROOT) -> str:
     return h.hexdigest()[:16]
 
 
+def kernel_fingerprint(subdir: str, root: str = _ROOT) -> str:
+    """Digest of one kernel family's sources (``src/repro/kernels/<subdir>``)."""
+    return source_fingerprint(f"kernels/{subdir}", root)
+
+
 def flash_attention_fingerprint(root: str = _ROOT) -> str:
     return kernel_fingerprint("flash_attention", root)
 
 
 def pam_optim_fingerprint(root: str = _ROOT) -> str:
     return kernel_fingerprint("pam_optim", root)
+
+
+def serve_fingerprint(root: str = _ROOT) -> str:
+    return source_fingerprint("serve", root)
 
 
 def _is_num(x) -> bool:
@@ -129,6 +146,8 @@ def validate_report(report, name: str) -> list:
         errs.extend(_validate_v2_attention(report, name))
     if report.get("benchmark") == "pam_optim":
         errs.extend(_validate_pam_optim(report, name))
+    if report.get("benchmark") == "serve":
+        errs.extend(_validate_serve(report, name))
 
     bench = report.get("benchmark")
     if isinstance(bench, str) and name.startswith("BENCH_"):
@@ -194,6 +213,37 @@ def _validate_pam_optim(report, name: str) -> list:
     return errs
 
 
+def _validate_serve(report, name: str) -> list:
+    """Continuous-batching trajectory fields (DESIGN.md §6): the serving
+    subsystem's source fingerprint, the gate record (token parity is the
+    one that makes the throughput number meaningful), slot-occupancy
+    telemetry and the decode-step multiplication audit are mandatory."""
+    errs = []
+    if not isinstance(report.get("serve_fingerprint"), str):
+        errs.append(f"{name}: serve requires 'serve_fingerprint'")
+    gates = report.get("gates_passed")
+    if not (isinstance(gates, list) and gates):
+        errs.append(f"{name}: serve requires a non-empty 'gates_passed' list")
+    elif not any("token_parity" in g for g in gates):
+        errs.append(f"{name}: serve gates must include a token-parity gate "
+                    f"— throughput without per-request output parity is "
+                    f"meaningless")
+    if not _numeric_dict(report.get("throughput_speedup_vs_seed")):
+        errs.append(f"{name}: serve requires numeric "
+                    f"'throughput_speedup_vs_seed'")
+    if not _numeric_dict(report.get("slot_occupancy")):
+        errs.append(f"{name}: serve requires a numeric 'slot_occupancy' "
+                    f"section")
+    audit = report.get("multiplication_audit")
+    if not isinstance(audit, dict):
+        errs.append(f"{name}: serve requires a 'multiplication_audit' object")
+    elif audit.get("tensor_total") != 0:
+        errs.append(f"{name}: multiplication_audit.tensor_total must be 0 — "
+                    f"the full-PA decode+sample step may not emit "
+                    f"tensor-shaped multiplies")
+    return errs
+
+
 def validate_file(path: str) -> list:
     name = os.path.basename(path)
     try:
@@ -203,21 +253,23 @@ def validate_file(path: str) -> list:
         return [f"{name}: unreadable ({e})"]
     errs = validate_report(report, name)
     # Freshness: a committed trajectory point must have been generated from
-    # the CURRENT sources of its kernel family.
+    # the CURRENT sources of its subsystem (kernel family or serve/).
     _FRESH = {"pam_attention": ("flash_attention_fingerprint",
-                                "flash_attention", "pam_attention_bench"),
+                                "kernels/flash_attention",
+                                "pam_attention_bench"),
               "pam_optim": ("pam_optim_fingerprint",
-                            "pam_optim", "pam_optim_bench")}
+                            "kernels/pam_optim", "pam_optim_bench"),
+              "serve": ("serve_fingerprint", "serve", "serve_bench")}
     bench = report.get("benchmark") if isinstance(report, dict) else None
     if bench in _FRESH:
-        field, subdir, module = _FRESH[bench]
+        field, rel_dir, module = _FRESH[bench]
         got = report.get(field)
         if isinstance(got, str):
-            want = kernel_fingerprint(subdir)
+            want = source_fingerprint(rel_dir)
             if got != want:
                 errs.append(
                     f"{name}: stale — {field} {got!r} does not match the "
-                    f"current kernels ({want!r}); re-run "
+                    f"current sources ({want!r}); re-run "
                     f"`python -m benchmarks.{module}`")
     return errs
 

@@ -16,6 +16,14 @@ These are verbatim-behavior copies of earlier-generation engines:
     ``grad_clip == 0`` native-norm leak (metrics-only; the live path
     routes that norm through PA ops).
 
+  * PR-5 freeze — the one-shot run-to-completion serving loop
+    (``seed_oneshot_generate``: fixed batch, every request decodes exactly
+    ``max_new_tokens`` steps, finished sequences burn their rows, arrivals
+    wait for the whole batch to drain), the yardstick for
+    ``BENCH_serve.json``. It rides on the LIVE model's prefill/decode —
+    the frozen artifact is the *scheduling policy*, which is what
+    continuous batching replaces.
+
 They exist so every future ``BENCH_<name>.json`` measures the live engine
 against the SAME fixed yardstick, in-process and under identical load — the
 perf trajectory stays comparable across PRs even as the engines are
@@ -361,3 +369,57 @@ def seed_pa_adamw_update(params, grads, state, cfg):
     new_v = treedef.unflatten([l[2] for l in leaves])
     return (new_p, {"m": new_m, "v": new_v, "step": step},
             {"grad_norm": gn, "lr": lr})
+
+
+# ---------------------------------------------------------------------------
+# PR-5 freeze: one-shot run-to-completion serving loop (pre-continuous-
+# batching serve/engine.py::Engine.generate semantics, greedy path).
+# ---------------------------------------------------------------------------
+
+def seed_oneshot_generate(model, params, prompts, max_new_tokens: int,
+                          max_len: int, decode_jit=None, prefill_jit=None):
+    """Frozen fixed-batch greedy generation: prefill the whole batch, then
+    decode ALL rows for exactly ``max_new_tokens`` lockstep steps — no
+    early slot release, no admissions mid-flight. ``decode_jit`` /
+    ``prefill_jit`` let a caller reuse compiled steps across batches (the
+    seed engine cached them on the instance); defaults jit per call.
+    """
+    b, s = prompts.shape
+    decode_jit = decode_jit or jax.jit(model.decode, donate_argnums=(1,))
+    prefill_jit = prefill_jit or jax.jit(model.prefill)
+    cache = model.init_cache(b, max_len)
+    logits, cache = prefill_jit(params, {"tokens": jnp.asarray(prompts, jnp.int32)},
+                                cache)
+    tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1).astype(jnp.int32)
+    out = []
+    for i in range(max_new_tokens):
+        out.append(tok)
+        logits, cache = decode_jit(params, cache, tok[:, None], s + i)
+        tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1).astype(jnp.int32)
+    return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+def seed_oneshot_serve_trace(model, params, requests, max_len: int,
+                             n_slots: int, decode_jit=None, prefill_jit=None):
+    """The seed engine's best-case policy for a request trace: FCFS batches
+    of ``n_slots``, each batch decoding ``max(budget in batch)`` steps
+    (per-request budgets truncate afterwards — shorter requests burn their
+    rows until the batch drains). Arrival waits are waived (all requests
+    treated as available at t=0), which only flatters the seed.
+
+    Returns ``{rid: (budget,) int32}``.
+    """
+    decode_jit = decode_jit or jax.jit(model.decode, donate_argnums=(1,))
+    prefill_jit = prefill_jit or jax.jit(model.prefill)
+    out = {}
+    order = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    for i in range(0, len(order), n_slots):
+        batch = order[i:i + n_slots]
+        prompts = np.stack([r.prompt for r in batch])
+        steps = max(r.max_new_tokens for r in batch)
+        toks = seed_oneshot_generate(model, params, prompts, steps, max_len,
+                                     decode_jit=decode_jit,
+                                     prefill_jit=prefill_jit)
+        for j, r in enumerate(batch):
+            out[r.rid] = toks[j, :r.max_new_tokens]
+    return out

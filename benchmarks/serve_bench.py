@@ -1,0 +1,254 @@
+"""Continuous-batching serving benchmark -> BENCH_serve.json at repo root.
+
+Replays a staggered-arrival request trace (Poisson arrivals, heterogeneous
+generation budgets, same total token count) through BOTH engines:
+
+  * ``serve.continuous.ContinuousEngine`` — slot pool + request queue over
+    one persistent donated cache (the live engine, DESIGN.md §6);
+  * ``seed_reference.seed_oneshot_serve_trace`` — the frozen PR-4-era
+    policy: FCFS fixed batches, run-to-completion, every batch decoding to
+    its LONGEST member's budget (arrival waits waived — the seed is
+    flattered, the speedup is conservative).
+
+Correctness gates the file's existence (exit nonzero, no JSON on failure):
+
+  * per-request greedy TOKEN PARITY: the continuous engine's output for
+    every request must bit-match the one-shot engine's (truncated to the
+    request's budget) on the SAME trace — scheduling may change wall
+    clock, never tokens;
+  * aggregate throughput must beat the seed policy on the trace;
+  * full-PA mode: token parity again, plus the decode+sample step must
+    audit multiplication-free (``jaxpr_mul_stats.tensor_total == 0``) —
+    the paper's claim survives into the serving hot loop.
+
+``--smoke`` runs the same gates on a smaller trace and writes the JSON to
+a throwaway path — the `make bench-fast` entry for the test tier.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+import jax
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from repro.models import build_model
+from repro.serve import ContinuousEngine, ServeConfig
+from repro.launch.serve import poisson_trace
+from .common import Gates, emit
+from .check_bench_schema import serve_fingerprint, validate_file
+from .seed_reference import seed_oneshot_serve_trace
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_OUT = os.path.join(_ROOT, "BENCH_serve.json")
+
+_LM = ModelConfig(
+    name="serve-lm", family="decoder", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_head=16, d_ff=128, vocab_size=64, max_seq_len=64,
+    norm="layernorm", activation="relu", mlp_gated=False,
+    param_dtype="float32", compute_dtype="float32", remat="none")
+
+PA_FULL = PAConfig(mode="full", deriv="approx", loss_deriv="exact",
+                   impl="jnp")
+
+
+def _run_continuous(engine: ContinuousEngine, trace):
+    engine.reset()
+    t0 = time.perf_counter()
+    out = engine.run(list(trace))
+    return out, time.perf_counter() - t0
+
+
+def _run_seed(model, params, trace, max_len, n_slots, jits):
+    t0 = time.perf_counter()
+    out = seed_oneshot_serve_trace(model, params, trace, max_len, n_slots,
+                                   decode_jit=jits[0], prefill_jit=jits[1])
+    return out, time.perf_counter() - t0
+
+
+def _assert_token_parity(cont, seed, what):
+    assert sorted(cont) == sorted(seed), f"{what}: request sets differ"
+    for rid in cont:
+        np.testing.assert_array_equal(
+            np.asarray(cont[rid]), np.asarray(seed[rid]),
+            err_msg=f"{what}: request {rid} tokens diverged")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace, 1 round, throwaway output path")
+    ap.add_argument("--out", default=None, help="output JSON path override")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        n_req, n_slots, rounds = 6, 2, 1
+        out_path = args.out or os.path.join(tempfile.gettempdir(),
+                                            "BENCH_serve.smoke.json")
+    else:
+        n_req, n_slots, rounds = 12, 4, 3
+        out_path = args.out or _OUT
+
+    max_len, prompt_len, lo, hi, rate = 64, 8, 4, 28, 0.5
+    trace = poisson_trace(n_req, rate, prompt_len, lo, hi,
+                          _LM.vocab_size, seed=11)
+    total_tokens = sum(r.max_new_tokens for r in trace)
+
+    model = build_model(_LM)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ContinuousEngine(model, params,
+                              ServeConfig(max_len=max_len, n_slots=n_slots))
+    seed_jits = (jax.jit(model.decode, donate_argnums=(1,)),
+                 jax.jit(model.prefill))
+
+    # full-PA engine pair on a smaller trace (PA decode on CPU is slow)
+    pa_cfg = _LM.replace(pa=PA_FULL)
+    pa_model = build_model(pa_cfg)
+    pa_params = pa_model.init(jax.random.PRNGKey(0))
+    pa_trace = poisson_trace(4, 1.0, 4, 2, 6, pa_cfg.vocab_size, seed=5)
+    pa_engine = ContinuousEngine(pa_model, pa_params,
+                                 ServeConfig(max_len=32, n_slots=2))
+    pa_seed_jits = (jax.jit(pa_model.decode, donate_argnums=(1,)),
+                    jax.jit(pa_model.prefill))
+
+    # -- correctness gates (all run; any failure -> exit 2, no JSON) --------
+    gates = Gates("serve_bench")
+    state = {}
+
+    def parity():
+        cont, _ = _run_continuous(engine, trace)
+        seed, _ = _run_seed(model, params, trace, max_len, n_slots, seed_jits)
+        _assert_token_parity(cont, seed, "native")
+        state["warm"] = True
+
+    def pa_parity():
+        cont, _ = _run_continuous(pa_engine, pa_trace)
+        seed, _ = _run_seed(pa_model, pa_params, pa_trace, 32, 2,
+                            pa_seed_jits)
+        _assert_token_parity(cont, seed, "full-PA")
+
+    def audit():
+        s = pa_engine.decode_step_mul_stats()
+        assert s["tensor_total"] == 0, (
+            f"full-PA decode+sample step emits tensor-shaped multiplies: "
+            f"{s['tensor_sites']}")
+        state["audit"] = s
+
+    def audit_sampled():
+        # temperature > 0 routes through the PA Gumbel-argmax sampler —
+        # jax.random.categorical/uniform would leak a native multiply here
+        eng = ContinuousEngine(pa_model, pa_params,
+                               ServeConfig(max_len=32, n_slots=2,
+                                           temperature=1.0))
+        s = eng.decode_step_mul_stats()
+        assert s["tensor_total"] == 0, (
+            f"full-PA SAMPLED decode step emits tensor-shaped multiplies: "
+            f"{s['tensor_sites']}")
+
+    gates.run("token_parity_continuous_vs_oneshot", parity)
+    gates.run("token_parity_full_pa", pa_parity)
+    gates.run("decode_step_zero_tensor_mul_full_pa", audit)
+    gates.run("decode_step_zero_tensor_mul_full_pa_sampled", audit_sampled)
+
+    # -- timed rounds (both engines warm; interleaved; min) ------------------
+    cont_s, seed_s = [], []
+    for _ in range(rounds):
+        _, dt = _run_continuous(engine, trace)
+        cont_s.append(dt)
+        _, dt = _run_seed(model, params, trace, max_len, n_slots, seed_jits)
+        seed_s.append(dt)
+    cont_best, seed_best = min(cont_s), min(seed_s)
+    cont_tps = total_tokens / cont_best
+    seed_tps = total_tokens / seed_best
+    lat = engine.latency_summary()
+
+    def throughput():
+        assert cont_tps > seed_tps, (
+            f"continuous batching must beat the seed one-shot policy: "
+            f"{cont_tps:.1f} vs {seed_tps:.1f} tok/s")
+    gates.run("throughput_vs_seed", throughput)
+
+    # full-PA slowdown: WARM runs of the same small trace on both numeric
+    # modes (the parity gate already compiled the PA engine — timing its
+    # cold first run would mostly measure XLA tracing, not PA decode)
+    _, pa_dt = _run_continuous(pa_engine, pa_trace)
+    state["pa_dt"] = pa_dt
+    nat_engine = ContinuousEngine(model, params,
+                                  ServeConfig(max_len=32, n_slots=2))
+    _run_continuous(nat_engine, pa_trace)            # warm
+    _, nat_dt = _run_continuous(nat_engine, pa_trace)
+    gates.finish()
+
+    report = {
+        "benchmark": "serve",
+        "schema_version": 1,
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "pallas_mode": "n/a (unfused per-slot decode path)",
+        "serve_fingerprint": serve_fingerprint(),
+        "trace": {
+            "requests": n_req, "slots": n_slots, "prompt_len": prompt_len,
+            "new_tokens_min": lo, "new_tokens_max": hi,
+            "poisson_rate_per_tick": rate, "trace_seed": 11,
+            "total_tokens": total_tokens,
+            "seed_policy": "FCFS batches of n_slots, run-to-completion at "
+                           "the batch max budget, arrival waits waived",
+        },
+        "timing": {"rounds": rounds, "stat": "min", "unit": "us"},
+        "engine_us": {
+            "continuous_trace_total": round(cont_best * 1e6, 1),
+            "oneshot_seed_trace_total": round(seed_best * 1e6, 1),
+            "ttft_p50": round(lat["ttft_p50_s"] * 1e6, 1),
+            "ttft_p99": round(lat["ttft_p99_s"] * 1e6, 1),
+            "per_token_p50": round(lat["per_token_p50_s"] * 1e6, 1),
+            "per_token_p99": round(lat["per_token_p99_s"] * 1e6, 1),
+        },
+        "tokens_per_s": {
+            "continuous": round(cont_tps, 1),
+            "oneshot_seed": round(seed_tps, 1),
+        },
+        "throughput_speedup_vs_seed": {
+            "tokens_per_s": round(cont_tps / seed_tps, 2),
+        },
+        "slot_occupancy": {
+            "mean": round(lat["slot_occupancy_mean"], 3),
+            "ticks": lat["ticks"],
+            "prefills": lat["prefills"],
+        },
+        "slowdown_vs_native": {
+            "full_pa_decode": round(state["pa_dt"] / nat_dt, 1),
+        },
+        "multiplication_audit": {
+            "tensor_total": state["audit"]["tensor_total"],
+            "pow2_literal_scales": state["audit"]["pow2"],
+            "scalar_schedule": state["audit"]["scalar"],
+        },
+        "gates_passed": gates.passed,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+    errs = validate_file(out_path) if out_path == _OUT else []
+    if errs:
+        for e in errs:
+            print(f"serve_bench: schema self-check: {e}", file=sys.stderr)
+        sys.exit(2)
+
+    emit("serve/continuous_tokens_per_s", cont_best * 1e6,
+         f"tps={cont_tps:.1f} seed_tps={seed_tps:.1f} "
+         f"speedup={cont_tps / seed_tps:.2f}x "
+         f"occ={lat['slot_occupancy_mean']:.2f}")
+    emit("serve/per_token_p50", lat["per_token_p50_s"] * 1e6,
+         f"p99={lat['per_token_p99_s'] * 1e6:.0f}us "
+         f"ttft_p50={lat['ttft_p50_s'] * 1e6:.0f}us")
+    emit("serve/json", 0.0, out_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,12 @@ Design (1000+-node posture):
   * integrity: a JSON manifest stores per-leaf shape/dtype/crc32; restore
     verifies before handing params to the trainer;
   * async: saves run on a background thread (training continues through the
-    serialisation); ``wait()`` joins before the next save or exit;
+    serialisation); ``wait()`` joins before the next save or exit. A failure
+    in the background thread (disk full, serialisation error) is captured
+    and RE-RAISED by ``wait()`` — and therefore by the next ``save()``,
+    which waits first — after removing the partial ``tmp.<step>`` dir: a
+    failed checkpoint must never look like success, and the restore path
+    must never see the partial write;
   * resumable: ``latest_step`` + deterministic data pipeline give
     restart-from-preemption with zero replayed-state bookkeeping;
   * multi-host: each process saves only its addressable shards under
@@ -36,44 +41,60 @@ class Checkpointer:
         self.dir = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = False):
-        self.wait()
+        self.wait()        # joins the previous save; re-raises its failure
         leaves, treedef = _flatten(tree)
         arrays = [np.asarray(x) for x in leaves]   # device -> host copy here
 
         def work():
             tmp = os.path.join(self.dir, f"tmp.{step}")
-            final = os.path.join(self.dir, f"step_{step:010d}")
-            os.makedirs(tmp, exist_ok=True)
-            manifest = {"step": step, "leaves": []}
-            np.savez(os.path.join(tmp, "proc0.npz"),
-                     **{f"leaf_{i}": a for i, a in enumerate(arrays)})
-            for i, a in enumerate(arrays):
-                manifest["leaves"].append({
-                    "i": i, "shape": list(a.shape), "dtype": str(a.dtype),
-                    "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF,
-                })
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
+            try:
+                final = os.path.join(self.dir, f"step_{step:010d}")
+                os.makedirs(tmp, exist_ok=True)
+                manifest = {"step": step, "leaves": []}
+                np.savez(os.path.join(tmp, "proc0.npz"),
+                         **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+                for i, a in enumerate(arrays):
+                    manifest["leaves"].append({
+                        "i": i, "shape": list(a.shape), "dtype": str(a.dtype),
+                        "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF,
+                    })
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    import shutil
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._gc()
+            except BaseException:
+                # never leak a partial tmp.<step> dir — the atomic contract
+                # is that only complete checkpoints are ever on disk
                 import shutil
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._gc()
+                shutil.rmtree(tmp, ignore_errors=True)
+                raise
 
         if blocking:
             work()
         else:
-            self._thread = threading.Thread(target=work, daemon=True)
+            def runner():
+                try:
+                    work()
+                except BaseException as e:   # noqa: BLE001 — re-raised by wait()
+                    self._exc = e
+            self._thread = threading.Thread(target=runner, daemon=True)
             self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _gc(self):
         steps = self.all_steps()

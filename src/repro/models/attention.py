@@ -1,14 +1,24 @@
 """GQA self-attention, sliding-window attention, cross-attention, KV caches.
 
 Cache design (used by decode shapes incl. the 500k long-context cells):
-a cache is ``{"k": (B, Smax, Hkv, Dh), "v": ..., "kpos": (Smax,)}`` where
-``kpos`` records the absolute position stored in each slot (-1 = empty).
-Writes go to slot ``pos % Smax`` — for full-attention archs Smax covers the
-whole context; for sliding-window archs Smax == window, giving a rolling
-buffer whose memory is O(window), the sub-quadratic property that makes
-``long_500k`` runnable. Masking reads kpos, so both layouts share one code
-path. Cache seq dims are sharded over the model axis when kv-head sharding
-is impossible (GQA kv < TP) — KV-cache sequence parallelism.
+a cache is ``{"k": (B, Smax, Hkv, Dh), "v": ..., "kpos": (B, Smax)}`` where
+``kpos`` records, per batch row, the absolute position stored in each cache
+slot (-1 = empty). Writes go to slot ``pos % Smax`` — for full-attention
+archs Smax covers the whole context; for sliding-window archs Smax ==
+window, giving a rolling buffer whose memory is O(window), the
+sub-quadratic property that makes ``long_500k`` runnable. Masking reads
+kpos, so both layouts share one code path. Cache seq dims are sharded over
+the model axis when kv-head sharding is impossible (GQA kv < TP) —
+KV-cache sequence parallelism.
+
+Positions convention (continuous-batching serving, DESIGN.md §6): callers
+pass ``positions`` with leading dim 1 when every batch row is at the same
+position (training, prefill, lockstep decode) and leading dim B when each
+row carries its own position stream (per-slot decode in the serving
+engine). The batch-uniform case keeps the cheap shared-slot writes, a
+(1,1,S,T) mask and fused-PAM eligibility; the per-row case scatters each
+row's write to its own ``pos % Smax`` slot and builds a (B,1,S,T) mask
+from the per-row kpos.
 """
 from __future__ import annotations
 
@@ -59,8 +69,10 @@ def init_cache_meta(cfg: ModelConfig, batch: int, max_len: int, layers: int,
                   ("layers", "cache_batch", "cache_seq", "cache_kv", None),
                   dtype=dtype, init="zeros", cfg=cfg),
         # -1 marks empty slots: the position-based mask rejects them, so an
-        # uninitialised cache can never be attended to.
-        "kpos": meta((layers, smax), ("layers", "cache_seq"),
+        # uninitialised cache can never be attended to. Per batch row so
+        # decode slots can sit at independent positions (continuous
+        # batching — each serving slot owns one batch row).
+        "kpos": meta((layers, batch, smax), ("layers", "cache_batch", "cache_seq"),
                      dtype=jnp.int32, init="neg1", cfg=cfg),
     }
 
@@ -220,6 +232,9 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
     else:
         eff_win = win
 
+    # Leading dim 1 == batch-uniform positions (see module docstring); only
+    # the per-slot serving decode passes a full (B, S) position matrix.
+    shared_pos = positions.shape[0] == 1
     new_cache = None
     if layer_cache is not None:
         smax = layer_cache["k"].shape[1]
@@ -229,10 +244,12 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
             # so slot 0 corresponds to pos % smax == 0.
             kc = k[:, -smax:].astype(layer_cache["k"].dtype)
             vc = v[:, -smax:].astype(layer_cache["v"].dtype)
-            kp = positions[0, -smax:].astype(jnp.int32)
-        elif s == 1:
-            # decode hot path: a single-row write can never cross the wrap,
-            # so keep the cheap dynamic_update_slice (slot < smax always).
+            kp = jnp.broadcast_to(positions[:, -smax:].astype(jnp.int32),
+                                  (b, smax))
+        elif shared_pos and s == 1:
+            # lockstep decode hot path: one shared slot, a single-row write
+            # can never cross the wrap, so keep the cheap
+            # dynamic_update_slice (slot < smax always).
             slot = jnp.mod(positions[0, 0], smax)
             kc = jax.lax.dynamic_update_slice(
                 layer_cache["k"], k.astype(layer_cache["k"].dtype),
@@ -241,8 +258,10 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
                 layer_cache["v"], v.astype(layer_cache["v"].dtype),
                 (jnp.int32(0), slot, jnp.int32(0), jnp.int32(0)))
             kp = jax.lax.dynamic_update_slice(
-                layer_cache["kpos"], positions[0].astype(jnp.int32), (slot,))
-        else:
+                layer_cache["kpos"],
+                jnp.broadcast_to(positions.astype(jnp.int32), (b, 1)),
+                (jnp.int32(0), slot))
+        elif shared_pos:
             # Wrap-aware contiguous write: a chunk whose slots cross the
             # rolling-window boundary must split across the wrap. A plain
             # dynamic_update_slice CLAMPS its start index, which would
@@ -253,21 +272,33 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
                 k.astype(layer_cache["k"].dtype))
             vc = layer_cache["v"].at[:, slots].set(
                 v.astype(layer_cache["v"].dtype))
-            kp = layer_cache["kpos"].at[slots].set(
-                positions[0].astype(jnp.int32))
+            kp = layer_cache["kpos"].at[:, slots].set(
+                jnp.broadcast_to(positions.astype(jnp.int32), (b, s)))
+        else:
+            # per-slot decode (continuous batching): every batch row owns
+            # an independent position stream, so each (row, step) scatters
+            # into its own slot = pos % smax of its own cache row.
+            slots = jnp.mod(positions.astype(jnp.int32), smax)    # (B, S)
+            bidx = jnp.arange(b)[:, None]
+            kc = layer_cache["k"].at[bidx, slots].set(
+                k.astype(layer_cache["k"].dtype))
+            vc = layer_cache["v"].at[bidx, slots].set(
+                v.astype(layer_cache["v"].dtype))
+            kp = layer_cache["kpos"].at[bidx, slots].set(
+                positions.astype(jnp.int32))
         kc = constrain(kc, ("cache_batch", "cache_seq", "cache_kv", None))
         vc = constrain(vc, ("cache_batch", "cache_seq", "cache_kv", None))
         new_cache = {"k": kc, "v": vc, "kpos": kp}
         if s >= smax:
             # the step itself attends in-context (full causal/SWA over S)
             k_all, v_all = k, v
-            k_pos = positions[:1]
+            k_pos = positions
         else:
             k_all, v_all = kc.astype(q.dtype), vc.astype(q.dtype)
-            k_pos = kp[None]
+            k_pos = kp[:1] if shared_pos else kp
     else:
         k_all, v_all = k, v
-        k_pos = positions[:1]
+        k_pos = positions
 
     use_banded = (cfg.attn_local_banded and cfg.sliding_window is not None
                   and not cfg.global_layers and s > cfg.sliding_window
@@ -279,13 +310,16 @@ def self_attention(h, p, cfg: ModelConfig, *, positions, window=None,
     else:
         fused_kw = {}
         if isinstance(eff_win, (int, type(None))):
-            mask = causal_mask(positions[:1], k_pos, eff_win)[:, None]
-            # static window -> the mask is expressible positionally, so the
-            # fused PAM path may take over inside _sdpa (config-gated)
-            fused_kw = dict(q_pos=positions[:1], k_pos=k_pos, window=eff_win)
+            mask = causal_mask(positions, k_pos, eff_win)[:, None]
+            if shared_pos and k_pos.shape[0] == 1:
+                # batch-uniform static window -> the mask is expressible as
+                # one positional vector pair, so the fused PAM path may
+                # take over inside _sdpa (config-gated). Per-slot decode
+                # keeps the unfused composition: its mask is per-row.
+                fused_kw = dict(q_pos=positions, k_pos=k_pos, window=eff_win)
         else:
-            m = causal_mask(positions[:1], k_pos, None)
-            m &= (positions[:1, :, None] - k_pos[:, None, :]) < eff_win
+            m = causal_mask(positions, k_pos, None)
+            m &= (positions[:, :, None] - k_pos[:, None, :]) < eff_win
             mask = m[:, None]
         out = _sdpa(q, k_all, v_all, mask, cfg, causal=True, **fused_kw)
     out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)

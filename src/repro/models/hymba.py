@@ -107,8 +107,8 @@ def backbone(params, h, cfg: ModelConfig, positions, cache=None):
 
 def logits_fn(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]   # (1, S): batch-uniform
     h = embed_tokens(params, tokens, cfg)
     h, _ = backbone(params, h, cfg, positions)
     return lm_head(params, h, cfg), jnp.float32(0)
@@ -123,16 +123,25 @@ def loss_fn(params, batch, cfg: ModelConfig):
 
 def prefill_fn(params, batch, cache, cfg: ModelConfig):
     tokens = batch["tokens"]
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
     h = embed_tokens(params, tokens, cfg)
     h, new_cache = backbone(params, h, cfg, positions, cache)
     return lm_head(params, h[:, -1:], cfg), new_cache
 
 
 def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    positions = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    h = embed_tokens(params, token, cfg)
+    h, new_cache = backbone(params, h, cfg, positions, cache)
+    return lm_head(params, h, cfg), new_cache
+
+
+def decode_at_fn(params, cache, token, positions, cfg: ModelConfig):
+    """Per-slot decode: each batch row at its own position (the SSM branch
+    is position-free; only the attention cache is position-addressed)."""
     b = token.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+    positions = jnp.asarray(positions, jnp.int32).reshape(b, 1)
     h = embed_tokens(params, token, cfg)
     h, new_cache = backbone(params, h, cfg, positions, cache)
     return lm_head(params, h, cfg), new_cache

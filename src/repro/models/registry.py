@@ -12,7 +12,15 @@ serving engine, dry-run and benchmarks are family-agnostic:
     model.cache_meta(batch, max_len)  -> ParamMeta tree
     model.prefill(params, batch, cache) -> (logits, cache)
     model.decode(params, cache, token, pos) -> (logits, cache)
+    model.decode_at(params, cache, token, positions) -> (logits, cache)
+    model.insert_slot(cache, slot_cache, slot) -> cache
     model.input_specs(shape, phase)   -> abstract batch for dry-runs
+
+``decode_at`` / ``insert_slot`` are the continuous-batching serving surface
+(DESIGN.md §6): ``decode_at`` steps every batch row (serving slot) at its
+OWN position, and ``insert_slot`` scatters a freshly prefilled batch-1
+cache into one slot of a live pooled cache — prefill-into-slot without
+disturbing the other slots' in-flight decode state.
 """
 from __future__ import annotations
 
@@ -89,6 +97,39 @@ class Model:
 
     def decode(self, params, cache, token, pos):
         return self._mod.decode_fn(params, cache, token, pos, self.cfg)
+
+    def decode_at(self, params, cache, token, positions):
+        """One decode step with PER-ROW positions: token (B,1), positions
+        (B,) int32. Row i's KV write lands in its own cache row at slot
+        ``positions[i] % smax`` — the per-slot primitive continuous
+        batching steps every serving slot with (DESIGN.md §6)."""
+        return self._mod.decode_at_fn(params, cache, token, positions, self.cfg)
+
+    def cache_batch_dims(self):
+        """Per-leaf index of the cache's batch ("slot") dimension, derived
+        from the ``cache_meta`` logical axes — the single source of truth
+        that lets ``insert_slot`` stay family-agnostic (KV caches, SSM /
+        RWKV state, cached encoder/image context all carry a
+        ``cache_batch`` axis, at different ranks)."""
+        def dim(m):
+            return m.axes.index("cache_batch")
+        return jax.tree.map(dim, self.cache_meta(1, 2),
+                            is_leaf=lambda x: hasattr(x, "axes"))
+
+    def insert_slot(self, cache, slot_cache, slot):
+        """Scatter ``slot_cache`` (a batch-1 cache, e.g. a fresh prefill)
+        into batch index ``slot`` of the pooled ``cache``. Every leaf is
+        replaced along its full slot row — including ``kpos``, whose fresh
+        -1 tail resets any stale positions a previous occupant left behind
+        (the position-reset half of the prefill-into-slot contract)."""
+        dims = self.cache_batch_dims()
+
+        def ins(pool, one, d):
+            starts = [jnp.int32(0)] * pool.ndim
+            starts[d] = jnp.asarray(slot, jnp.int32)
+            return jax.lax.dynamic_update_slice(
+                pool, one.astype(pool.dtype), tuple(starts))
+        return jax.tree.map(ins, cache, slot_cache, dims)
 
     # -- dry-run inputs ------------------------------------------------------
     def input_specs(self, batch: int, seq_len: int, phase: str = "train"):

@@ -242,3 +242,10 @@ def decode_fn(params, cache, token, pos, cfg: ModelConfig):
     h = norm(h, params["ln_in"], cfg)
     h, new_cache = backbone(params, h, cfg, cache)
     return lm_head(params, h, cfg), new_cache
+
+
+def decode_at_fn(params, cache, token, positions, cfg: ModelConfig):
+    """Per-slot decode: the recurrence is position-free, so per-row
+    positions are irrelevant — each batch row's state already advances
+    independently."""
+    return decode_fn(params, cache, token, 0, cfg)

@@ -143,8 +143,8 @@ def lm_head(params, h, cfg: ModelConfig):
 
 def logits_fn(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]   # (1, S): batch-uniform
     h = embed_tokens(params, tokens, cfg)
     h, _, aux = backbone(params, h, cfg, positions)
     return lm_head(params, h, cfg), aux
@@ -166,8 +166,8 @@ def prefill_fn(params, batch, cache, cfg: ModelConfig):
     """Run the prompt through the model, filling `cache`. Returns logits of
     the final position and the filled cache."""
     tokens = batch["tokens"]
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
     h = embed_tokens(params, tokens, cfg)
     h, new_cache, _ = backbone(params, h, cfg, positions, cache)
     logits = lm_head(params, h[:, -1:], cfg)
@@ -175,9 +175,20 @@ def prefill_fn(params, batch, cache, cfg: ModelConfig):
 
 
 def decode_fn(params, cache, token, pos, cfg: ModelConfig):
-    """One decode step: token (B,1) at scalar position `pos`."""
+    """One lockstep decode step: token (B,1), all rows at scalar `pos`."""
+    positions = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    h = embed_tokens(params, token, cfg)
+    h, new_cache, _ = backbone(params, h, cfg, positions, cache)
+    logits = lm_head(params, h, cfg)
+    return logits, new_cache
+
+
+def decode_at_fn(params, cache, token, positions, cfg: ModelConfig):
+    """Per-slot decode step: token (B,1), ``positions`` (B,) — each batch
+    row (serving slot) advances its own position stream independently
+    (continuous batching, DESIGN.md §6)."""
     b = token.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+    positions = jnp.asarray(positions, jnp.int32).reshape(b, 1)
     h = embed_tokens(params, token, cfg)
     h, new_cache, _ = backbone(params, h, cfg, positions, cache)
     logits = lm_head(params, h, cfg)

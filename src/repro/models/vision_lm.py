@@ -119,8 +119,8 @@ def backbone(params, h, cfg: ModelConfig, positions, img, cache=None):
 
 def logits_fn(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]   # (1, S): batch-uniform
     img = constrain(batch["img_embed"].astype(cfg.cdtype), ("batch", None, "act_embed"))
     h = embed_tokens(params, tokens, cfg)
     h, _ = backbone(params, h, cfg, positions, img)
@@ -136,8 +136,8 @@ def loss_fn(params, batch, cfg: ModelConfig):
 
 def prefill_fn(params, batch, cache, cfg: ModelConfig):
     tokens = batch["tokens"]
-    b, s = tokens.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
     img = constrain(batch["img_embed"].astype(cfg.cdtype), ("batch", None, "act_embed"))
     kv = {k: cache[k] for k in ("k", "v", "kpos")}
     h = embed_tokens(params, tokens, cfg)
@@ -149,8 +149,18 @@ def prefill_fn(params, batch, cache, cfg: ModelConfig):
 
 
 def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    return _decode_common(params, cache, token,
+                          jnp.asarray(pos, jnp.int32).reshape(1, 1), cfg)
+
+
+def decode_at_fn(params, cache, token, positions, cfg: ModelConfig):
+    """Per-slot decode: positions (B,), one independent stream per row."""
     b = token.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (b, 1))
+    return _decode_common(params, cache, token,
+                          jnp.asarray(positions, jnp.int32).reshape(b, 1), cfg)
+
+
+def _decode_common(params, cache, token, positions, cfg: ModelConfig):
     img = cache["img"].astype(cfg.cdtype)
     kv = {k: cache[k] for k in ("k", "v", "kpos")}
     h = embed_tokens(params, token, cfg)

@@ -64,7 +64,7 @@ def encode(params, enc_embed, cfg: ModelConfig):
     b, t, _ = enc_embed.shape
     h = enc_embed.astype(cfg.cdtype) + _sinusoid(t, cfg.d_model, cfg.cdtype)[None]
     h = constrain(h, ("batch", None, "act_embed"))
-    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    positions = jnp.arange(t, dtype=jnp.int32)[None]   # (1, T): batch-uniform
 
     def body(carry, lp):
         x = norm(carry, lp["attn_norm"], cfg)
@@ -84,14 +84,13 @@ def encode(params, enc_embed, cfg: ModelConfig):
     return norm(h, params["enc_norm"], cfg)
 
 
-def _embed_dec(params, tokens, start_pos, cfg):
-    b, s = tokens.shape
+def _embed_dec(params, tokens, positions, cfg):
+    """``positions``: (1,S) batch-uniform or (B,S) per-slot. The learned
+    position embedding is gathered per row, so per-slot decode rows can sit
+    at independent positions."""
     h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
-    pos_emb = jax.lax.dynamic_slice_in_dim(
-        params["dec_pos"], start_pos, s, axis=0).astype(cfg.cdtype)
-    positions = start_pos + jnp.broadcast_to(
-        jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    return constrain(h + pos_emb[None], ("batch", None, "act_embed")), positions
+    pos_emb = jnp.take(params["dec_pos"], positions, axis=0).astype(cfg.cdtype)
+    return constrain(h + pos_emb, ("batch", None, "act_embed")), positions
 
 
 def decode_stack(params, h, enc_out, cfg: ModelConfig, positions, cache=None):
@@ -139,7 +138,9 @@ def decode_stack(params, h, enc_out, cfg: ModelConfig, positions, cache=None):
 
 def logits_fn(params, batch, cfg: ModelConfig):
     enc_out = encode(params, encode_input(params, batch, cfg), cfg)
-    h, positions = _embed_dec(params, batch["tokens"], jnp.int32(0), cfg)
+    s = batch["tokens"].shape[1]
+    h, positions = _embed_dec(params, batch["tokens"],
+                              jnp.arange(s, dtype=jnp.int32)[None], cfg)
     h, _ = decode_stack(params, h, enc_out, cfg, positions)
     h = norm(h, params["final_norm"], cfg)
     from repro.core import pa_matmul
@@ -165,7 +166,9 @@ def cache_meta(cfg: ModelConfig, batch: int, max_len: int):
 
 def prefill_fn(params, batch, cache, cfg: ModelConfig):
     enc_out = encode(params, encode_input(params, batch, cfg), cfg)
-    h, positions = _embed_dec(params, batch["tokens"], jnp.int32(0), cfg)
+    s = batch["tokens"].shape[1]
+    h, positions = _embed_dec(params, batch["tokens"],
+                              jnp.arange(s, dtype=jnp.int32)[None], cfg)
     kv_cache = {k: cache[k] for k in ("k", "v", "kpos")}
     h, new_kv = decode_stack(params, h, enc_out, cfg, positions, kv_cache)
     h = norm(h, params["final_norm"], cfg)
@@ -177,8 +180,21 @@ def prefill_fn(params, batch, cache, cfg: ModelConfig):
 
 
 def decode_fn(params, cache, token, pos, cfg: ModelConfig):
+    return _decode_common(params, cache, token,
+                          jnp.asarray(pos, jnp.int32).reshape(1, 1), cfg)
+
+
+def decode_at_fn(params, cache, token, positions, cfg: ModelConfig):
+    """Per-slot decode: positions (B,) — per-row learned position
+    embeddings and per-row cache slots."""
+    b = token.shape[0]
+    return _decode_common(params, cache, token,
+                          jnp.asarray(positions, jnp.int32).reshape(b, 1), cfg)
+
+
+def _decode_common(params, cache, token, positions, cfg: ModelConfig):
     enc_out = cache["enc_out"].astype(cfg.cdtype)
-    h, positions = _embed_dec(params, token, jnp.asarray(pos, jnp.int32), cfg)
+    h, positions = _embed_dec(params, token, positions, cfg)
     kv_cache = {k: cache[k] for k in ("k", "v", "kpos")}
     h, new_kv = decode_stack(params, h, enc_out, cfg, positions, kv_cache)
     h = norm(h, params["final_norm"], cfg)

@@ -1,3 +1,8 @@
-from .engine import Engine, ServeConfig
+from .engine import (Engine, ServeConfig, cache_capacity_guard,
+                     make_prefill_batch, pa_categorical)
+from .scheduler import Request, Scheduler, SlotState
+from .continuous import ContinuousEngine
 
-__all__ = ["Engine", "ServeConfig"]
+__all__ = ["Engine", "ServeConfig", "cache_capacity_guard",
+           "Request", "Scheduler", "SlotState",
+           "ContinuousEngine", "make_prefill_batch", "pa_categorical"]

@@ -1,0 +1,246 @@
+"""Slot-based continuous-batching engine over one persistent donated cache.
+
+Architecture (DESIGN.md §6): a fixed pool of ``n_slots`` decode slots backs
+one pooled KV cache (batch dim == slot index). Per tick:
+
+  1. **admission** — each free slot takes the oldest arrived request: the
+     prompt is prefilled into a fresh batch-1 cache, the first token is
+     sampled from the prefill logits, and the slot row of the pooled cache
+     is replaced via ``model.insert_slot`` (a batch-dim
+     ``dynamic_update_slice`` per leaf — kpos included, so the fresh -1
+     tail resets the previous occupant's stale positions);
+  2. **decode** — ONE jitted step advances every slot: ``model.decode_at``
+     with per-slot positions (each row writes slot ``pos % smax`` of its
+     own cache row), then per-request sampling, fused in the same jit so
+     the decode+sample step is a single auditable program;
+  3. **eviction** — finished requests (EOS / stop token / length budget)
+     free their slot immediately; the freed slot admits from the queue on
+     the next tick. No drain-the-batch stalls.
+
+Per-request PRNG: the sampling key for request ``rid``'s ``j``-th token is
+``fold_in(fold_in(PRNGKey(seed), rid), j)`` — a pure function of
+(engine seed, request id, token index), so a request's stream is
+bit-reproducible regardless of which slot it lands in or which batch-mates
+share the step. Greedy decode is deliberately sampler-free, which is what
+makes continuous output bit-match the one-shot engine per request.
+
+Inactive slots still flow through the lockstep decode (the batch shape is
+static): they are fed token 0 at position 0, write only their own free
+cache row, and their sampled output is discarded.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from .engine import (ServeConfig, cache_capacity_guard, make_prefill_batch,
+                     pa_categorical, scale_logits)
+from .scheduler import Request, Scheduler, SlotState
+
+
+class ContinuousEngine:
+    """Drives a ``Scheduler`` over jitted per-slot model steps.
+
+    ``on_token`` callbacks (``run``/``step``) receive ``(rid, token)`` as
+    each token is produced — the streaming output surface.
+    """
+
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model, self.params, self.cfg = model, params, cfg
+        self.scheduler = Scheduler(cfg.n_slots)
+        self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
+        self._tokens: Dict[int, List[int]] = {}
+        self.metrics = {
+            "ticks": 0, "prefills": 0, "occupancy": [],
+            "emit_wall": {}, "visible_wall": {}, "decode_wall": [],
+        }
+        self._build()
+
+    # -- jitted model surface ----------------------------------------------
+    def _build(self):
+        model, cfg = self.model, self.cfg
+        pa = model.cfg.pa
+        temp, seed = cfg.temperature, cfg.seed
+
+        def fold_key(rid, j):
+            key = jax.random.PRNGKey(seed)
+            return jax.random.fold_in(jax.random.fold_in(key, rid), j)
+
+        if temp <= 0:
+            def step(params, cache, tok, pos):
+                logits, cache = model.decode_at(params, cache, tok, pos)
+                nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)
+                return nxt.astype(jnp.int32), cache
+
+            def first(logits, rid):
+                lg = logits[:, -1].astype(jnp.float32)
+                return jnp.argmax(lg, -1)[0].astype(jnp.int32)
+        else:
+            if pa.nonlin_is_pa and pa.impl != "hw":
+                # PA Gumbel-argmax: jax.random.categorical's Gumbel path
+                # emits a native tensor multiply, which would break the
+                # full-PA decode-step audit for temperature > 0.
+                def draw(key, row):
+                    return pa_categorical(key, row, pa.deriv)
+            else:
+                def draw(key, row):
+                    return jax.random.categorical(key, row).astype(jnp.int32)
+
+            def step(params, cache, tok, pos, rids, js):
+                logits, cache = model.decode_at(params, cache, tok, pos)
+                lg = scale_logits(logits[:, -1].astype(jnp.float32), temp, pa)
+                keys = jax.vmap(fold_key)(rids, js)
+                nxt = jax.vmap(draw)(keys, lg)
+                return nxt.astype(jnp.int32), cache
+
+            def first(logits, rid):
+                lg = scale_logits(logits[:, -1].astype(jnp.float32), temp, pa)
+                return draw(fold_key(rid, 0), lg[0]).astype(jnp.int32)
+
+        self._step_impl = step        # unjitted: the audit traces this
+        self._step_fn = jax.jit(step, donate_argnums=(1,))
+        self._first_fn = jax.jit(first)
+        self._prefill_fn = jax.jit(model.prefill)
+        self._insert_fn = jax.jit(model.insert_slot, donate_argnums=(0,))
+
+    def reset(self) -> None:
+        """Clear scheduler + telemetry for a fresh trace on the SAME
+        compiled engine (timing rounds reuse the jitted steps; the pooled
+        cache needs no clearing — admission overwrites a slot's full row
+        and inactive rows are never read)."""
+        self.scheduler = Scheduler(self.cfg.n_slots)
+        self._tokens = {}
+        self.metrics = {
+            "ticks": 0, "prefills": 0, "occupancy": [],
+            "emit_wall": {}, "visible_wall": {}, "decode_wall": [],
+        }
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        cache_capacity_guard(self.model.cfg, self.cfg.max_len,
+                             len(req.prompt), req.max_new_tokens)
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
+        self.scheduler.submit(req)
+
+    # -- scheduler tick ----------------------------------------------------
+    def _admit(self, slot: SlotState, req: Request,
+               on_token: Optional[Callable]) -> None:
+        sch = self.scheduler
+        batch = make_prefill_batch(self.model.cfg,
+                                   np.asarray(req.prompt, np.int32)[None])
+        one = self.model.init_cache(1, self.cfg.max_len)
+        logits, one = self._prefill_fn(self.params, batch, one)
+        first = int(self._first_fn(logits, jnp.int32(req.rid)))
+        self.cache = self._insert_fn(self.cache, one,
+                                     np.int32(slot.index))
+        self.metrics["prefills"] += 1
+        sch.activate(slot, req, first)
+        self._tokens[req.rid] = [first]
+        self._emit(req.rid, first, on_token)
+        if sch.should_finish(slot, first, self.cfg.eos_id):
+            sch.release(slot, self._tokens[req.rid])
+
+    def _emit(self, rid: int, token: int, on_token: Optional[Callable]) -> None:
+        self.metrics["emit_wall"].setdefault(rid, []).append(
+            time.perf_counter())
+        if on_token is not None:
+            on_token(rid, token)
+
+    def step(self, on_token: Optional[Callable] = None) -> int:
+        """One scheduler tick: admit, decode all active slots lockstep,
+        evict finished. Returns the number of tokens produced."""
+        sch, cfg = self.scheduler, self.cfg
+        now = time.perf_counter()
+        for req in sch.pending:
+            if req.arrival <= sch.tick:
+                self.metrics["visible_wall"].setdefault(req.rid, now)
+        for slot, req in sch.admissions():
+            self._admit(slot, req, on_token)
+
+        active = sch.active_slots()
+        produced = 0
+        if active:
+            n = cfg.n_slots
+            tok = np.zeros((n, 1), np.int32)
+            pos = np.zeros((n,), np.int32)
+            for s in active:
+                tok[s.index, 0] = s.last_token
+                pos[s.index] = s.next_pos
+            t0 = time.perf_counter()
+            if cfg.temperature <= 0:
+                nxt, self.cache = self._step_fn(self.params, self.cache,
+                                                tok, pos)
+            else:
+                rids = np.zeros((n,), np.int32)
+                js = np.zeros((n,), np.int32)
+                for s in active:
+                    rids[s.index] = s.request.rid
+                    js[s.index] = s.produced
+                nxt, self.cache = self._step_fn(self.params, self.cache,
+                                                tok, pos, rids, js)
+            nxt = np.asarray(nxt)
+            self.metrics["decode_wall"].append(time.perf_counter() - t0)
+            for s in active:
+                t = int(nxt[s.index])
+                s.next_pos += 1
+                s.produced += 1
+                s.last_token = t
+                self._tokens[s.request.rid].append(t)
+                self._emit(s.request.rid, t, on_token)
+                produced += 1
+                if sch.should_finish(s, t, cfg.eos_id):
+                    sch.release(s, self._tokens[s.request.rid])
+        self.metrics["occupancy"].append(len(active) / cfg.n_slots)
+        self.metrics["ticks"] += 1
+        sch.tick += 1
+        return produced
+
+    # -- drivers -----------------------------------------------------------
+    def run(self, requests: List[Request],
+            on_token: Optional[Callable] = None) -> Dict[int, np.ndarray]:
+        """Submit all requests and tick until the queue drains. Returns
+        {rid: (n_tokens,) int32} in completion order."""
+        for req in requests:
+            self.submit(req)
+        while not self.scheduler.idle:
+            self.step(on_token)
+        return {rid: np.asarray(toks, np.int32)
+                for rid, toks in self.scheduler.finished.items()}
+
+    # -- telemetry ---------------------------------------------------------
+    def latency_summary(self) -> Dict[str, float]:
+        """TTFT and inter-token latency percentiles (seconds) plus mean
+        slot occupancy — the BENCH_serve.json methodology (DESIGN.md §6)."""
+        ttft, gaps = [], []
+        for rid, emits in self.metrics["emit_wall"].items():
+            vis = self.metrics["visible_wall"].get(rid, emits[0])
+            ttft.append(emits[0] - vis)
+            gaps.extend(b - a for a, b in zip(emits, emits[1:]))
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+        occ = self.metrics["occupancy"]
+        return {
+            "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+            "per_token_p50_s": pct(gaps, 50), "per_token_p99_s": pct(gaps, 99),
+            "slot_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "ticks": float(self.metrics["ticks"]),
+            "prefills": float(self.metrics["prefills"]),
+        }
+
+    def decode_step_mul_stats(self) -> Dict:
+        """Multiplication audit of the fused decode+sample step (the
+        serving hot loop): trace ``_step_impl`` and count tensor-shaped
+        mul-family ops (launch.hlo_stats.jaxpr_mul_stats). Full-PA mode
+        must report ``tensor_total == 0``."""
+        from repro.launch.hlo_stats import jaxpr_mul_stats
+        n = self.cfg.n_slots
+        args = [self.params, self.cache, jnp.zeros((n, 1), jnp.int32),
+                jnp.zeros((n,), jnp.int32)]
+        if self.cfg.temperature > 0:
+            args += [jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32)]
+        return jaxpr_mul_stats(jax.make_jaxpr(self._step_impl)(*args))

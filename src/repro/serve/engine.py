@@ -1,4 +1,12 @@
-"""Batched serving engine: prefill + step-synchronous decode.
+"""One-shot batched serving: prefill + run-to-completion lockstep decode.
+
+This is the simple fixed-batch engine: every request in the batch decodes
+for exactly ``max_new_tokens`` steps, so finished sequences burn their
+batch rows until the longest request drains. It remains the reference
+semantics (and the frozen perf yardstick, ``benchmarks/seed_reference.
+seed_oneshot_generate``) — production serving lives in
+``serve.continuous.ContinuousEngine``, which schedules a request queue
+over a slot pool on the same model surface (DESIGN.md §6).
 
 The decode step is a single jitted function reused across steps (cache
 donated, so serving is allocation-stable). Sampling is greedy or
@@ -22,6 +30,92 @@ class ServeConfig:
     max_len: int = 256
     temperature: float = 0.0        # 0 -> greedy
     seed: int = 0
+    # continuous batching (serve.continuous.ContinuousEngine)
+    n_slots: int = 4                # decode slot pool size == cache batch
+    eos_id: Optional[int] = None    # emitting this token frees the slot
+
+
+def make_prefill_batch(cfg, tokens):
+    """Batch dict for ``model.prefill`` incl. the stub modality inputs the
+    encdec/vision families expect. Shared by the one-shot and continuous
+    engines — the parity gate depends on both building identical prefill
+    inputs."""
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+    b = batch["tokens"].shape[0]
+    if cfg.family == "encdec":
+        batch["enc_embed"] = jnp.zeros((b, cfg.enc_seq_len, cfg.d_model),
+                                       cfg.cdtype)
+    if cfg.family == "vision_lm":
+        batch["img_embed"] = jnp.zeros((b, cfg.num_image_tokens, cfg.d_model),
+                                       cfg.cdtype)
+    return batch
+
+
+def scale_logits(logits, temperature: float, pa):
+    """1/T scaling under the numeric mode — a PA divide in full-PA mode so
+    the sampler stays multiplication-free."""
+    if pa.nonlin_is_pa and pa.impl != "hw":
+        from repro.core import padiv
+        return padiv(logits, np.float32(temperature))
+    return logits / temperature
+
+
+def pa_categorical(key, logits, deriv: str = "approx"):
+    """Gumbel-argmax sampling in PA arithmetic: u ~ U(0,1),
+    g = -paln(-paln(u)), sample = argmax(logits + g).
+
+    The Gumbel-max trick exactly, but the two logs route through ``palog``
+    (PA bit arithmetic) instead of native ``log``, and the uniform comes
+    straight from random bits via the [1,2)-exponent trick — both
+    ``jax.random.categorical``'s Gumbel construction and ``jax.random.
+    uniform``'s bits→float scaling emit a native tensor multiply, which
+    would break the full-PA decode-step audit the moment temperature > 0.
+    The distribution differs from exact categorical only by the PA log's
+    piecewise-affine error."""
+    from repro.core import palog
+    bits = jax.random.bits(key, logits.shape, jnp.uint32)
+    # 23 mantissa bits under exponent 127 -> float in [1, 2); -1 -> [0, 1)
+    f = jax.lax.bitcast_convert_type(
+        (bits >> np.uint32(9)) | np.uint32(0x3F800000), jnp.float32)
+    u = jnp.maximum(f - np.float32(1.0), np.float32(1e-38))  # palog needs > 0
+    g = -palog(-palog(u, deriv), deriv)
+    return jnp.argmax(logits + g, -1).astype(jnp.int32)
+
+
+def sample_last(logits, key, temperature: float, pa):
+    """Sample one token per row from the last-position logits with a
+    batch-shared key (lockstep decode). PA mode uses the PA Gumbel-argmax
+    sampler so the whole decode+sample step stays multiplication-free."""
+    logits = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = scale_logits(logits, temperature, pa)
+    if pa.nonlin_is_pa and pa.impl != "hw":
+        return pa_categorical(key, logits, pa.deriv)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def cache_capacity_guard(cfg, max_len: int, prompt_len: int,
+                         max_new_tokens: int) -> None:
+    """Reject generations that would overrun a NON-rolling KV cache.
+
+    For full-attention models the cache covers the whole context
+    (smax == max_len); writes beyond it mod-wrap onto the oldest slots and
+    silently corrupt them — the model keeps producing tokens, attending to
+    a cache whose early positions now hold late keys. Sliding-window
+    models wrap BY DESIGN (smax == window), and RWKV carries O(1) state,
+    so neither is length-capped.
+    """
+    if cfg.family == "rwkv" or cfg.sliding_window is not None:
+        return
+    need = prompt_len + max_new_tokens
+    if need > max_len:
+        raise ValueError(
+            f"prompt_len ({prompt_len}) + max_new_tokens ({max_new_tokens}) "
+            f"= {need} exceeds the KV cache capacity max_len={max_len}; "
+            f"the overflow would mod-wrap onto the oldest cache slots and "
+            f"silently corrupt generation. Raise ServeConfig.max_len or "
+            f"shorten the request.")
 
 
 class Engine:
@@ -31,30 +125,16 @@ class Engine:
         self._prefill = jax.jit(model.prefill)
 
     def _sample(self, logits, key):
-        logits = logits[:, -1].astype(jnp.float32)
-        if self.cfg.temperature <= 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        pa = self.model.cfg.pa
-        if pa.nonlin_is_pa and pa.impl != "hw":
-            from repro.core import padiv
-            logits = padiv(logits, np.float32(self.cfg.temperature))
-        else:
-            logits = logits / self.cfg.temperature
-        return jax.random.categorical(key, logits).astype(jnp.int32)
+        return sample_last(logits, key, self.cfg.temperature,
+                           self.model.cfg.pa)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32):
         """prompts: (B, S) int32. Returns (B, max_new_tokens) int32."""
         b, s = prompts.shape
+        cache_capacity_guard(self.model.cfg, self.cfg.max_len, s,
+                             max_new_tokens)
         cache = self.model.init_cache(b, self.cfg.max_len)
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        if self.model.cfg.family == "encdec":
-            batch["enc_embed"] = jnp.zeros(
-                (b, self.model.cfg.enc_seq_len, self.model.cfg.d_model),
-                self.model.cfg.cdtype)
-        if self.model.cfg.family == "vision_lm":
-            batch["img_embed"] = jnp.zeros(
-                (b, self.model.cfg.num_image_tokens, self.model.cfg.d_model),
-                self.model.cfg.cdtype)
+        batch = make_prefill_batch(self.model.cfg, prompts)
         logits, cache = self._prefill(self.params, batch, cache)
 
         # One key per sampling step, each a fresh split — the root key is

@@ -1,0 +1,110 @@
+"""Continuous-batching scheduler: a request queue over a fixed slot pool.
+
+Pure host-side state machine — no JAX in here, so the admission / eviction
+logic is unit-testable without a model. The engine
+(``serve.continuous.ContinuousEngine``) drives it tick by tick:
+
+  * ``admissions()`` — FCFS: pair each free slot with the oldest *arrived*
+    request (arrival is measured in scheduler ticks, which is what lets a
+    request-trace driver replay Poisson arrivals deterministically);
+  * ``activate()`` — bind a request to a slot after its prefill landed;
+  * ``release()`` — free the slot the moment its request finishes (EOS /
+    stop token / length budget), making it admissible on the SAME tick's
+    successor — no drain-the-batch stalls.
+
+Slot lifecycle: FREE -> (admission: prefill-into-slot + first token)
+ACTIVE -> per-tick decode -> (finish check) FREE. The pooled KV cache row
+backing a freed slot is NOT cleared — the next occupant's
+``insert_slot`` overwrites the full row, kpos included, which resets any
+stale positions (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is the scheduler tick at which
+    the request becomes visible to admission (0 = available immediately);
+    the trace drivers draw these from a Poisson process."""
+    rid: int
+    prompt: "np.ndarray"              # (S,) int32
+    max_new_tokens: int = 32
+    arrival: int = 0
+    stop_tokens: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class SlotState:
+    index: int
+    request: Optional[Request] = None
+    next_pos: int = 0                 # position the next fed token writes to
+    produced: int = 0                 # tokens emitted so far (incl. prefill's)
+    last_token: int = 0               # token to feed at the next tick
+    admitted_tick: int = 0
+
+    @property
+    def active(self) -> bool:
+        return self.request is not None
+
+
+class Scheduler:
+    def __init__(self, n_slots: int):
+        self.slots: List[SlotState] = [SlotState(i) for i in range(n_slots)]
+        self.pending: List[Request] = []      # submitted, not yet admitted
+        self.tick: int = 0
+        self.finished: Dict[int, List[int]] = {}
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+        # stable FCFS: by arrival tick, then submission order (rid ties are
+        # fine — list sort is stable)
+        self.pending.sort(key=lambda r: r.arrival)
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and not any(s.active for s in self.slots)
+
+    def active_slots(self) -> List[SlotState]:
+        return [s for s in self.slots if s.active]
+
+    # -- admission ---------------------------------------------------------
+    def admissions(self) -> List[Tuple[SlotState, Request]]:
+        """FCFS-pair free slots with arrived requests for this tick. The
+        pairs are *proposals* — the engine prefills each and then calls
+        ``activate``; the queue is only drained here."""
+        out = []
+        for slot in self.slots:
+            if slot.active:
+                continue
+            i = next((j for j, r in enumerate(self.pending)
+                      if r.arrival <= self.tick), None)
+            if i is None:
+                break
+            out.append((slot, self.pending.pop(i)))
+        return out
+
+    def activate(self, slot: SlotState, req: Request, first_token: int) -> None:
+        slot.request = req
+        slot.next_pos = len(req.prompt)
+        slot.produced = 1                 # prefill sampled the first token
+        slot.last_token = int(first_token)
+        slot.admitted_tick = self.tick
+
+    # -- completion --------------------------------------------------------
+    def should_finish(self, slot: SlotState, token: int,
+                      eos_id: Optional[int]) -> bool:
+        req = slot.request
+        if eos_id is not None and token == eos_id:
+            return True
+        if token in req.stop_tokens:
+            return True
+        return slot.produced >= req.max_new_tokens
+
+    def release(self, slot: SlotState, tokens: List[int]) -> None:
+        self.finished[slot.request.rid] = tokens
+        slot.request = None
+        slot.produced = 0

@@ -1,5 +1,5 @@
 from .step import TrainConfig, make_train_step, make_eval_step
-from .loop import LoopConfig, train
+from .loop import LoopConfig, train, straggler_check
 
 __all__ = ["TrainConfig", "make_train_step", "make_eval_step", "LoopConfig",
-           "train"]
+           "train", "straggler_check"]

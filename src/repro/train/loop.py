@@ -38,6 +38,21 @@ class LoopConfig:
     keep_ckpts: int = 3
 
 
+def straggler_check(ewma, dt: float, factor: float):
+    """Compare ``dt`` against the PRE-update EWMA, then fold it in.
+
+    Returns ``(is_straggler, new_ewma)``. Order matters: updating the EWMA
+    first dilutes the threshold by ``0.1 * factor * dt`` — a step had to be
+    ~(factor + 0.1*factor)/(1 - 0.09*factor)… slower than the trailing
+    average before it tripped (for factor=3: ~4.1x instead of 3x), so real
+    stragglers near the threshold were silently absorbed into the average
+    they were being judged by.
+    """
+    alert = ewma is not None and dt > factor * ewma
+    new_ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+    return alert, new_ewma
+
+
 def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
           workdir: str, loop_cfg: LoopConfig = LoopConfig(),
           train_cfg: TrainConfig = TrainConfig(),
@@ -68,11 +83,11 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
 
     latest = ckpt.latest_step()
     if latest is not None:
-        _, restored = ckpt.restore_latest(state_like)
+        # shardings flow into restore itself: one device_put onto the target
+        # sharding, instead of a default-device restore followed by a second
+        # full-tree transfer.
+        _, restored = ckpt.restore_latest(state_like, shardings)
         params, opt_state = restored["params"], restored["opt"]
-        if shardings is not None:
-            params = jax.tree.map(jax.device_put, params, shardings["params"])
-            opt_state = jax.tree.map(jax.device_put, opt_state, shardings["opt"])
         start_step = latest
         log(f"[loop] resumed from checkpoint step {latest}")
 
@@ -87,10 +102,12 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
         loss = float(metrics["loss"])
         dt = time.perf_counter() - t0
 
-        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-        if dt > loop_cfg.straggler_factor * ewma and step > start_step + 3:
+        prev_ewma = ewma                    # the threshold the alert uses
+        alert, ewma = straggler_check(ewma, dt, loop_cfg.straggler_factor)
+        if alert and step > start_step + 3:
             history["straggler_alerts"] += 1
-            log(f"[loop] STRAGGLER step {step}: {dt:.3f}s vs EWMA {ewma:.3f}s")
+            log(f"[loop] STRAGGLER step {step}: {dt:.3f}s vs EWMA "
+                f"{prev_ewma:.3f}s")
         history["loss"].append(loss)
         history["step_time"].append(dt)
 

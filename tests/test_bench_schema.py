@@ -194,3 +194,68 @@ def test_bench_gates_exit_nonzero_on_failure(capsys):
         g.finish()
     assert e.value.code == 2
     assert "boom" in capsys.readouterr().err
+
+
+def test_serve_requires_fingerprint_parity_gate_and_audit():
+    """BENCH_serve.json must carry the serve/ source fingerprint, a gate
+    record that includes token parity, the throughput-vs-seed ratio,
+    slot-occupancy telemetry, and a clean decode-step multiplication
+    audit — a throughput win without output parity (or with a leaky
+    decode step) can't commit a trajectory point."""
+    base = {"benchmark": "serve", "schema_version": 1,
+            "generated_utc": "t", "backend": "cpu",
+            "pallas_mode": "n/a",
+            "timing": {"rounds": 1, "stat": "min", "unit": "us"},
+            "engine_us": {"a": 1.0},
+            "forward_speedup_vs_seed": {"a": 1.0},
+            "slowdown_vs_native": {"a": 1.0}}
+    errs = validate_report(base, "BENCH_serve.json")
+    assert any("serve_fingerprint" in e for e in errs)
+    assert any("gates_passed" in e for e in errs)
+    assert any("throughput_speedup_vs_seed" in e for e in errs)
+    assert any("slot_occupancy" in e for e in errs)
+    assert any("multiplication_audit" in e for e in errs)
+    base.update({
+        "serve_fingerprint": "abc",
+        "gates_passed": ["throughput_vs_seed"],
+        "throughput_speedup_vs_seed": {"tokens_per_s": 2.0},
+        "slot_occupancy": {"mean": 0.8},
+        "multiplication_audit": {"tensor_total": 1},
+    })
+    errs = validate_report(base, "BENCH_serve.json")
+    assert any("token-parity" in e for e in errs)
+    assert any("tensor_total must be 0" in e for e in errs)
+    base["gates_passed"] = ["token_parity_continuous_vs_oneshot"]
+    base["multiplication_audit"] = {"tensor_total": 0}
+    assert validate_report(base, "BENCH_serve.json") == []
+
+
+def test_rejects_stale_serve_fingerprint(tmp_path):
+    """Editing src/repro/serve/ without re-running the bench must fail
+    validation of the committed trajectory point."""
+    import benchmarks.check_bench_schema as cbs
+    with open(os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_serve.json")) as f:
+        report = json.load(f)
+    report["serve_fingerprint"] = "0" * 16
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(report))
+    errs = cbs.validate_file(str(p))
+    assert any("stale" in e for e in errs)
+
+
+@pytest.mark.slow
+def test_smoke_serve_bench_runs_gates_and_validates(tmp_path):
+    """`make bench-fast` serving entry: the bench on a small trace must run
+    its parity + throughput + audit gates and produce a structurally
+    complete report (thrown-away output path; the tracked trajectory point
+    is untouched)."""
+    from benchmarks import serve_bench
+    out = tmp_path / "BENCH_serve_smoke.json"
+    serve_bench.main(["--smoke", "--out", str(out)])
+    report = json.loads(out.read_text())
+    assert report["multiplication_audit"]["tensor_total"] == 0
+    assert "token_parity_continuous_vs_oneshot" in report["gates_passed"]
+    assert "token_parity_full_pa" in report["gates_passed"]
+    assert "throughput_vs_seed" in report["gates_passed"]
+    assert report["throughput_speedup_vs_seed"]["tokens_per_s"] > 1.0

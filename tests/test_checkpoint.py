@@ -1,0 +1,104 @@
+"""Checkpointer failure semantics: an async save that dies must be LOUD.
+
+Pre-fix, the save thread was a bare daemon thread: an exception (disk
+full, serialization error) vanished, ``wait()`` joined and returned
+normally — the trainer kept going believing the checkpoint landed — and
+the partial ``tmp.<step>`` dir leaked next to the real checkpoints.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.train import straggler_check
+
+
+def _tree(x=1.0):
+    return {"w": np.full((4, 4), x, np.float32),
+            "b": np.zeros((4,), np.float32)}
+
+
+def _tmp_dirs(d):
+    return [n for n in os.listdir(d) if n.startswith("tmp.")]
+
+
+def test_async_save_failure_reraises_on_wait(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path), keep=2)
+
+    def boom(*a, **kw):
+        raise OSError("No space left on device")
+    monkeypatch.setattr(np, "savez", boom)
+
+    ck.save(1, _tree(), blocking=False)
+    with pytest.raises(OSError, match="No space left"):
+        ck.wait()
+    # the partial tmp dir must not leak, and no checkpoint may be visible
+    assert _tmp_dirs(str(tmp_path)) == []
+    assert ck.latest_step() is None
+    # the failure is raised ONCE, then cleared — the checkpointer is usable
+    ck.wait()
+
+
+def test_async_save_failure_reraises_on_next_save(tmp_path, monkeypatch):
+    """A trainer that never calls wait() directly still hears about the
+    failure: save() waits on the previous thread first."""
+    ck = Checkpointer(str(tmp_path), keep=2)
+    orig = np.savez
+    fail = {"on": True}
+
+    def flaky(*a, **kw):
+        if fail["on"]:
+            raise OSError("disk full")
+        return orig(*a, **kw)
+    monkeypatch.setattr(np, "savez", flaky)
+
+    ck.save(1, _tree(), blocking=False)
+    with pytest.raises(OSError, match="disk full"):
+        ck.save(2, _tree())
+    # recovery: once the disk drains, saving works again
+    fail["on"] = False
+    ck.save(3, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 3
+    assert _tmp_dirs(str(tmp_path)) == []
+
+
+def test_blocking_save_failure_raises_and_cleans_tmp(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path), keep=2)
+
+    def boom(*a, **kw):
+        raise ValueError("cannot serialize object dtype")
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(ValueError, match="cannot serialize"):
+        ck.save(5, _tree(), blocking=True)
+    assert _tmp_dirs(str(tmp_path)) == []
+
+
+def test_successful_roundtrip_still_works(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = _tree(3.5)
+    ck.save(7, tree, blocking=False)
+    ck.wait()
+    step, restored = ck.restore_latest(_tree())
+    assert step == 7
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_straggler_compares_against_pre_update_ewma():
+    """The alert threshold must be the trailing EWMA *before* the current
+    step is folded in. Pre-fix, a step at 3.3x the trailing average (with
+    factor=3.0) was compared against an EWMA already diluted by 10% of
+    itself and never fired."""
+    ewma = 1.0
+    # warm EWMA at 1.0, step takes 3.3s: 3.3 > 3.0 * 1.0 -> must alert.
+    # (buggy order: ewma' = 0.9 + 0.33 = 1.23; 3.3 < 3.69 -> silent)
+    alert, new_ewma = straggler_check(ewma, 3.3, 3.0)
+    assert alert
+    assert new_ewma == pytest.approx(0.9 * 1.0 + 0.1 * 3.3)
+    # below threshold: no alert, EWMA tracks
+    alert, _ = straggler_check(ewma, 2.9, 3.0)
+    assert not alert
+    # first step initialises without alerting
+    alert, new_ewma = straggler_check(None, 5.0, 3.0)
+    assert not alert and new_ewma == 5.0

@@ -1,20 +1,27 @@
-"""Serving-path regressions: rolling KV-cache wrap correctness and PRNG
-key discipline in the sampler.
+"""Serving-path regressions: rolling KV-cache wrap correctness, PRNG key
+discipline, cache-overflow guarding, and the continuous-batching engine
+(per-request token parity across staggered admissions/evictions, EOS slot
+release, per-request PRNG independence, decode-step multiplication audit).
 
-Both guard bugs that corrupt generation silently: a chunked prefill whose
+All guard bugs that corrupt generation silently: a chunked prefill whose
 chunk crossed the rolling-window boundary used a clamped
 ``dynamic_update_slice`` (wrong slots for k/v/kpos -> decode attends the
-wrong keys), and ``Engine.generate`` sampled the first token with the same
-key it later split (correlating the first sample with the whole stream).
+wrong keys), ``Engine.generate`` sampled the first token with the same
+key it later split (correlating the first sample with the whole stream),
+and a generation overrunning a non-rolling cache mod-wrapped onto the
+oldest slots (the model keeps emitting plausible tokens from a corrupted
+context).
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
+from repro.core import PAConfig
 from repro.models.common import ModelConfig
 from repro.models import build_model
 from repro.models import transformer
-from repro.serve import Engine, ServeConfig
+from repro.serve import (ContinuousEngine, Engine, Request, ServeConfig)
 
 # 1 layer on purpose: layer-1 k/v are pure functions of the embeddings, so
 # chunked and one-shot prefill must fill BIT-identical caches — any decode
@@ -78,7 +85,7 @@ def test_wrap_write_slots_are_modular(rng):
     params = model.init(jax.random.PRNGKey(0))
     tokens = jnp.asarray(rng.integers(0, 32, (1, 10)), jnp.int32)
     cache = _chunked_prefill(model, params, tokens, (6, 4))  # 6%8+4 > 8
-    kpos = np.asarray(cache["kpos"][0])
+    kpos = np.asarray(cache["kpos"][0, 0])     # layer 0, batch row 0
     for slot, pos in enumerate(kpos):
         if pos >= 0:
             assert pos % 8 == slot, (slot, pos)
@@ -121,3 +128,183 @@ def test_generate_never_reuses_a_prng_key(monkeypatch):
     assert out.shape == (2, 5)
     assert len(used) >= 12, "instrumentation saw too few key uses"
     assert len(used) == len(set(used)), "a PRNG key was consumed twice"
+
+
+# ---------------------------------------------------------------------------
+# PR-5: cache-overflow guard + continuous batching.
+# ---------------------------------------------------------------------------
+
+FULL = ModelConfig(name="full", family="decoder", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_head=16, d_ff=64,
+                   vocab_size=32, max_seq_len=64,
+                   param_dtype="float32", compute_dtype="float32",
+                   remat="none")
+
+
+def _model(cfg):
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_generate_rejects_cache_overflow(rng):
+    """Non-rolling cache: prompt_len + max_new_tokens > max_len would
+    mod-wrap decode writes onto the oldest slots and silently corrupt
+    them — generate must refuse instead."""
+    model, params = _model(FULL)
+    eng = Engine(model, params, ServeConfig(max_len=16))
+    prompts = rng.integers(0, 32, (1, 10)).astype(np.int32)
+    with pytest.raises(ValueError, match="exceeds the KV cache capacity"):
+        eng.generate(prompts, max_new_tokens=7)
+    # exactly at capacity is fine
+    out = eng.generate(prompts, max_new_tokens=6)
+    assert out.shape == (1, 6)
+
+
+def test_sliding_window_models_are_not_length_capped(rng):
+    """Rolling caches wrap BY DESIGN — the guard must not fire."""
+    model, params = _model(SWA)
+    eng = Engine(model, params, ServeConfig(max_len=32))
+    out = eng.generate(rng.integers(0, 32, (1, 8)).astype(np.int32),
+                       max_new_tokens=40)     # 48 > max_len, window=8 rolls
+    assert out.shape == (1, 40)
+
+
+def _staggered_trace(n=6, prompt_len=6):
+    """Deterministic trace (self-seeded so repeated calls build IDENTICAL
+    requests — several tests run the same trace through two engines)."""
+    rng = np.random.default_rng(42)
+    budgets = [3, 9, 5, 8, 2, 7]
+    arrivals = [0, 0, 1, 3, 6, 9]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 32, (prompt_len,)).astype(np.int32),
+                    max_new_tokens=budgets[i], arrival=arrivals[i])
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("cfg", [FULL, SWA], ids=["full-attn", "swa"])
+def test_continuous_matches_oneshot_greedy_per_request(cfg, rng):
+    """THE parity gate: across staggered admissions and evictions (2 slots,
+    6 requests, heterogeneous budgets and arrival ticks), every request's
+    continuous-batched greedy output must bit-match a one-shot decode of
+    the same request — the scheduler may change wall clock, never
+    tokens."""
+    model, params = _model(cfg)
+    eng = ContinuousEngine(model, params, ServeConfig(max_len=32, n_slots=2))
+    trace = _staggered_trace()
+    out = eng.run(trace)
+    assert sorted(out) == [0, 1, 2, 3, 4, 5]
+    ref = Engine(model, params, ServeConfig(max_len=32))
+    for r in trace:
+        oneshot = ref.generate(r.prompt[None],
+                               max_new_tokens=r.max_new_tokens)[0]
+        np.testing.assert_array_equal(out[r.rid], oneshot,
+                                      err_msg=f"request {r.rid} diverged")
+    # the pool actually multiplexed: more requests than slots completed
+    assert eng.metrics["prefills"] == 6
+    assert eng.latency_summary()["slot_occupancy_mean"] > 0.5
+
+
+def test_eos_frees_slot_immediately(rng):
+    """A request hitting EOS must release its slot that tick (truncated
+    output) and the freed slot must admit the next queued request — the
+    whole point of continuous batching."""
+    model, params = _model(FULL)
+    trace = _staggered_trace()
+    base = ContinuousEngine(model, params,
+                            ServeConfig(max_len=32, n_slots=2))
+    base_out = base.run(trace)
+    base_ticks = base.metrics["ticks"]
+    # pick an EOS that request 1 (budget 9) emits mid-stream
+    eos = int(base_out[1][3])
+    eng = ContinuousEngine(model, params,
+                           ServeConfig(max_len=32, n_slots=2, eos_id=eos))
+    out = eng.run(_staggered_trace())
+    cut = list(base_out[1]).index(eos)
+    np.testing.assert_array_equal(out[1], base_out[1][:cut + 1])
+    assert len(out[1]) < len(base_out[1])
+    # every request still completes, and freeing early can only help:
+    assert sorted(out) == sorted(base_out)
+    assert eng.metrics["ticks"] <= base_ticks
+
+
+def test_stop_tokens_truncate_like_eos(rng):
+    model, params = _model(FULL)
+    base = ContinuousEngine(model, params,
+                            ServeConfig(max_len=32, n_slots=2))
+    trace = _staggered_trace()
+    base_out = base.run(trace)
+    stop = int(base_out[3][2])
+    trace2 = _staggered_trace()
+    trace2[3].stop_tokens = (stop,)
+    eng = ContinuousEngine(model, params,
+                           ServeConfig(max_len=32, n_slots=2))
+    out = eng.run(trace2)
+    cut = list(base_out[3]).index(stop)
+    np.testing.assert_array_equal(out[3], base_out[3][:cut + 1])
+    # other requests untouched
+    for rid in (0, 1, 2, 4, 5):
+        np.testing.assert_array_equal(out[rid], base_out[rid])
+
+
+def test_per_request_prng_independent_of_batch_mates(rng):
+    """temperature > 0: request ``rid``'s sampled stream is a pure function
+    of (engine seed, rid, token index) — the same request must produce the
+    SAME tokens whether it runs alone on one slot or packed with
+    batch-mates on four."""
+    model, params = _model(FULL)
+    prompt = rng.integers(0, 32, (6,)).astype(np.int32)
+    lone = ContinuousEngine(model, params,
+                            ServeConfig(max_len=32, n_slots=1,
+                                        temperature=1.0, seed=3))
+    out_alone = lone.run([Request(rid=7, prompt=prompt, max_new_tokens=8)])
+    packed = ContinuousEngine(model, params,
+                              ServeConfig(max_len=32, n_slots=4,
+                                          temperature=1.0, seed=3))
+    mates = [Request(rid=i, prompt=rng.integers(0, 32, (6,)).astype(np.int32),
+                     max_new_tokens=8) for i in (1, 2, 3)]
+    out_packed = packed.run(mates + [Request(rid=7, prompt=prompt,
+                                             max_new_tokens=8)])
+    np.testing.assert_array_equal(out_packed[7], out_alone[7])
+    # distinct rids draw distinct streams (same prompt would still differ)
+    assert len({tuple(v.tolist()) for v in out_packed.values()}) > 1
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0],
+                         ids=["greedy", "sampled"])
+def test_decode_step_multiplication_audit_full_pa(temperature):
+    """The serving hot loop keeps the paper's property: in full-PA mode the
+    fused decode+sample step (per-slot attention, lm head, sampler) emits
+    ZERO tensor-shaped mul-family ops — for greedy AND sampled decoding.
+    The sampled path needs the PA Gumbel-argmax sampler: both
+    ``jax.random.categorical`` and ``jax.random.uniform`` emit a native
+    tensor multiply (this test fails with either)."""
+    pa = PAConfig(mode="full", deriv="approx", loss_deriv="exact", impl="jnp")
+    model, params = _model(FULL.replace(pa=pa))
+    eng = ContinuousEngine(model, params,
+                           ServeConfig(max_len=16, n_slots=2,
+                                       temperature=temperature))
+    stats = eng.decode_step_mul_stats()
+    assert stats["tensor_total"] == 0, stats["tensor_sites"]
+
+
+def test_insert_slot_preserves_other_slots(rng):
+    """Prefill-into-slot must be surgical: replacing slot j leaves every
+    other slot's cache rows bit-identical (no stalling, no clobbering of
+    in-flight decode state) and resets slot j's stale kpos tail to -1."""
+    model, params = _model(FULL)
+    pool = model.init_cache(3, 16)
+    toks = jnp.asarray(rng.integers(0, 32, (3, 6)), jnp.int32)
+    _, pool = model.prefill(params, {"tokens": toks}, pool)
+    before = jax.tree.map(np.asarray, pool)
+
+    one = model.init_cache(1, 16)
+    _, one = model.prefill(params, {"tokens": toks[:1, :4]}, one)
+    pool = model.insert_slot(pool, one, 1)
+    for name in ("k", "v", "kpos"):
+        got = np.asarray(pool[name])
+        np.testing.assert_array_equal(got[:, 0], before[name][:, 0])
+        np.testing.assert_array_equal(got[:, 2], before[name][:, 2])
+        np.testing.assert_array_equal(got[:, 1], np.asarray(one[name])[:, 0])
+    # position reset: slots beyond the 4-token prompt are empty again
+    assert (np.asarray(pool["kpos"])[:, 1, 4:] == -1).all()
+    assert (np.asarray(pool["kpos"])[:, 1, :4] >= 0).all()
