@@ -2,13 +2,21 @@
 # `python -m benchmarks.*` invocations don't need it spelled out.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all bench bench-fast bench-all check-bench
+.PHONY: test test-all test-faults bench bench-fast bench-all check-bench
 
 # Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
 # The bench-schema check runs first — a malformed BENCH_*.json trajectory
-# point fails the tier before any test time is spent.
-test: check-bench
+# point fails the tier before any test time is spent. The chaos suite
+# (slow-marked, but minutes not hours) rides in the default gate too:
+# resilience regressions should not wait for `test-all`.
+test: check-bench test-faults
 	$(PY) -m pytest -x -q
+
+# Seeded end-to-end fault-injection runs (tests/test_resilience.py):
+# every FAULT_KINDS entry driven through the real train loop and serving
+# engine (DESIGN.md §7).
+test-faults:
+	$(PY) -m pytest -q -m slow tests/test_resilience.py
 
 # Everything, including interpret-mode kernel tests marked `slow`.
 test-all: check-bench

@@ -28,8 +28,10 @@ optimizer cannot commit a trajectory point.
 — the freshness mechanism generalised from kernel families to the serving
 subsystem), a non-empty ``gates_passed`` record including the per-request
 token-parity gate, the ``throughput_speedup_vs_seed`` ratios, a
-``slot_occupancy`` section, and a clean decode-step
-``multiplication_audit`` (tensor_total == 0 in full-PA mode).
+``slot_occupancy`` section, a numeric ``recovery`` counter section (the
+poisoned-slot quarantine gate's health snapshot, DESIGN.md §7), and a
+clean decode-step ``multiplication_audit`` (tensor_total == 0 in full-PA
+mode).
 
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
 or import ``validate_report`` / ``validate_file`` from tests.
@@ -234,6 +236,10 @@ def _validate_serve(report, name: str) -> list:
     if not _numeric_dict(report.get("slot_occupancy")):
         errs.append(f"{name}: serve requires a numeric 'slot_occupancy' "
                     f"section")
+    if not _numeric_dict(report.get("recovery")):
+        errs.append(f"{name}: serve requires a numeric 'recovery' counter "
+                    f"section (the quarantine gate's health_snapshot — "
+                    f"PR 6 hardening, DESIGN.md §7)")
     audit = report.get("multiplication_audit")
     if not isinstance(audit, dict):
         errs.append(f"{name}: serve requires a 'multiplication_audit' object")

@@ -19,7 +19,12 @@ Correctness gates the file's existence (exit nonzero, no JSON on failure):
   * aggregate throughput must beat the seed policy on the trace;
   * full-PA mode: token parity again, plus the decode+sample step must
     audit multiplication-free (``jaxpr_mul_stats.tensor_total == 0``) —
-    the paper's claim survives into the serving hot loop.
+    the paper's claim survives into the serving hot loop;
+  * quarantine parity: with a deterministically poisoned cache row
+    (``resilience.FaultPlan``), the poisoned request is evicted with an
+    explicit status while every healthy request keeps bit-exact parity
+    with the clean trace; the gate's ``health_snapshot`` counters are
+    published as the report's ``recovery`` section (DESIGN.md §7).
 
 ``--smoke`` runs the same gates on a smaller trace and writes the JSON to
 a throwaway path — the `make bench-fast` entry for the test tier.
@@ -126,6 +131,7 @@ def main(argv=None) -> None:
         seed, _ = _run_seed(model, params, trace, max_len, n_slots, seed_jits)
         _assert_token_parity(cont, seed, "native")
         state["warm"] = True
+        state["clean"] = cont
 
     def pa_parity():
         cont, _ = _run_continuous(pa_engine, pa_trace)
@@ -151,10 +157,43 @@ def main(argv=None) -> None:
             f"full-PA SAMPLED decode step emits tensor-shaped multiplies: "
             f"{s['tensor_sites']}")
 
+    def quarantine():
+        # Hardening gate (DESIGN.md §7): poison the first request's cache
+        # row two ticks after its arrival. The poisoned request must be
+        # evicted with an explicit status and a bit-exact delivered prefix;
+        # every OTHER request must keep full token parity with the clean
+        # trace — quarantine may never perturb batch-mates.
+        from repro.resilience import FaultPlan, FaultSpec
+        victim = trace[0]
+        plan = FaultPlan([FaultSpec("poison_slot", at=victim.arrival + 2,
+                                    rid=victim.rid)])
+        chaos = ContinuousEngine(model, params,
+                                 ServeConfig(max_len=max_len,
+                                             n_slots=n_slots),
+                                 fault_plan=plan)
+        out = chaos.run(list(trace))
+        clean = state["clean"]
+        assert chaos.scheduler.status[victim.rid] == "evicted_nonfinite", \
+            chaos.scheduler.status
+        got, ref = np.asarray(out[victim.rid]), np.asarray(clean[victim.rid])
+        assert got.size < ref.size, "poisoned request was not cut short"
+        np.testing.assert_array_equal(
+            got, ref[:got.size],
+            err_msg="poisoned request's delivered prefix diverged")
+        for r in trace:
+            if r.rid == victim.rid:
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(out[r.rid]), np.asarray(clean[r.rid]),
+                err_msg=f"healthy request {r.rid} lost parity under "
+                        f"quarantine")
+        state["recovery"] = chaos.health_snapshot()
+
     gates.run("token_parity_continuous_vs_oneshot", parity)
     gates.run("token_parity_full_pa", pa_parity)
     gates.run("decode_step_zero_tensor_mul_full_pa", audit)
     gates.run("decode_step_zero_tensor_mul_full_pa_sampled", audit_sampled)
+    gates.run("quarantine_parity_under_poison", quarantine)
 
     # -- timed rounds (both engines warm; interleaved; min) ------------------
     cont_s, seed_s = [], []
@@ -221,6 +260,9 @@ def main(argv=None) -> None:
             "ticks": lat["ticks"],
             "prefills": lat["prefills"],
         },
+        # degradation/recovery counters from the quarantine gate's chaos
+        # run (DESIGN.md §7): one poisoned slot, evicted and recovered
+        "recovery": {k: round(v, 3) for k, v in state["recovery"].items()},
         "slowdown_vs_native": {
             "full_pa_decode": round(state["pa_dt"] / nat_dt, 1),
         },

@@ -37,15 +37,24 @@ def _flatten(tree):
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, io_fault=None):
         self.dir = directory
         self.keep = keep
+        # fault-injection hook (resilience/faults.py): called with the step
+        # inside the save worker; raising simulates a write failure. None in
+        # production — the hot path pays nothing.
+        self._io_fault = io_fault
         self._thread: Optional[threading.Thread] = None
         self._exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, tree: Any, blocking: bool = False):
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             extra: Any = None):
+        """``extra`` is an optional JSON-serialisable sidecar (the train
+        loop persists its telemetry ``history`` here) written atomically
+        with the checkpoint — a resumed run appends to it instead of
+        starting fresh."""
         self.wait()        # joins the previous save; re-raises its failure
         leaves, treedef = _flatten(tree)
         arrays = [np.asarray(x) for x in leaves]   # device -> host copy here
@@ -53,11 +62,16 @@ class Checkpointer:
         def work():
             tmp = os.path.join(self.dir, f"tmp.{step}")
             try:
+                if self._io_fault is not None:
+                    self._io_fault(step)
                 final = os.path.join(self.dir, f"step_{step:010d}")
                 os.makedirs(tmp, exist_ok=True)
                 manifest = {"step": step, "leaves": []}
                 np.savez(os.path.join(tmp, "proc0.npz"),
                          **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+                if extra is not None:
+                    with open(os.path.join(tmp, "extra.json"), "w") as f:
+                        json.dump(extra, f)
                 for i, a in enumerate(arrays):
                     manifest["leaves"].append({
                         "i": i, "shape": list(a.shape), "dtype": str(a.dtype),
@@ -125,7 +139,13 @@ class Checkpointer:
             manifest = json.load(f)
         data = np.load(os.path.join(path, "proc0.npz"))
         leaves, treedef = _flatten(like)
-        assert len(leaves) == len(manifest["leaves"]), "tree structure changed"
+        if len(leaves) != len(manifest["leaves"]):
+            # a real error, not an assert: asserts vanish under python -O,
+            # and silently restoring a mismatched tree corrupts training
+            raise ValueError(
+                f"checkpoint step {step}: tree structure changed — "
+                f"{len(manifest['leaves'])} leaves on disk vs "
+                f"{len(leaves)} in the restore target")
         out = []
         for i in range(len(leaves)):
             a = data[f"leaf_{i}"]
@@ -145,8 +165,38 @@ class Checkpointer:
             tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
         return tree
 
-    def restore_latest(self, like: Any, shardings: Any = None):
-        step = self.latest_step()
-        if step is None:
+    def load_extra(self, step: int) -> Any:
+        """The JSON sidecar saved with ``save(..., extra=...)`` (None when
+        the checkpoint predates it)."""
+        path = os.path.join(self.dir, f"step_{step:010d}", "extra.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def restore_latest(self, like: Any, shardings: Any = None,
+                       log=None):
+        """Restore the newest checkpoint that passes its integrity check.
+
+        One corrupt ``step_*`` dir (bit rot, torn write on a non-atomic
+        filesystem) must not brick resume while ``keep`` older good
+        checkpoints sit on disk: walk newest -> oldest, skipping candidates
+        that fail crc32/manifest/structure validation. Raises the LAST
+        failure if checkpoints exist but none restores — silently starting
+        from scratch over unreadable state would be worse."""
+        steps = self.all_steps()
+        if not steps:
             return None, None
-        return step, self.restore(step, like, shardings)
+        failures = []
+        for step in reversed(steps):
+            try:
+                return step, self.restore(step, like, shardings)
+            except (OSError, ValueError, KeyError,
+                    json.JSONDecodeError) as e:
+                failures.append((step, e))
+                if log is not None:
+                    log(f"[ckpt] step {step} failed integrity check ({e}); "
+                        f"falling back to the next-older checkpoint")
+        raise IOError(
+            "no restorable checkpoint: all candidates failed integrity — "
+            + "; ".join(f"step {s}: {e}" for s, e in failures))

@@ -1,0 +1,14 @@
+from .faults import (FAULT_KINDS, FaultPlan, FaultSpec, flip_checkpoint_bit,
+                     poison_cache_row)
+from .detectors import (LossSpikeDetector, nonfinite_count, nonfinite_rows,
+                        saturated_rows)
+from .recovery import (RecoveryPolicy, UnrecoverableTrainingError, data_index,
+                       retry_io)
+
+__all__ = [
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "flip_checkpoint_bit",
+    "poison_cache_row",
+    "LossSpikeDetector", "nonfinite_count", "nonfinite_rows",
+    "saturated_rows",
+    "RecoveryPolicy", "UnrecoverableTrainingError", "data_index", "retry_io",
+]

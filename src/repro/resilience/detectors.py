@@ -1,0 +1,107 @@
+"""Multiplication-free health sentinels.
+
+The PA contract is explicitly out-of-contract on inf/nan (DESIGN.md §2.3):
+a non-finite value entering PAM arithmetic does not saturate the way a
+true multiply would — it silently turns into in-range garbage. So the
+guards that watch for it must (a) look at the BIT PATTERN, not rely on
+float comparisons downstream of PA ops, and (b) themselves add zero
+tensor-shaped multiplies, or enabling them would break the PR-4 full-PA
+audit (``launch.hlo_stats.jaxpr_mul_stats``).
+
+Everything here is integer compares on the f32 bitcast, in the spirit of
+``kernels/pa_prims.py``:
+
+  * non-finite  <=>  exponent field == 0xFF      (inf or nan);
+  * saturated   <=>  exponent field >= 254       (|x| >= 2^127) — catches
+    PA-mangled garbage that escaped the wrap FINITE, which a plain isnan
+    would miss.
+
+``jaxpr_mul_stats`` exempts integer-dtype ops (addressing/bit arithmetic)
+and comparisons are not in the mul family, so the in-jit detectors audit
+to zero by construction (tests/test_resilience.py proves it on the full-PA
+train step and decode+sample step).
+
+The loss-spike detector is a host-side median window (the train loop's
+per-step loss is already a host scalar): no tensor math at all, and the
+threshold compare is O(1) host schedule — the same exemption class as the
+lr schedule.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.floatbits import EXP_MASK, MAN_BITS
+
+# exponent-field threshold for "saturated": |x| >= 2^127 (field >= 254)
+_SAT_FIELD = np.int32(254 << MAN_BITS)
+
+
+def _exp_field(x: jax.Array) -> jax.Array:
+    """Biased exponent field (int32, still shifted into bit position) of
+    the f32 bitcast — one astype + one bitcast + one mask, all
+    audit-exempt."""
+    i = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return i & EXP_MASK
+
+
+def nonfinite_count(tree) -> jax.Array:
+    """int32 count of non-finite elements across every floating leaf of
+    ``tree`` — the bit-level scan the health-instrumented train step emits
+    as ``metrics['nonfinite']``. Zero tensor-shaped multiplies: integer
+    compare + integer reduce per leaf."""
+    total = jnp.int32(0)
+    for leaf in jax.tree.leaves(tree):
+        if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            continue
+        total = total + jnp.sum(
+            (_exp_field(jnp.asarray(leaf)) == EXP_MASK).astype(jnp.int32))
+    return total
+
+
+def nonfinite_rows(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Per-row non-finite flag (bool) — the serve-side guard over the
+    last-position logits: row i is bad iff ANY element has an all-ones
+    exponent field."""
+    return jnp.any(_exp_field(x) == EXP_MASK, axis=axis)
+
+
+def saturated_rows(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Per-row saturation flag: any |element| >= 2^127 OR non-finite.
+    This is the PA-aware guard — garbage that escaped the 2^129 wrap as a
+    huge FINITE value trips it where isnan stays silent."""
+    return jnp.any(_exp_field(x) >= _SAT_FIELD, axis=axis)
+
+
+class LossSpikeDetector:
+    """Median-window loss-spike detector (host-side).
+
+    ``check(loss)`` returns True when ``loss`` exceeds ``factor`` x the
+    median of the trailing window; spiking losses are NOT folded into the
+    window (a spike must not dilute the baseline it is judged against —
+    the same pre-update discipline as ``train.straggler_check``). The
+    default factor is a power of two, so even on a PA host the threshold
+    compare is an exponent shift away from the median."""
+
+    def __init__(self, window: int = 8, factor: float = 8.0,
+                 min_history: int = 4):
+        self.window, self.factor, self.min_history = window, factor, min_history
+        self.buf: deque = deque(maxlen=window)
+
+    def check(self, loss: float) -> bool:
+        loss = float(loss)
+        if not np.isfinite(loss):
+            return True          # the bit scan catches this too; belt+braces
+        spike = (len(self.buf) >= self.min_history
+                 and loss > self.factor * float(np.median(self.buf)))
+        if not spike:
+            self.buf.append(loss)
+        return spike
+
+    def reset(self) -> None:
+        """Clear the window — called after a rollback: the replayed steps
+        rebuild the baseline from post-restore losses."""
+        self.buf.clear()

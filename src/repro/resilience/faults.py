@@ -1,0 +1,172 @@
+"""Deterministic, seeded fault injection for the train loop and serve engine.
+
+A ``FaultPlan`` is a registry of ``FaultSpec`` entries keyed by an integer
+clock — the train step / synthetic-data index on the training side, the
+scheduler tick on the serving side. The hot loops consult the plan through
+optional hooks (``train(..., fault_plan=...)``,
+``ContinuousEngine(..., fault_plan=...)``, ``Checkpointer(io_fault=...)``);
+when no plan is armed the hooks are ``None`` and the production paths pay
+nothing.
+
+Fault kinds (the chaos suite in ``tests/test_resilience.py`` drives all of
+them through full runs):
+
+  * ``nan_grad``       — NaN/Inf gradients at one data index: the train
+                         step gains a scalar argument that is added to
+                         every gradient leaf (0.0 normally, NaN/Inf when
+                         firing), so the poison flows through the real
+                         optimizer update path;
+  * ``ckpt_io_error``  — the checkpoint save for step N raises ``IOError``
+                         (disk full / flaky FS), exercising the retry +
+                         backoff wrapper;
+  * ``ckpt_bit_flip``  — flip one bit of one leaf of an ON-DISK checkpoint
+                         (manifest untouched, so the crc32 integrity check
+                         must catch it and restore must fall back);
+  * ``preempt``        — drop the ``PREEMPT`` file at step N (the SLURM /
+                         BORG SIGTERM analogue), exercising the
+                         checkpoint-and-exit path and file consumption;
+  * ``straggler``      — sleep ``delay_s`` before step N, exercising the
+                         EWMA straggler alert;
+  * ``poison_slot``    — NaN the pooled-cache row backing request ``rid``
+                         at serve tick N, exercising the non-finite-logits
+                         quarantine (the poisoned request is evicted, its
+                         batch-mates keep bit-exact token parity).
+
+Determinism: every spec fires at an explicit integer clock value, and any
+unspecified choice (which leaf / which bit to flip) is drawn from the
+plan's seeded generator — two runs of the same plan inject byte-identical
+faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+FAULT_KINDS = ("nan_grad", "ckpt_io_error", "ckpt_bit_flip", "preempt",
+               "straggler", "poison_slot")
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One injectable fault. ``at`` is the integer clock value (train step,
+    data index, or serve tick — see FAULT_KINDS above) at which it fires;
+    ``once`` disarms it after the first firing (a transient fault — the
+    recovery retry then succeeds), ``once=False`` models a persistent fault
+    (recovery must escalate)."""
+    kind: str
+    at: int
+    once: bool = True
+    mode: str = "nan"                 # nan_grad: "nan" | "inf"
+    rid: Optional[int] = None         # poison_slot target request
+    delay_s: float = 0.25             # straggler sleep
+    leaf: Optional[int] = None        # ckpt_bit_flip: leaf index (None=seeded)
+    bit: Optional[int] = None         # ckpt_bit_flip: bit index (None=seeded)
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"registry: {FAULT_KINDS}")
+
+
+class FaultPlan:
+    """A seeded registry of faults, consulted by the hot loops via ``pop``.
+
+    ``pop(kind, at)`` returns the first matching armed spec and marks it
+    fired (``once`` specs never fire twice); ``armed(kind)`` says whether
+    any spec of that kind exists at all — the loops use it to decide
+    whether to build the (slightly) instrumented code path."""
+
+    def __init__(self, specs: Sequence[FaultSpec] = (), seed: int = 0):
+        self.specs: List[FaultSpec] = list(specs)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.log: List[Tuple[str, int]] = []      # (kind, at) firing record
+
+    def add(self, spec: FaultSpec) -> "FaultPlan":
+        self.specs.append(spec)
+        return self
+
+    def armed(self, kind: str) -> bool:
+        return any(s.kind == kind for s in self.specs)
+
+    def pop(self, kind: str, at: int) -> Optional[FaultSpec]:
+        for s in self.specs:
+            if s.kind == kind and s.at == at and not (s.once and s.fired):
+                s.fired += 1
+                self.log.append((kind, at))
+                return s
+        return None
+
+    # -- loop-facing hooks --------------------------------------------------
+    def grad_fault(self, at: int) -> np.float32:
+        """Scalar added to every gradient leaf at data index ``at`` —
+        0.0 (exact identity on finite grads) normally, NaN/Inf when a
+        ``nan_grad`` spec fires."""
+        spec = self.pop("nan_grad", at)
+        if spec is None:
+            return np.float32(0.0)
+        return np.float32(np.inf if spec.mode == "inf" else np.nan)
+
+    def io_fault(self, step: int) -> None:
+        """Checkpointer save hook: raise at the doomed step."""
+        if self.pop("ckpt_io_error", step) is not None:
+            raise IOError(f"injected checkpoint IO failure at step {step} "
+                          f"(FaultPlan seed={self.seed})")
+
+    def apply_bit_flips(self, ckpt_dir: str) -> List[Tuple[int, str, int]]:
+        """Fire every armed ``ckpt_bit_flip`` spec against the on-disk
+        checkpoints under ``ckpt_dir`` (``at`` = the checkpoint step to
+        corrupt). Returns [(step, leaf_name, bit_index), ...]."""
+        out = []
+        for s in list(self.specs):
+            if s.kind != "ckpt_bit_flip" or (s.once and s.fired):
+                continue
+            s.fired += 1
+            self.log.append((s.kind, s.at))
+            name, bit = flip_checkpoint_bit(ckpt_dir, s.at, leaf=s.leaf,
+                                            bit=s.bit, rng=self.rng)
+            out.append((s.at, name, bit))
+        return out
+
+
+def flip_checkpoint_bit(ckpt_dir: str, step: int, leaf: Optional[int] = None,
+                        bit: Optional[int] = None, rng=None,
+                        seed: int = 0) -> Tuple[str, int]:
+    """Corrupt one on-disk checkpoint leaf by flipping one payload bit.
+
+    The manifest is left untouched, so the flipped leaf's crc32 no longer
+    matches — exactly the silent-media-corruption case the restore
+    integrity check exists for. Returns (leaf_name, bit_index)."""
+    rng = rng if rng is not None else np.random.default_rng(seed)
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "proc0.npz")
+    data = {k: np.array(v) for k, v in np.load(path).items()}
+    names = sorted(data, key=lambda k: int(k.split("_")[1]))
+    name = names[int(rng.integers(len(names))) if leaf is None else leaf]
+    flat = data[name].reshape(-1).view(np.uint8)
+    i = int(rng.integers(flat.size * 8)) if bit is None else bit
+    flat[i // 8] ^= np.uint8(1 << (i % 8))
+    np.savez(path, **data)
+    return name, i
+
+
+def poison_cache_row(model, cache, slot: int):
+    """NaN every float leaf of slot ``slot``'s pooled-cache row (the
+    serving-side fault: a poisoned KV/state row makes that slot's next
+    decode emit non-finite logits while batch-mates' rows are untouched).
+    Integer leaves (kpos) are left alone — positions stay valid so the
+    poisoned row still flows through the lockstep decode shape-stably."""
+    dims = model.cache_batch_dims()
+
+    def poison(leaf, d):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        idx = [slice(None)] * leaf.ndim
+        idx[d] = slot
+        return leaf.at[tuple(idx)].set(jnp.nan)
+    return jax.tree.map(poison, cache, dims)

@@ -1,0 +1,79 @@
+"""Recovery policy: rollback for training, retry/backoff for IO.
+
+The train-loop contract (wired in ``train/loop.py``, chaos-tested in
+``tests/test_resilience.py``):
+
+  on an unhealthy step (non-finite scan fired, or loss spiked vs the
+  median window):
+    1. the offending DATA INDEX is added to the skip set — the
+       deterministic synthetic stream replays every other batch
+       bit-identically, the poisoned one is permanently skipped;
+    2. params/opt are restored from the last good checkpoint
+       (``restore_latest`` walks past integrity-failed candidates), the
+       step counter rewinds to it, and in-memory history is truncated to
+       match — the resumed trajectory is exactly "as if the bad step
+       never ran";
+    3. consecutive rollbacks are bounded: ``max_rollbacks`` without an
+       intervening successful checkpoint escalates to
+       ``UnrecoverableTrainingError`` (a persistent fault must page a
+       human, not spin).
+
+Checkpoint/data IO goes through ``retry_io`` — bounded retries with
+exponential backoff, the standard transient-vs-persistent split.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+
+class UnrecoverableTrainingError(RuntimeError):
+    """Raised when bounded recovery is exhausted — the escalation path."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Arming this on ``train(...)`` enables the health-instrumented step
+    (bit-level non-finite scan in ``metrics['nonfinite']``), the loss-spike
+    window, rollback-and-skip, and retry-wrapped checkpoint IO."""
+    max_rollbacks: int = 3            # consecutive, reset on a good ckpt save
+    spike_window: int = 8
+    spike_factor: float = 8.0         # power of two: exponent-shift threshold
+    spike_min_history: int = 4
+    io_retries: int = 3
+    io_backoff_s: float = 0.05
+
+
+def retry_io(fn: Callable, retries: int = 3, backoff_s: float = 0.05,
+             exceptions=(OSError,), sleep: Callable = time.sleep,
+             log: Optional[Callable] = None):
+    """Run ``fn()`` with bounded retries and exponential backoff
+    (``backoff_s * 2**attempt`` between attempts). Re-raises the last
+    exception once ``retries`` extra attempts are exhausted. ``sleep`` is
+    injectable so tests assert the backoff sequence without waiting."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except exceptions as e:       # noqa: PERF203 — retry loop
+            if attempt == retries:
+                raise
+            if log is not None:
+                log(f"[retry_io] attempt {attempt + 1}/{retries + 1} failed "
+                    f"({e}); backing off {backoff_s * 2 ** attempt:.3f}s")
+            sleep(backoff_s * (2 ** attempt))
+
+
+def data_index(step: int, skipped: Iterable[int]) -> int:
+    """Map a train step to its synthetic-data index given the set of
+    skipped indices: the stream is consumed in order with the skipped
+    indices excised, so replayed steps before a skip see their original
+    batches bit-identically and every step after it shifts past the
+    poison. Pure function of (step, skipped) — restart-safe."""
+    d = step
+    for s in sorted(set(skipped)):
+        if s <= d:
+            d += 1
+        else:
+            break
+    return d

@@ -1,8 +1,8 @@
 from .engine import (Engine, ServeConfig, cache_capacity_guard,
                      make_prefill_batch, pa_categorical)
-from .scheduler import Request, Scheduler, SlotState
+from .scheduler import QueueFullError, Request, Scheduler, SlotState
 from .continuous import ContinuousEngine
 
 __all__ = ["Engine", "ServeConfig", "cache_capacity_guard",
-           "Request", "Scheduler", "SlotState",
+           "QueueFullError", "Request", "Scheduler", "SlotState",
            "ContinuousEngine", "make_prefill_batch", "pa_categorical"]

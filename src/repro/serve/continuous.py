@@ -3,17 +3,32 @@
 Architecture (DESIGN.md §6): a fixed pool of ``n_slots`` decode slots backs
 one pooled KV cache (batch dim == slot index). Per tick:
 
-  1. **admission** — each free slot takes the oldest arrived request: the
+  1. **degradation sweep** — deadline-expired requests are rejected (still
+     queued) or evicted (mid-decode) with an error status, so one
+     pathological request cannot hold a slot forever;
+  2. **admission** — each free slot takes the oldest arrived request: the
      prompt is prefilled into a fresh batch-1 cache, the first token is
      sampled from the prefill logits, and the slot row of the pooled cache
      is replaced via ``model.insert_slot`` (a batch-dim
      ``dynamic_update_slice`` per leaf — kpos included, so the fresh -1
      tail resets the previous occupant's stale positions);
-  2. **decode** — ONE jitted step advances every slot: ``model.decode_at``
+  3. **decode** — ONE jitted step advances every slot: ``model.decode_at``
      with per-slot positions (each row writes slot ``pos % smax`` of its
      own cache row), then per-request sampling, fused in the same jit so
-     the decode+sample step is a single auditable program;
-  3. **eviction** — finished requests (EOS / stop token / length budget)
+     the decode+sample step is a single auditable program. With
+     ``guard_nonfinite`` (default on) the same jit also emits a per-slot
+     health bit — an exponent-field integer compare over the row's logits
+     (``resilience/detectors.py``), so guards add zero tensor-shaped
+     multiplies and the full-PA audit stays clean;
+  4. **quarantine** — a slot whose logits went non-finite (poisoned cache
+     row, numeric escape) evicts ONLY its own request with status
+     ``evicted_nonfinite``; its garbage token is discarded, never emitted.
+     Batch-mates are untouched — lockstep rows are independent, so healthy
+     requests keep bit-exact token parity with an un-poisoned trace. The
+     freed slot returns to the pool (the next occupant's ``insert_slot``
+     overwrites the full row) and counts as ``recovered`` once it
+     completes a later request cleanly;
+  5. **eviction** — finished requests (EOS / stop token / length budget)
      free their slot immediately; the freed slot admits from the queue on
      the next tick. No drain-the-batch stalls.
 
@@ -40,7 +55,13 @@ import jax.numpy as jnp
 from repro.models.registry import Model
 from .engine import (ServeConfig, cache_capacity_guard, make_prefill_batch,
                      pa_categorical, scale_logits)
-from .scheduler import Request, Scheduler, SlotState
+from .scheduler import QueueFullError, Request, Scheduler, SlotState
+
+
+def _fresh_counters() -> Dict[str, int]:
+    return {"submitted": 0, "completed_ok": 0, "rejected_queue_full": 0,
+            "expired_in_queue": 0, "evicted_deadline": 0,
+            "evicted_nonfinite": 0, "recovered_slots": 0}
 
 
 class ContinuousEngine:
@@ -48,13 +69,21 @@ class ContinuousEngine:
 
     ``on_token`` callbacks (``run``/``step``) receive ``(rid, token)`` as
     each token is produced — the streaming output surface.
+
+    ``fault_plan`` (``resilience.FaultPlan``) arms deterministic chaos:
+    ``poison_slot`` specs NaN the target request's cache row at an exact
+    tick. None in production — the hot path pays nothing.
     """
 
-    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig(),
+                 fault_plan=None):
         self.model, self.params, self.cfg = model, params, cfg
-        self.scheduler = Scheduler(cfg.n_slots)
+        self.fault_plan = fault_plan
+        self.scheduler = Scheduler(cfg.n_slots, max_queue=cfg.max_queue)
         self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
         self._tokens: Dict[int, List[int]] = {}
+        self.counters = _fresh_counters()
+        self._tainted_slots: set = set()
         self.metrics = {
             "ticks": 0, "prefills": 0, "occupancy": [],
             "emit_wall": {}, "visible_wall": {}, "decode_wall": [],
@@ -65,17 +94,26 @@ class ContinuousEngine:
     def _build(self):
         model, cfg = self.model, self.cfg
         pa = model.cfg.pa
-        temp, seed = cfg.temperature, cfg.seed
+        temp, seed, guard = cfg.temperature, cfg.seed, cfg.guard_nonfinite
 
         def fold_key(rid, j):
             key = jax.random.PRNGKey(seed)
             return jax.random.fold_in(jax.random.fold_in(key, rid), j)
 
+        def health(lg):
+            # per-slot non-finite bit: exponent-field integer compare over
+            # the row's logits (audit-exempt — no float math at all)
+            from repro.resilience.detectors import nonfinite_rows
+            return nonfinite_rows(lg, axis=-1)
+
         if temp <= 0:
             def step(params, cache, tok, pos):
                 logits, cache = model.decode_at(params, cache, tok, pos)
-                nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)
-                return nxt.astype(jnp.int32), cache
+                lg = logits[:, -1].astype(jnp.float32)
+                nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                if guard:
+                    return nxt, health(lg), cache
+                return nxt, cache
 
             def first(logits, rid):
                 lg = logits[:, -1].astype(jnp.float32)
@@ -93,10 +131,15 @@ class ContinuousEngine:
 
             def step(params, cache, tok, pos, rids, js):
                 logits, cache = model.decode_at(params, cache, tok, pos)
-                lg = scale_logits(logits[:, -1].astype(jnp.float32), temp, pa)
+                raw = logits[:, -1].astype(jnp.float32)
+                lg = scale_logits(raw, temp, pa)
                 keys = jax.vmap(fold_key)(rids, js)
-                nxt = jax.vmap(draw)(keys, lg)
-                return nxt.astype(jnp.int32), cache
+                nxt = jax.vmap(draw)(keys, lg).astype(jnp.int32)
+                if guard:
+                    # guard the RAW logits: 1/T scaling of an inf row can
+                    # only keep or lose information, never create it
+                    return nxt, health(raw), cache
+                return nxt, cache
 
             def first(logits, rid):
                 lg = scale_logits(logits[:, -1].astype(jnp.float32), temp, pa)
@@ -113,8 +156,11 @@ class ContinuousEngine:
         compiled engine (timing rounds reuse the jitted steps; the pooled
         cache needs no clearing — admission overwrites a slot's full row
         and inactive rows are never read)."""
-        self.scheduler = Scheduler(self.cfg.n_slots)
+        self.scheduler = Scheduler(self.cfg.n_slots,
+                                   max_queue=self.cfg.max_queue)
         self._tokens = {}
+        self.counters = _fresh_counters()
+        self._tainted_slots = set()
         self.metrics = {
             "ticks": 0, "prefills": 0, "occupancy": [],
             "emit_wall": {}, "visible_wall": {}, "decode_wall": [],
@@ -122,11 +168,25 @@ class ContinuousEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, req: Request) -> None:
+        rid = req.rid
+        if (rid in self._tokens or rid in self.scheduler.status
+                or any(r.rid == rid for r in self.scheduler.pending)):
+            # a reused rid would silently clobber self._tokens[rid] and the
+            # finished dict, corrupting per-request parity accounting
+            raise ValueError(
+                f"duplicate request id {rid}: already "
+                f"{'pending or active' if rid not in self.scheduler.status else 'finished'} "
+                f"on this engine")
         cache_capacity_guard(self.model.cfg, self.cfg.max_len,
                              len(req.prompt), req.max_new_tokens)
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: max_new_tokens must be >= 1")
-        self.scheduler.submit(req)
+        try:
+            self.scheduler.submit(req)
+        except QueueFullError:
+            self.counters["rejected_queue_full"] += 1
+            raise          # explicit backpressure: the caller sheds/retries
+        self.counters["submitted"] += 1
 
     # -- scheduler tick ----------------------------------------------------
     def _admit(self, slot: SlotState, req: Request,
@@ -144,7 +204,20 @@ class ContinuousEngine:
         self._tokens[req.rid] = [first]
         self._emit(req.rid, first, on_token)
         if sch.should_finish(slot, first, self.cfg.eos_id):
-            sch.release(slot, self._tokens[req.rid])
+            self._release(slot)
+
+    def _release(self, slot: SlotState, status: str = "ok") -> None:
+        rid = slot.request.rid
+        self.scheduler.release(slot, self._tokens[rid], status=status)
+        if status == "ok":
+            self.counters["completed_ok"] += 1
+            if slot.index in self._tainted_slots:
+                # a slot that previously evicted a poisoned request has now
+                # served a healthy one end-to-end: back in full service
+                self._tainted_slots.discard(slot.index)
+                self.counters["recovered_slots"] += 1
+        elif status == "evicted_nonfinite":
+            self._tainted_slots.add(slot.index)
 
     def _emit(self, rid: int, token: int, on_token: Optional[Callable]) -> None:
         self.metrics["emit_wall"].setdefault(rid, []).append(
@@ -152,16 +225,41 @@ class ContinuousEngine:
         if on_token is not None:
             on_token(rid, token)
 
+    def _degrade(self) -> None:
+        """Deadline sweep: reject still-queued and evict mid-decode
+        requests past their tick budget (graceful degradation — partial
+        output is returned with an explicit error status)."""
+        sch = self.scheduler
+        pend, act = sch.expired()
+        for req in pend:
+            sch.reject(req, "deadline_expired_in_queue")
+            self.counters["expired_in_queue"] += 1
+        for slot in act:
+            self._release(slot, status="evicted_deadline")
+            self.counters["evicted_deadline"] += 1
+
     def step(self, on_token: Optional[Callable] = None) -> int:
-        """One scheduler tick: admit, decode all active slots lockstep,
-        evict finished. Returns the number of tokens produced."""
+        """One scheduler tick: degrade (deadlines), admit, decode all
+        active slots lockstep, quarantine non-finite slots, evict finished.
+        Returns the number of tokens produced."""
         sch, cfg = self.scheduler, self.cfg
         now = time.perf_counter()
         for req in sch.pending:
             if req.arrival <= sch.tick:
                 self.metrics["visible_wall"].setdefault(req.rid, now)
+        self._degrade()
         for slot, req in sch.admissions():
             self._admit(slot, req, on_token)
+
+        if self.fault_plan is not None:
+            spec = self.fault_plan.pop("poison_slot", sch.tick)
+            if spec is not None:
+                from repro.resilience.faults import poison_cache_row
+                target = next((s for s in sch.active_slots()
+                               if s.request.rid == spec.rid), None)
+                if target is not None:
+                    self.cache = poison_cache_row(self.model, self.cache,
+                                                  target.index)
 
         active = sch.active_slots()
         produced = 0
@@ -174,19 +272,31 @@ class ContinuousEngine:
                 pos[s.index] = s.next_pos
             t0 = time.perf_counter()
             if cfg.temperature <= 0:
-                nxt, self.cache = self._step_fn(self.params, self.cache,
-                                                tok, pos)
+                args = (self.params, self.cache, tok, pos)
             else:
                 rids = np.zeros((n,), np.int32)
                 js = np.zeros((n,), np.int32)
                 for s in active:
                     rids[s.index] = s.request.rid
                     js[s.index] = s.produced
-                nxt, self.cache = self._step_fn(self.params, self.cache,
-                                                tok, pos, rids, js)
+                args = (self.params, self.cache, tok, pos, rids, js)
+            if cfg.guard_nonfinite:
+                nxt, bad, self.cache = self._step_fn(*args)
+                bad = np.asarray(bad)
+            else:
+                nxt, self.cache = self._step_fn(*args)
+                bad = None
             nxt = np.asarray(nxt)
             self.metrics["decode_wall"].append(time.perf_counter() - t0)
             for s in active:
+                if bad is not None and bad[s.index]:
+                    # quarantine: this slot's logits went non-finite — its
+                    # garbage token is never emitted, only ITS request is
+                    # evicted; batch-mates' rows are independent and keep
+                    # bit-exact parity with an un-poisoned trace
+                    self._release(s, status="evicted_nonfinite")
+                    self.counters["evicted_nonfinite"] += 1
+                    continue
                 t = int(nxt[s.index])
                 s.next_pos += 1
                 s.produced += 1
@@ -195,7 +305,7 @@ class ContinuousEngine:
                 self._emit(s.request.rid, t, on_token)
                 produced += 1
                 if sch.should_finish(s, t, cfg.eos_id):
-                    sch.release(s, self._tokens[s.request.rid])
+                    self._release(s)
         self.metrics["occupancy"].append(len(active) / cfg.n_slots)
         self.metrics["ticks"] += 1
         sch.tick += 1
@@ -214,9 +324,21 @@ class ContinuousEngine:
                 for rid, toks in self.scheduler.finished.items()}
 
     # -- telemetry ---------------------------------------------------------
+    def health_snapshot(self) -> Dict[str, float]:
+        """Recovery/degradation counters (all numeric): submissions,
+        clean completions, queue-full rejections, deadline
+        rejections/evictions, non-finite quarantine evictions, and slots
+        recovered back into service after a quarantine."""
+        snap = {k: float(v) for k, v in self.counters.items()}
+        snap["tainted_slots"] = float(len(self._tainted_slots))
+        snap["pending"] = float(len(self.scheduler.pending))
+        snap["active"] = float(len(self.scheduler.active_slots()))
+        return snap
+
     def latency_summary(self) -> Dict[str, float]:
         """TTFT and inter-token latency percentiles (seconds) plus mean
-        slot occupancy — the BENCH_serve.json methodology (DESIGN.md §6)."""
+        slot occupancy — the BENCH_serve.json methodology (DESIGN.md §6) —
+        and the ``health_snapshot`` recovery counters (``recovery_*``)."""
         ttft, gaps = [], []
         for rid, emits in self.metrics["emit_wall"].items():
             vis = self.metrics["visible_wall"].get(rid, emits[0])
@@ -224,19 +346,23 @@ class ContinuousEngine:
             gaps.extend(b - a for a, b in zip(emits, emits[1:]))
         pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
         occ = self.metrics["occupancy"]
-        return {
+        out = {
             "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
             "per_token_p50_s": pct(gaps, 50), "per_token_p99_s": pct(gaps, 99),
             "slot_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
             "ticks": float(self.metrics["ticks"]),
             "prefills": float(self.metrics["prefills"]),
         }
+        for k, v in self.health_snapshot().items():
+            out[f"recovery_{k}"] = v
+        return out
 
     def decode_step_mul_stats(self) -> Dict:
         """Multiplication audit of the fused decode+sample step (the
         serving hot loop): trace ``_step_impl`` and count tensor-shaped
         mul-family ops (launch.hlo_stats.jaxpr_mul_stats). Full-PA mode
-        must report ``tensor_total == 0``."""
+        must report ``tensor_total == 0`` — including the non-finite
+        guard, which is integer exponent-field compares only."""
         from repro.launch.hlo_stats import jaxpr_mul_stats
         n = self.cfg.n_slots
         args = [self.params, self.cache, jnp.zeros((n, 1), jnp.int32),

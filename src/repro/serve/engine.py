@@ -33,6 +33,12 @@ class ServeConfig:
     # continuous batching (serve.continuous.ContinuousEngine)
     n_slots: int = 4                # decode slot pool size == cache batch
     eos_id: Optional[int] = None    # emitting this token frees the slot
+    # hardening (DESIGN.md §7): per-slot non-finite logit guard (bit-level,
+    # audit-free — quarantines a poisoned slot without touching its
+    # batch-mates), and an optional bound on the pending-request queue
+    # (submit past it raises QueueFullError — explicit backpressure).
+    guard_nonfinite: bool = True
+    max_queue: Optional[int] = None
 
 
 def make_prefill_batch(cfg, tokens):

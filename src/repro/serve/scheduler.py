@@ -9,8 +9,21 @@ logic is unit-testable without a model. The engine
     request-trace driver replay Poisson arrivals deterministically);
   * ``activate()`` — bind a request to a slot after its prefill landed;
   * ``release()`` — free the slot the moment its request finishes (EOS /
-    stop token / length budget), making it admissible on the SAME tick's
-    successor — no drain-the-batch stalls.
+    stop token / length budget / quarantine eviction), making it
+    admissible on the SAME tick's successor — no drain-the-batch stalls.
+    Every release records a terminal ``status`` ("ok" or an error code)
+    so callers can tell a clean completion from a degraded one.
+
+Graceful degradation (DESIGN.md §7):
+
+  * bounded queue — ``max_queue`` caps ``pending``; ``submit`` past the
+    bound raises ``QueueFullError``, the explicit backpressure signal a
+    front-end load-balancer sheds on (an unbounded queue converts
+    overload into unbounded latency for everyone);
+  * per-request deadlines — ``Request.deadline`` is a tick budget from
+    arrival; ``expired()`` surfaces requests past it (still queued OR
+    mid-decode) for the engine to reject/evict, so one pathological
+    request cannot hold a slot forever.
 
 Slot lifecycle: FREE -> (admission: prefill-into-slot + first token)
 ACTIVE -> per-tick decode -> (finish check) FREE. The pooled KV cache row
@@ -24,16 +37,24 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 
+class QueueFullError(RuntimeError):
+    """Bounded-queue backpressure: the request was NOT accepted."""
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival`` is the scheduler tick at which
     the request becomes visible to admission (0 = available immediately);
-    the trace drivers draw these from a Poisson process."""
+    the trace drivers draw these from a Poisson process. ``deadline``
+    (optional) is a tick budget measured from ``arrival`` — a request not
+    finished within it is rejected (still queued) or evicted (mid-decode)
+    with an error status."""
     rid: int
     prompt: "np.ndarray"              # (S,) int32
     max_new_tokens: int = 32
     arrival: int = 0
     stop_tokens: Tuple[int, ...] = ()
+    deadline: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -51,14 +72,20 @@ class SlotState:
 
 
 class Scheduler:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, max_queue: Optional[int] = None):
         self.slots: List[SlotState] = [SlotState(i) for i in range(n_slots)]
         self.pending: List[Request] = []      # submitted, not yet admitted
+        self.max_queue = max_queue
         self.tick: int = 0
         self.finished: Dict[int, List[int]] = {}
+        self.status: Dict[int, str] = {}      # rid -> terminal status
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if self.max_queue is not None and len(self.pending) >= self.max_queue:
+            raise QueueFullError(
+                f"request {req.rid}: queue full ({len(self.pending)} >= "
+                f"max_queue={self.max_queue}) — backpressure, retry later")
         self.pending.append(req)
         # stable FCFS: by arrival tick, then submission order (rid ties are
         # fine — list sort is stable)
@@ -94,6 +121,23 @@ class Scheduler:
         slot.last_token = int(first_token)
         slot.admitted_tick = self.tick
 
+    # -- deadlines ---------------------------------------------------------
+    def expired(self) -> Tuple[List[Request], List[SlotState]]:
+        """Requests past their deadline at the CURRENT tick: (still-queued,
+        mid-decode). The engine rejects/evicts them with an error status —
+        pure inspection here, no state change."""
+        t = self.tick
+        late = lambda r: (r.deadline is not None
+                          and t - r.arrival >= r.deadline)
+        return ([r for r in self.pending if late(r)],
+                [s for s in self.slots if s.active and late(s.request)])
+
+    def reject(self, req: Request, status: str) -> None:
+        """Drop a still-queued request with a terminal error status."""
+        self.pending.remove(req)
+        self.finished[req.rid] = []
+        self.status[req.rid] = status
+
     # -- completion --------------------------------------------------------
     def should_finish(self, slot: SlotState, token: int,
                       eos_id: Optional[int]) -> bool:
@@ -104,7 +148,9 @@ class Scheduler:
             return True
         return slot.produced >= req.max_new_tokens
 
-    def release(self, slot: SlotState, tokens: List[int]) -> None:
+    def release(self, slot: SlotState, tokens: List[int],
+                status: str = "ok") -> None:
         self.finished[slot.request.rid] = tokens
+        self.status[slot.request.rid] = status
         slot.request = None
         slot.produced = 0

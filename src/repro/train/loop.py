@@ -1,22 +1,40 @@
-"""Fault-tolerant training loop.
+"""Fault-tolerant, self-healing training loop.
 
 Production posture implemented and testable on one host:
   * periodic async checkpoints (atomic + integrity-checked, see checkpoint/),
   * automatic resume-from-latest on start (params, optimizer state, step),
+    walking past integrity-failed checkpoints to the newest GOOD one,
   * deterministic stateless data -> restart replays the exact stream,
   * graceful-preemption hook: if ``<workdir>/PREEMPT`` appears, the loop
-    checkpoints synchronously and exits 0 (the SLURM/BORG SIGTERM analogue;
-    tests exercise it),
+    checkpoints synchronously, CONSUMES the file, and exits 0 (the
+    SLURM/BORG SIGTERM analogue; tests exercise it). Consuming matters: a
+    restarted job that still sees the stale file would immediately
+    re-checkpoint and exit after one step, forever,
+  * telemetry ``history`` (loss, step times, straggler alerts, recovery
+    counters) is persisted alongside every checkpoint — a resumed run
+    APPENDS to the run-so-far record instead of starting a fresh dict,
   * straggler telemetry: EWMA of step time + alert when a step exceeds
     ``straggler_factor`` x EWMA — on a real fleet this feeds the scheduler;
-    here it is logged and surfaced in the returned history.
+    here it is logged and surfaced in the returned history,
+  * self-healing (DESIGN.md §7): arming a ``RecoveryPolicy`` enables the
+    bit-level non-finite sentinel + median-window loss-spike detector; an
+    unhealthy step rolls params/opt back to the last good checkpoint,
+    permanently skips the offending batch in the deterministic data
+    stream, and bounded consecutive rollbacks escalate to
+    ``UnrecoverableTrainingError``. Checkpoint IO is retry-wrapped with
+    exponential backoff,
+  * deterministic fault injection (``resilience/faults.py``): an armed
+    ``FaultPlan`` can poison gradients, fail checkpoint writes, delay
+    steps, or drop the PREEMPT file at exact step/data-index clocks — the
+    chaos suite drives all of them through this loop. No plan armed ->
+    every hook is None and the hot path is unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 import numpy as np
 import jax
@@ -53,14 +71,40 @@ def straggler_check(ewma, dt: float, factor: float):
     return alert, new_ewma
 
 
+def _fresh_history():
+    return {"loss": [], "step_time": [], "straggler_alerts": 0,
+            "rollbacks": 0, "io_retries": 0, "skipped_batches": []}
+
+
 def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
           workdir: str, loop_cfg: LoopConfig = LoopConfig(),
           train_cfg: TrainConfig = TrainConfig(),
-          mesh=None, log: Callable[[str], None] = print):
-    """Run (or resume) a training job. Returns (params, history)."""
+          mesh=None, log: Callable[[str], None] = print,
+          fault_plan=None, recovery=None):
+    """Run (or resume) a training job. Returns (params, history).
+
+    ``history`` is CUMULATIVE across preempt/restart cycles: it is
+    persisted with every checkpoint and reloaded on resume, so
+    ``history['loss'][k]`` is always the loss of global step ``k``.
+
+    ``recovery`` (``resilience.RecoveryPolicy``) arms self-healing;
+    ``fault_plan`` (``resilience.FaultPlan``) arms chaos injection.
+    """
+    from repro.resilience.detectors import LossSpikeDetector
+    from repro.resilience.recovery import (UnrecoverableTrainingError,
+                                           data_index, retry_io)
+
     os.makedirs(workdir, exist_ok=True)
-    ckpt = Checkpointer(os.path.join(workdir, "ckpts"), keep=loop_cfg.keep_ckpts)
+    io_fault = fault_plan.io_fault if fault_plan is not None else None
+    ckpt = Checkpointer(os.path.join(workdir, "ckpts"),
+                        keep=loop_cfg.keep_ckpts, io_fault=io_fault)
     data = SyntheticLM(data_cfg)
+
+    use_fault_arg = fault_plan is not None and fault_plan.armed("nan_grad")
+    if recovery is not None or use_fault_arg:
+        train_cfg = dataclasses.replace(train_cfg,
+                                        health=recovery is not None,
+                                        fault_arg=use_fault_arg)
     step_fn = make_train_step(model, opt_cfg, train_cfg)
 
     params = model.init(jax.random.PRNGKey(data_cfg.seed))
@@ -77,30 +121,109 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
                                            mesh, model.cfg.rules)}
         params = jax.tree.map(jax.device_put, params, shardings["params"])
         opt_state = jax.tree.map(jax.device_put, opt_state, shardings["opt"])
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-    else:
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
 
+    history = _fresh_history()
     latest = ckpt.latest_step()
     if latest is not None:
         # shardings flow into restore itself: one device_put onto the target
         # sharding, instead of a default-device restore followed by a second
-        # full-tree transfer.
-        _, restored = ckpt.restore_latest(state_like, shardings)
+        # full-tree transfer. restore_latest walks past integrity-failed
+        # checkpoints to the newest good one.
+        restored_step, restored = ckpt.restore_latest(state_like, shardings,
+                                                      log=log)
         params, opt_state = restored["params"], restored["opt"]
-        start_step = latest
-        log(f"[loop] resumed from checkpoint step {latest}")
+        start_step = restored_step
+        saved = ckpt.load_extra(restored_step)
+        if saved and "history" in saved:
+            history.update(saved["history"])
+        log(f"[loop] resumed from checkpoint step {restored_step}")
 
-    history = {"loss": [], "step_time": [], "straggler_alerts": 0}
+    def save_ckpt(step, blocking):
+        def do():
+            ckpt.save(step, {"params": params, "opt": opt_state},
+                      blocking=blocking, extra={"history": history})
+        if recovery is not None:
+            attempts = {"n": 0}
+
+            def counted():
+                attempts["n"] += 1
+                do()
+            retry_io(counted, retries=recovery.io_retries,
+                     backoff_s=recovery.io_backoff_s, log=log)
+            history["io_retries"] += attempts["n"] - 1
+        else:
+            do()
+
+    # A rollback needs an anchor: with recovery armed, make sure a "last
+    # good" checkpoint exists before the first step runs.
+    if recovery is not None and ckpt.latest_step() is None:
+        save_ckpt(start_step, blocking=True)
+
+    spike = (LossSpikeDetector(recovery.spike_window, recovery.spike_factor,
+                               recovery.spike_min_history)
+             if recovery is not None else None)
+    skipped = set(history.get("skipped_batches", []))
+    consecutive_rollbacks = 0
     ewma = None
     preempt_file = os.path.join(workdir, "PREEMPT")
 
-    for step in range(start_step, loop_cfg.steps):
+    step = start_step
+    while step < loop_cfg.steps:
         t0 = time.perf_counter()
-        batch = jax.tree.map(jnp.asarray, data.batch(step))
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if fault_plan is not None:
+            spec = fault_plan.pop("straggler", step)
+            if spec is not None:
+                # inside the timed window — the EWMA straggler alert must
+                # see the injected delay, exactly like a real slow step
+                time.sleep(spec.delay_s)
+            if fault_plan.pop("preempt", step) is not None:
+                open(preempt_file, "w").close()
+        d = data_index(step, skipped) if skipped else step
+        batch = jax.tree.map(jnp.asarray, data.batch(d))
+        if use_fault_arg:
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, fault_plan.grad_fault(d))
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         dt = time.perf_counter() - t0
+
+        # -- health sentinels + rollback (DESIGN.md §7) ---------------------
+        if recovery is not None:
+            reason = None
+            if int(metrics["nonfinite"]) > 0 or not np.isfinite(loss):
+                reason = (f"non-finite state "
+                          f"({int(metrics['nonfinite'])} leaves flagged, "
+                          f"loss={loss})")
+            elif spike.check(loss):
+                reason = (f"loss spike ({loss:.4f} > "
+                          f"{recovery.spike_factor}x trailing median)")
+            if reason is not None:
+                history["rollbacks"] += 1
+                consecutive_rollbacks += 1
+                if consecutive_rollbacks > recovery.max_rollbacks:
+                    raise UnrecoverableTrainingError(
+                        f"step {step}: {reason}; {consecutive_rollbacks} "
+                        f"consecutive rollbacks without progress — "
+                        f"escalating to abort")
+                skipped.add(d)
+                history["skipped_batches"] = sorted(skipped)
+                good_step, restored = retry_io(
+                    lambda: ckpt.restore_latest(state_like, shardings,
+                                                log=log),
+                    retries=recovery.io_retries,
+                    backoff_s=recovery.io_backoff_s, log=log)
+                params, opt_state = restored["params"], restored["opt"]
+                log(f"[loop] UNHEALTHY step {step}: {reason} — rolled back "
+                    f"to checkpoint step {good_step}, skipping batch {d} "
+                    f"(retry {consecutive_rollbacks}/{recovery.max_rollbacks})")
+                history["loss"] = history["loss"][:good_step]
+                history["step_time"] = history["step_time"][:good_step]
+                spike.reset()
+                ewma = None
+                step = good_step
+                continue
 
         prev_ewma = ewma                    # the threshold the alert uses
         alert, ewma = straggler_check(ewma, dt, loop_cfg.straggler_factor)
@@ -117,11 +240,26 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
 
         done = step + 1
         if os.path.exists(preempt_file):
-            ckpt.save(done, {"params": params, "opt": opt_state}, blocking=True)
-            log(f"[loop] preemption requested — checkpointed at step {done}, exiting")
+            save_ckpt(done, blocking=True)
+            # consume the signal: a restarted job must not see the stale
+            # file and re-checkpoint+exit after one step forever
+            try:
+                os.remove(preempt_file)
+            except OSError:
+                pass
+            log(f"[loop] preemption requested — checkpointed at step {done}, "
+                f"exiting")
             return params, history
         if done % loop_cfg.ckpt_every == 0 or done == loop_cfg.steps:
-            ckpt.save(done, {"params": params, "opt": opt_state},
-                      blocking=(done == loop_cfg.steps))
-    ckpt.wait()
+            save_ckpt(done, blocking=(done == loop_cfg.steps))
+            consecutive_rollbacks = 0       # a new good anchor exists
+        step += 1
+    if recovery is not None:
+        try:
+            ckpt.wait()
+        except OSError as e:
+            history["io_retries"] += 1
+            log(f"[loop] final async checkpoint failed after retries: {e}")
+    else:
+        ckpt.wait()
     return params, history

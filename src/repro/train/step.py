@@ -28,6 +28,15 @@ from repro.optim import OptConfig, adamw_update, init_opt_state
 class TrainConfig:
     microbatches: int = 1
     grad_compress_bits: Optional[int] = None    # e.g. 7 (bf16-equivalent)
+    # Resilience (DESIGN.md §7). ``health=True`` adds a bit-level
+    # non-finite scan over (loss, grad_norm, updated params) to the
+    # metrics — integer exponent-field compares only, so the full-PA
+    # multiplication audit still reports zero with guards enabled.
+    # ``fault_arg=True`` (fault injection only — armed by a FaultPlan,
+    # never in production) adds a scalar step argument that is added to
+    # every gradient leaf: 0.0 is the identity, NaN/Inf poisons the step.
+    health: bool = False
+    fault_arg: bool = False
 
 
 def _split_micro(batch, n):
@@ -42,7 +51,7 @@ def make_train_step(model: Model, opt_cfg: OptConfig,
                     train_cfg: TrainConfig = TrainConfig()):
     pa: PAConfig = model.cfg.pa
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, fault=None):
         if train_cfg.microbatches > 1:
             micro = _split_micro(batch, train_cfg.microbatches)
 
@@ -80,12 +89,29 @@ def make_train_step(model: Model, opt_cfg: OptConfig,
                 lambda g: mantissa_round(g.astype(jnp.float32),
                                          train_cfg.grad_compress_bits), grads)
 
+        if train_cfg.fault_arg:
+            # Fault injection (resilience chaos suite): add a host-supplied
+            # scalar to every gradient leaf — 0.0 normally, NaN/Inf when the
+            # plan fires — so the poison flows through the real update path.
+            grads = jax.tree.map(
+                lambda g: g + jnp.asarray(fault).astype(g.dtype), grads)
+
         params, opt_state, metrics = adamw_update(params, grads, opt_state,
                                                   opt_cfg, pa=pa)
         metrics["loss"] = loss
+        if train_cfg.health:
+            # Bit-level non-finite sentinel (resilience/detectors.py):
+            # integer exponent-field compares only — enabling guards keeps
+            # the full-PA step's multiplication audit at zero.
+            from repro.resilience.detectors import nonfinite_count
+            metrics["nonfinite"] = nonfinite_count(
+                (loss, metrics["grad_norm"], params))
         return params, opt_state, metrics
 
-    return train_step
+    if train_cfg.fault_arg:
+        return train_step
+    # production signature unchanged when no fault plan is armed
+    return lambda params, opt_state, batch: train_step(params, opt_state, batch)
 
 
 def make_eval_step(model: Model):

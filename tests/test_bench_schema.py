@@ -214,12 +214,14 @@ def test_serve_requires_fingerprint_parity_gate_and_audit():
     assert any("gates_passed" in e for e in errs)
     assert any("throughput_speedup_vs_seed" in e for e in errs)
     assert any("slot_occupancy" in e for e in errs)
+    assert any("'recovery'" in e for e in errs)
     assert any("multiplication_audit" in e for e in errs)
     base.update({
         "serve_fingerprint": "abc",
         "gates_passed": ["throughput_vs_seed"],
         "throughput_speedup_vs_seed": {"tokens_per_s": 2.0},
         "slot_occupancy": {"mean": 0.8},
+        "recovery": {"evicted_nonfinite": 1.0, "recovered_slots": 1.0},
         "multiplication_audit": {"tensor_total": 1},
     })
     errs = validate_report(base, "BENCH_serve.json")

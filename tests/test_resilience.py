@@ -1,0 +1,436 @@
+"""Resilience subsystem tests (DESIGN.md §7).
+
+Fast tier: bit-level health detectors (plus the proof that enabling them
+keeps the full-PA train and decode+sample steps multiplication-free),
+recovery primitives (retry/backoff, skip-set data indexing), fault-plan
+semantics, checkpoint integrity fallback, serving degradation (bounded
+queue, duplicate ids, deadlines), and the self-healing train loop
+(rollback + batch skip + IO retry, bounded escalation).
+
+Slow tier (`make test-faults`): seeded end-to-end chaos runs driving every
+fault kind in the ``resilience.faults.FAULT_KINDS`` registry through the
+real train loop and serving engine.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.data import DataConfig, SyntheticLM
+from repro.train import LoopConfig, TrainConfig, train, make_train_step
+from repro.serve import ContinuousEngine, QueueFullError, Request, ServeConfig
+from repro.checkpoint import Checkpointer
+from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.resilience import (FAULT_KINDS, FaultPlan, FaultSpec,
+                              LossSpikeDetector, RecoveryPolicy,
+                              UnrecoverableTrainingError, data_index,
+                              flip_checkpoint_bit, nonfinite_count,
+                              nonfinite_rows, retry_io, saturated_rows)
+
+TINY = ModelConfig(name="tiny", family="decoder", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+                   vocab_size=64, max_seq_len=64, param_dtype="float32",
+                   compute_dtype="float32", remat="none")
+PA_FULL = PAConfig(mode="full", deriv="approx", loss_deriv="exact")
+OPT = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=30,
+                weight_decay=1e-4)
+DATA = DataConfig(vocab_size=64, seq_len=32, global_batch=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def native_lm():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _reqs(n, mnt=6, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    return [Request(rid=i, prompt=rng.integers(0, 64, (8,)).astype(np.int32),
+                    max_new_tokens=mnt) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Detectors: bit-level scans + the zero-multiply proof.
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_count_bit_scan():
+    tree = {"a": jnp.array([1.0, np.nan, np.inf, -np.inf]),
+            "b": jnp.arange(4),                 # integer leaf: ignored
+            "c": jnp.float32(np.nan),
+            "d": jnp.array([0.0, 3e38])}        # huge but finite: clean
+    assert int(nonfinite_count(tree)) == 4
+
+
+def test_row_guards_bit_level():
+    x = jnp.array([[1.0, 2.0], [np.inf, 0.0], [0.0, np.nan], [3e38, 1.0]])
+    np.testing.assert_array_equal(np.asarray(nonfinite_rows(x)),
+                                  [False, True, True, False])
+    # saturated_rows additionally trips on |x| >= 2^127 — the PA-mangled
+    # garbage a plain isnan misses
+    np.testing.assert_array_equal(np.asarray(saturated_rows(x)),
+                                  [False, True, True, True])
+
+
+def test_detectors_audit_zero_standalone():
+    tree = {"w": jnp.zeros((8, 8)), "b": jnp.zeros((8,))}
+    s = jaxpr_mul_stats(jax.make_jaxpr(nonfinite_count)(tree))
+    assert s["tensor_total"] == 0, s["tensor_sites"]
+    s = jaxpr_mul_stats(jax.make_jaxpr(nonfinite_rows)(jnp.zeros((4, 16))))
+    assert s["tensor_total"] == 0, s["tensor_sites"]
+
+
+def test_loss_spike_detector():
+    det = LossSpikeDetector(window=4, factor=8.0, min_history=2)
+    assert not det.check(1.0)          # building the baseline window
+    assert not det.check(1.2)
+    assert det.check(100.0)            # > 8x trailing median
+    assert not det.check(1.1)          # the spike was NOT folded in
+    assert det.check(float("nan"))     # non-finite always trips
+    assert det.check(float("inf"))
+    det.reset()
+    assert not det.check(100.0)        # fresh window: new baseline
+
+
+def test_health_sentinel_flags_poisoned_update(native_lm):
+    model, params = native_lm
+    st = init_opt_state(params, OPT)
+    batch = jax.tree.map(jnp.asarray, SyntheticLM(DATA).batch(0))
+    step = jax.jit(make_train_step(model, OPT,
+                                   TrainConfig(health=True, fault_arg=True)))
+    _, _, m = step(params, st, batch, np.float32(0.0))
+    assert int(m["nonfinite"]) == 0
+    _, _, m = step(params, st, batch, np.float32(np.nan))
+    assert int(m["nonfinite"]) > 0     # NaN grads poison the updated params
+
+
+def test_full_pa_train_step_audit_zero_with_health():
+    model = build_model(TINY.replace(pa=PA_FULL))
+    params = model.init(jax.random.PRNGKey(0))
+    st = init_opt_state(params, OPT)
+    batch = jax.tree.map(jnp.asarray, SyntheticLM(DATA).batch(0))
+    for health in (False, True):       # enabling the sentinel adds nothing
+        step = make_train_step(model, OPT, TrainConfig(health=health))
+        s = jaxpr_mul_stats(jax.make_jaxpr(step)(params, st, batch))
+        assert s["tensor_total"] == 0, (health, s["tensor_sites"])
+
+
+def test_full_pa_decode_step_audit_zero_with_guard():
+    model = build_model(TINY.replace(pa=PA_FULL))
+    params = model.init(jax.random.PRNGKey(0))
+    for temp in (0.0, 1.0):
+        eng = ContinuousEngine(model, params,
+                               ServeConfig(max_len=32, n_slots=2,
+                                           temperature=temp))
+        s = eng.decode_step_mul_stats()
+        assert s["tensor_total"] == 0, (temp, s["tensor_sites"])
+
+
+# ---------------------------------------------------------------------------
+# Recovery primitives.
+# ---------------------------------------------------------------------------
+
+def test_retry_io_backoff_sequence():
+    sleeps, calls = [], {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    assert retry_io(flaky, retries=3, backoff_s=0.05,
+                    sleep=sleeps.append) == "ok"
+    assert calls["n"] == 3
+    assert sleeps == [0.05, 0.1]       # exponential: backoff_s * 2**attempt
+
+
+def test_retry_io_exhaustion_reraises():
+    sleeps = []
+
+    def broken():
+        raise IOError("persistent")
+
+    with pytest.raises(IOError):
+        retry_io(broken, retries=2, backoff_s=0.01, sleep=sleeps.append)
+    assert sleeps == [0.01, 0.02]
+
+
+def test_data_index_skip_mapping():
+    assert [data_index(s, set()) for s in range(4)] == [0, 1, 2, 3]
+    assert [data_index(s, {3}) for s in range(6)] == [0, 1, 2, 4, 5, 6]
+    assert [data_index(s, {3, 4}) for s in range(6)] == [0, 1, 2, 5, 6, 7]
+    assert data_index(0, {0}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Fault plan semantics.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_pop_once_and_log():
+    plan = FaultPlan([FaultSpec("nan_grad", at=3),
+                      FaultSpec("straggler", at=3, once=False)])
+    assert plan.armed("nan_grad") and not plan.armed("preempt")
+    assert plan.pop("nan_grad", 2) is None
+    assert np.isnan(plan.grad_fault(3))
+    assert plan.grad_fault(3) == np.float32(0.0)    # once: disarmed
+    assert plan.pop("straggler", 3) is not None
+    assert plan.pop("straggler", 3) is not None     # once=False refires
+    assert plan.log[0] == ("nan_grad", 3)
+
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("cosmic_ray", at=0)
+
+
+def test_grad_fault_inf_mode():
+    plan = FaultPlan([FaultSpec("nan_grad", at=1, mode="inf")])
+    assert np.isposinf(plan.grad_fault(1))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity: corruption fallback, hard errors, injected IO.
+# ---------------------------------------------------------------------------
+
+def _tree(v=0.0):
+    return {"w": np.full((8,), v, np.float32),
+            "b": np.arange(4).astype(np.float32)}
+
+
+def test_restore_latest_falls_back_past_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=True)
+    ck.save(2, _tree(2.0), blocking=True)
+    flip_checkpoint_bit(str(tmp_path), 2, seed=3)
+    msgs = []
+    step, out = ck.restore_latest(_tree(), log=msgs.append)
+    assert step == 1                   # newest failed crc32; next-older wins
+    np.testing.assert_array_equal(out["w"], _tree(1.0)["w"])
+    assert any("falling back" in m for m in msgs)
+
+
+def test_restore_latest_raises_when_all_corrupt(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=True)
+    flip_checkpoint_bit(str(tmp_path), 1, seed=3)
+    with pytest.raises(IOError, match="no restorable checkpoint"):
+        ck.restore_latest(_tree())
+
+
+def test_restore_tree_mismatch_is_value_error(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=True)
+    bigger = dict(_tree(), extra=np.zeros((2,), np.float32))
+    with pytest.raises(ValueError, match="tree structure changed"):
+        ck.restore(1, bigger)
+
+
+def test_bit_flip_is_seed_deterministic(tmp_path):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    for d in (a, b):
+        Checkpointer(d).save(4, _tree(3.0), blocking=True)
+    assert flip_checkpoint_bit(a, 4, seed=9) == flip_checkpoint_bit(b, 4,
+                                                                    seed=9)
+
+
+def test_injected_ckpt_io_error_then_retry(tmp_path):
+    plan = FaultPlan([FaultSpec("ckpt_io_error", at=5)])
+    ck = Checkpointer(str(tmp_path), io_fault=plan.io_fault)
+    attempts = []
+
+    def save():
+        attempts.append(1)
+        ck.save(5, _tree(), blocking=True)
+
+    retry_io(save, sleep=lambda s: None)
+    assert len(attempts) == 2          # transient: failed once, then landed
+    assert ck.latest_step() == 5
+    step, out = ck.restore_latest(_tree())
+    assert step == 5
+
+
+# ---------------------------------------------------------------------------
+# Serving degradation (fast paths: no decode needed for queue semantics).
+# ---------------------------------------------------------------------------
+
+def test_duplicate_request_id_rejected(native_lm):
+    model, params = native_lm
+    eng = ContinuousEngine(model, params, ServeConfig(max_len=64, n_slots=2))
+    eng.submit(_reqs(1)[0])
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(_reqs(1)[0])
+
+
+def test_duplicate_rid_rejected_after_completion(native_lm):
+    model, params = native_lm
+    eng = ContinuousEngine(model, params, ServeConfig(max_len=64, n_slots=2))
+    eng.run(_reqs(1, mnt=2))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(_reqs(1)[0])
+
+
+def test_bounded_queue_backpressure(native_lm):
+    model, params = native_lm
+    eng = ContinuousEngine(model, params,
+                           ServeConfig(max_len=64, n_slots=1, max_queue=1))
+    r0, r1 = _reqs(2, mnt=2)
+    eng.submit(r0)
+    with pytest.raises(QueueFullError):
+        eng.submit(r1)
+    assert eng.counters["rejected_queue_full"] == 1
+    while not eng.scheduler.idle:      # the accepted request still serves
+        eng.step()
+    assert eng.scheduler.status[0] == "ok"
+    assert len(eng.scheduler.finished[0]) == 2
+
+
+def test_deadline_degradation_statuses(native_lm):
+    model, params = native_lm
+    eng = ContinuousEngine(model, params, ServeConfig(max_len=64, n_slots=1))
+    ra, rb = _reqs(2, mnt=8)
+    rb.deadline = 2                    # expires before the single slot frees
+    out = eng.run([ra, rb])
+    assert eng.scheduler.status[0] == "ok" and len(out[0]) == 8
+    assert eng.scheduler.status[1] == "deadline_expired_in_queue"
+    assert out[1].size == 0
+    assert eng.counters["expired_in_queue"] == 1
+
+    eng.reset()                        # mid-decode eviction, same engine
+    (rc,) = _reqs(1, mnt=20)
+    rc.rid, rc.deadline = 7, 3
+    out = eng.run([rc])
+    assert eng.scheduler.status[7] == "evicted_deadline"
+    assert 0 < len(out[7]) < 20        # partial output, explicit status
+    assert eng.counters["evicted_deadline"] == 1
+    snap = eng.health_snapshot()
+    assert snap["evicted_deadline"] == 1.0
+    assert "recovery_evicted_deadline" in eng.latency_summary()
+
+
+# ---------------------------------------------------------------------------
+# Self-healing train loop (fast: one run each).
+# ---------------------------------------------------------------------------
+
+def test_rollback_skip_and_io_retry(tmp_path):
+    plan = FaultPlan([FaultSpec("nan_grad", at=7),
+                      FaultSpec("ckpt_io_error", at=5)])
+    model = build_model(TINY)
+    params, h = train(model, OPT, DATA, str(tmp_path),
+                      LoopConfig(steps=15, ckpt_every=5, log_every=100),
+                      log=lambda *_: None, fault_plan=plan,
+                      recovery=RecoveryPolicy())
+    assert len(h["loss"]) == 15
+    assert np.isfinite(h["loss"]).all()
+    assert h["rollbacks"] == 1
+    assert h["skipped_batches"] == [7]
+    assert h["io_retries"] >= 1
+    for leaf in jax.tree.leaves(params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_persistent_fault_escalates_to_abort(tmp_path):
+    # consecutive poisoned batches with no intervening good checkpoint:
+    # bounded recovery must abort, not spin (ckpt_every > steps so only the
+    # step-0 anchor exists — no save ever resets the consecutive counter)
+    plan = FaultPlan([FaultSpec("nan_grad", at=7),
+                      FaultSpec("nan_grad", at=8)])
+    model = build_model(TINY)
+    with pytest.raises(UnrecoverableTrainingError):
+        train(model, OPT, DATA, str(tmp_path),
+              LoopConfig(steps=15, ckpt_every=50, log_every=100),
+              log=lambda *_: None, fault_plan=plan,
+              recovery=RecoveryPolicy(max_rollbacks=1))
+
+
+# ---------------------------------------------------------------------------
+# Chaos suite (slow; `make test-faults`): every fault kind end to end.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_train_five_fault_kinds(tmp_path):
+    """nan_grad + ckpt_io_error + straggler + preempt in one seeded run,
+    then ckpt_bit_flip against the on-disk state between restarts."""
+    plan = FaultPlan([
+        FaultSpec("nan_grad", at=7),
+        FaultSpec("ckpt_io_error", at=10),
+        FaultSpec("straggler", at=18, delay_s=4.0),
+        FaultSpec("preempt", at=25),
+        FaultSpec("ckpt_bit_flip", at=30),
+    ], seed=42)
+    model = build_model(TINY)
+    opt = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=40,
+                    weight_decay=1e-4)
+
+    def run(steps):
+        return train(model, opt, DATA, str(tmp_path),
+                     LoopConfig(steps=steps, ckpt_every=5, log_every=100),
+                     log=lambda *_: None, fault_plan=plan,
+                     recovery=RecoveryPolicy())
+
+    _, h1 = run(30)
+    # preempt fired at step 25: checkpointed at 26, consumed the file, exited
+    assert len(h1["loss"]) == 26
+    assert not os.path.exists(os.path.join(str(tmp_path), "PREEMPT"))
+
+    _, h2 = run(30)                    # restart appends, bit-identical prefix
+    assert len(h2["loss"]) == 30
+    assert h2["loss"][:26] == h1["loss"]
+
+    # silent on-disk corruption of the newest checkpoint
+    flips = plan.apply_bit_flips(os.path.join(str(tmp_path), "ckpts"))
+    assert flips and flips[0][0] == 30
+    _, h3 = run(35)                    # restore falls back past the flip
+    assert len(h3["loss"]) == 35
+    assert np.isfinite(h3["loss"]).all()
+    assert h3["skipped_batches"] == [7]
+    assert h3["rollbacks"] >= 1
+    assert h3["io_retries"] >= 1
+    assert h3["straggler_alerts"] >= 1
+    assert {k for k, _ in plan.log} == {"nan_grad", "ckpt_io_error",
+                                        "straggler", "preempt",
+                                        "ckpt_bit_flip"}
+
+
+@pytest.mark.slow
+def test_chaos_serve_poison_quarantine_parity(native_lm):
+    """poison_slot (the sixth registry kind): the poisoned request is
+    evicted with an explicit status and a bit-exact delivered prefix;
+    batch-mates keep full token parity; the freed slot recovers."""
+    model, params = native_lm
+    cfg = ServeConfig(max_len=64, n_slots=2)
+
+    def drive(engine):
+        reqs = _reqs(3, mnt=6)
+        engine.submit(reqs[0])
+        engine.submit(reqs[1])
+        engine.step()                  # admits 0 and 1; 2 queues behind
+        engine.submit(reqs[2])
+        while not engine.scheduler.idle:
+            engine.step()
+        return {r: np.asarray(t)
+                for r, t in engine.scheduler.finished.items()}
+
+    clean = drive(ContinuousEngine(model, params, cfg))
+    plan = FaultPlan([FaultSpec("poison_slot", at=2, rid=0)])
+    eng = ContinuousEngine(model, params, cfg, fault_plan=plan)
+    out = drive(eng)
+
+    sch = eng.scheduler
+    assert sch.status[0] == "evicted_nonfinite"
+    n = len(out[0])
+    assert 0 < n < 6                   # partial output, garbage never emitted
+    np.testing.assert_array_equal(out[0], clean[0][:n])
+    for rid in (1, 2):
+        assert sch.status[rid] == "ok"
+        np.testing.assert_array_equal(out[rid], clean[rid])
+    assert eng.counters["evicted_nonfinite"] == 1
+    assert eng.counters["recovered_slots"] == 1   # freed slot served rid 2
+    assert eng.health_snapshot()["tainted_slots"] == 0.0
+    assert ("poison_slot", 2) in plan.log
+    assert len(FAULT_KINDS) == 6       # registry covered across the suite

@@ -46,17 +46,23 @@ def test_training_converges(tmp_path, pa):
 def test_resume_continues_from_checkpoint(tmp_path):
     _, h1 = _run(tmp_path, TINY, steps=20)
     _, h2 = _run(tmp_path, TINY, steps=30)
-    assert len(h2["loss"]) == 10     # resumed at 20, ran 10 more
+    # history is persisted with checkpoints: the resumed run APPENDS its 10
+    # new steps to the 20 restored ones instead of starting a fresh dict
+    assert len(h2["loss"]) == 30
+    assert h2["loss"][:20] == h1["loss"]
 
 
 def test_preemption_checkpoint_and_restart(tmp_path):
+    preempt = os.path.join(str(tmp_path), "PREEMPT")
     _run(tmp_path, TINY, steps=10)
-    open(os.path.join(str(tmp_path), "PREEMPT"), "w").close()
+    open(preempt, "w").close()
     _, h = _run(tmp_path, TINY, steps=30)
-    assert len(h["loss"]) == 1       # checkpointed + exited after one step
-    os.remove(os.path.join(str(tmp_path), "PREEMPT"))
+    assert len(h["loss"]) == 11      # checkpointed + exited after one step
+    # the loop CONSUMES the preemption file — a restart in the same workdir
+    # must continue training, not re-checkpoint and exit after one step
+    assert not os.path.exists(preempt)
     _, h3 = _run(tmp_path, TINY, steps=30)
-    assert len(h3["loss"]) == 19     # resumed at 11
+    assert len(h3["loss"]) == 30     # resumed at 11, ran to completion
 
 
 def test_microbatch_equivalence(rng, tmp_path):
