@@ -2,14 +2,16 @@
 # `python -m benchmarks.*` invocations don't need it spelled out.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-faults bench bench-fast bench-all check-bench
+.PHONY: test test-all test-faults replay-verify bench bench-fast bench-all check-bench
 
 # Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
 # The bench-schema check runs first — a malformed BENCH_*.json trajectory
 # point fails the tier before any test time is spent. The chaos suite
 # (slow-marked, but minutes not hours) rides in the default gate too:
-# resilience regressions should not wait for `test-all`.
-test: check-bench test-faults
+# resilience regressions should not wait for `test-all` — and so does the
+# replay-verify gate (a seeded chaos run with the flight recorder armed,
+# replayed from checkpoint anchors and verified bit-exactly).
+test: check-bench test-faults replay-verify
 	$(PY) -m pytest -x -q
 
 # Seeded end-to-end fault-injection runs (tests/test_resilience.py):
@@ -17,6 +19,12 @@ test: check-bench test-faults
 # engine (DESIGN.md §7).
 test-faults:
 	$(PY) -m pytest -q -m slow tests/test_resilience.py
+
+# Flight-recorder determinism gate (DESIGN.md §8): record a seeded chaos
+# run (rollbacks, preemption restart, corrupted checkpoint), then replay
+# it from checkpoint anchors and verify the digest journal bit-for-bit.
+replay-verify:
+	$(PY) -m pytest -q -m slow tests/test_replay.py
 
 # Everything, including interpret-mode kernel tests marked `slow`.
 test-all: check-bench

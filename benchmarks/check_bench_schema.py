@@ -31,7 +31,10 @@ token-parity gate, the ``throughput_speedup_vs_seed`` ratios, a
 ``slot_occupancy`` section, a numeric ``recovery`` counter section (the
 poisoned-slot quarantine gate's health snapshot, DESIGN.md §7), and a
 clean decode-step ``multiplication_audit`` (tensor_total == 0 in full-PA
-mode).
+mode). It is schema_version 2: it additionally carries a ``determinism``
+section — the flight-recorder gate (DESIGN.md §8) runs the trace twice on
+a recording engine and both runs must produce identical per-request
+digests (``identical: true``, with the folded digest published).
 
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
 or import ``validate_report`` / ``validate_file`` from tests.
@@ -52,8 +55,9 @@ _REQUIRED_TOP = ("benchmark", "schema_version", "generated_utc", "backend",
 _REQUIRED_TIMING = ("rounds", "stat", "unit")
 
 # Per-benchmark expected schema version (default 1). Bumped for
-# pam_attention when the two-sweep backward fields landed.
-_EXPECTED_VERSION = {"pam_attention": 2}
+# pam_attention when the two-sweep backward fields landed, and for serve
+# when the flight-recorder determinism section landed (DESIGN.md §8).
+_EXPECTED_VERSION = {"pam_attention": 2, "serve": 2}
 
 
 def source_fingerprint(rel_dir: str, root: str = _ROOT) -> str:
@@ -144,7 +148,7 @@ def validate_report(report, name: str) -> list:
         errs.append(f"{name}: 'slowdown_vs_native' must be a non-empty "
                     f"numeric object")
 
-    if expect_ver >= 2:
+    if expect_ver >= 2 and _expected_name(report, name) == "pam_attention":
         errs.extend(_validate_v2_attention(report, name))
     if report.get("benchmark") == "pam_optim":
         errs.extend(_validate_pam_optim(report, name))
@@ -247,6 +251,21 @@ def _validate_serve(report, name: str) -> list:
         errs.append(f"{name}: multiplication_audit.tensor_total must be 0 — "
                     f"the full-PA decode+sample step may not emit "
                     f"tensor-shaped multiplies")
+    det = report.get("determinism")
+    if not isinstance(det, dict):
+        errs.append(f"{name}: serve v2 requires a 'determinism' section "
+                    f"(flight-recorder request digests, DESIGN.md §8)")
+    else:
+        if det.get("identical") is not True:
+            errs.append(f"{name}: determinism.identical must be true — two "
+                        f"runs of the same trace produced different "
+                        f"per-request digests")
+        for k in ("runs", "requests"):
+            if not _is_num(det.get(k)):
+                errs.append(f"{name}: determinism.{k} must be numeric")
+        if not isinstance(det.get("digest_fold"), str):
+            errs.append(f"{name}: determinism.digest_fold must be a hex "
+                        f"string")
     return errs
 
 

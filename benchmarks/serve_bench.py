@@ -24,7 +24,13 @@ Correctness gates the file's existence (exit nonzero, no JSON on failure):
     (``resilience.FaultPlan``), the poisoned request is evicted with an
     explicit status while every healthy request keeps bit-exact parity
     with the clean trace; the gate's ``health_snapshot`` counters are
-    published as the report's ``recovery`` section (DESIGN.md §7).
+    published as the report's ``recovery`` section (DESIGN.md §7);
+  * determinism: the trace runs TWICE through a flight-recording engine
+    (``ServeConfig.record`` — per-request digests over emitted token ids +
+    per-slot logits bits, DESIGN.md §8); both runs must produce identical
+    per-request digests AND token parity with the non-recording engine
+    (recording must be observationally transparent). Published as the
+    report's ``determinism`` section (schema_version 2).
 
 ``--smoke`` runs the same gates on a smaller trace and writes the JSON to
 a throwaway path — the `make bench-fast` entry for the test tier.
@@ -189,11 +195,47 @@ def main(argv=None) -> None:
                         f"quarantine")
         state["recovery"] = chaos.health_snapshot()
 
+    def determinism():
+        # Flight-recorder determinism gate (DESIGN.md §8): run the SAME
+        # trace twice on a recording engine; every request's digest (token
+        # ids + per-slot logits bits folded per emitted token) must match
+        # bit-for-bit across runs, and the recorded token streams must
+        # bit-match the non-recording engine's (recording is transparent).
+        from repro.resilience import combine_digests
+        det = ContinuousEngine(model, params,
+                               ServeConfig(max_len=max_len, n_slots=n_slots,
+                                           record=True))
+        out1 = det.run(list(trace))
+        d1 = det.latency_summary()["request_digests"]
+        det.reset()
+        out2 = det.run(list(trace))
+        d2 = det.latency_summary()["request_digests"]
+        want = {str(r.rid) for r in trace}
+        assert set(d1) == want and set(d2) == want, (
+            f"digest coverage: {sorted(d1)} vs requests {sorted(want)}")
+        assert d1 == d2, (
+            f"re-running the identical trace changed request digests: "
+            f"{ {k: (d1[k], d2[k]) for k in d1 if d1[k] != d2[k]} }")
+        clean = state["clean"]
+        for rid in clean:
+            np.testing.assert_array_equal(
+                np.asarray(out1[rid]), np.asarray(clean[rid]),
+                err_msg=f"recording engine lost token parity on {rid}")
+            np.testing.assert_array_equal(
+                np.asarray(out2[rid]), np.asarray(clean[rid]),
+                err_msg=f"recording engine run 2 lost token parity on {rid}")
+        fold = combine_digests([int(d1[k], 16) for k in sorted(d1)])
+        state["determinism"] = {
+            "runs": 2, "requests": len(trace), "identical": True,
+            "digest_fold": f"0x{fold:08x}",
+        }
+
     gates.run("token_parity_continuous_vs_oneshot", parity)
     gates.run("token_parity_full_pa", pa_parity)
     gates.run("decode_step_zero_tensor_mul_full_pa", audit)
     gates.run("decode_step_zero_tensor_mul_full_pa_sampled", audit_sampled)
     gates.run("quarantine_parity_under_poison", quarantine)
+    gates.run("determinism_request_digests", determinism)
 
     # -- timed rounds (both engines warm; interleaved; min) ------------------
     cont_s, seed_s = [], []
@@ -226,7 +268,7 @@ def main(argv=None) -> None:
 
     report = {
         "benchmark": "serve",
-        "schema_version": 1,
+        "schema_version": 2,
         "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "backend": jax.default_backend(),
         "pallas_mode": "n/a (unfused per-slot decode path)",
@@ -263,6 +305,9 @@ def main(argv=None) -> None:
         # degradation/recovery counters from the quarantine gate's chaos
         # run (DESIGN.md §7): one poisoned slot, evicted and recovered
         "recovery": {k: round(v, 3) for k, v in state["recovery"].items()},
+        # flight-recorder determinism gate (DESIGN.md §8): two runs of the
+        # trace on a recording engine produced identical per-request digests
+        "determinism": state["determinism"],
         "slowdown_vs_native": {
             "full_pa_decode": round(state["pa_dt"] / nat_dt, 1),
         },

@@ -46,6 +46,12 @@ class Checkpointer:
         self._io_fault = io_fault
         self._thread: Optional[threading.Thread] = None
         self._exc: Optional[BaseException] = None
+        # Set by restore_latest: checkpoint steps that were walked past
+        # because they failed integrity, and their failure reasons. Callers
+        # (train loop history, replay anchoring) surface these — a silent
+        # fallback would hide that on-disk corruption happened.
+        self.last_restore_skipped: list = []
+        self.last_restore_failures: list = []
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -183,20 +189,32 @@ class Checkpointer:
         checkpoints sit on disk: walk newest -> oldest, skipping candidates
         that fail crc32/manifest/structure validation. Raises the LAST
         failure if checkpoints exist but none restores — silently starting
-        from scratch over unreadable state would be worse."""
+        from scratch over unreadable state would be worse.
+
+        The steps that were skipped (and why) are surfaced on
+        ``self.last_restore_skipped`` / ``self.last_restore_failures`` so
+        the caller can record that integrity failures happened and anchor
+        any replay to the step that was ACTUALLY restored."""
+        self.last_restore_skipped = []
+        self.last_restore_failures = []
         steps = self.all_steps()
         if not steps:
             return None, None
         failures = []
         for step in reversed(steps):
             try:
-                return step, self.restore(step, like, shardings)
+                out = self.restore(step, like, shardings)
+                self.last_restore_skipped = [s for s, _ in failures]
+                self.last_restore_failures = [(s, str(e)) for s, e in failures]
+                return step, out
             except (OSError, ValueError, KeyError,
                     json.JSONDecodeError) as e:
                 failures.append((step, e))
                 if log is not None:
                     log(f"[ckpt] step {step} failed integrity check ({e}); "
                         f"falling back to the next-older checkpoint")
+        self.last_restore_skipped = [s for s, _ in failures]
+        self.last_restore_failures = [(s, str(e)) for s, e in failures]
         raise IOError(
             "no restorable checkpoint: all candidates failed integrity — "
             + "; ".join(f"step {s}: {e}" for s, e in failures))

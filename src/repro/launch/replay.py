@@ -1,0 +1,100 @@
+"""Replay / forensics launcher (DESIGN.md §8).
+
+Verify that a recorded run's flight journal is bit-exactly reproducible:
+
+  PYTHONPATH=src python -m repro.launch.replay --arch smollm-135m --smoke \
+      --pa full --workdir /tmp/run --verify
+
+Localize the first divergence (step, leaf, kernel family, engine verdict):
+
+  PYTHONPATH=src python -m repro.launch.replay ... --workdir /tmp/run \
+      --bisect --report /tmp/run/forensics.json
+
+The model/data/optimizer flags must match the recorded run (same contract
+as resuming it); the step program itself (microbatches, health guards,
+fault arg, recorder) is rebuilt from the journal header, not from flags.
+
+Exit codes: 0 = verified bit-exact, 1 = divergence found, 2 = replay could
+not run (no journal, empty window, anchor unusable).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.optim import OptConfig
+
+from .train import add_pa_args, build_pa
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100,
+                    help="total_steps of the recorded run (LR schedule)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--workdir", default="/tmp/repro_train",
+                    help="the recorded run's workdir (journal + ckpts)")
+    ap.add_argument("--verify", action="store_true",
+                    help="replay the window and verify the journal")
+    ap.add_argument("--bisect", action="store_true",
+                    help="verify, then localize the first divergence")
+    ap.add_argument("--from", dest="from_step", type=int, default=None,
+                    help="window start a of [a, b) (default: journal start)")
+    ap.add_argument("--to", dest="to_step", type=int, default=None,
+                    help="window end b of [a, b) (default: journal end)")
+    ap.add_argument("--report", default=None,
+                    help="write the machine-readable JSON report here")
+    add_pa_args(ap)
+    args = ap.parse_args(argv)
+    if not (args.verify or args.bisect):
+        ap.error("pick a mode: --verify and/or --bisect")
+
+    pa = build_pa(args)
+    cfg = (get_smoke_config(args.arch, pa=pa) if args.smoke
+           else get_config(args.arch, pa=pa))
+    model = build_model(cfg)
+    opt = OptConfig(peak_lr=args.lr, warmup_steps=max(1, args.steps // 10),
+                    total_steps=args.steps)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.batch)
+    window = (args.from_step, args.to_step)
+    if window == (None, None):
+        window = None
+
+    if args.bisect:
+        from repro.resilience.forensics import bisect
+        out = bisect(model, opt, data, args.workdir, window=window)
+        ok = not out["diverged"]
+        replay_ran = out["replay"].get("error") is None or out["diverged"]
+    else:
+        from repro.resilience.replay import replay_train
+        report, _ = replay_train(model, opt, data, args.workdir,
+                                 window=window)
+        out = {"schema_version": 1, "kind": "replay_report",
+               "replay": report.to_dict()}
+        ok = report.ok
+        replay_ran = report.error is None or report.first_divergence is not None
+
+    text = json.dumps(out, indent=2, sort_keys=True)
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(text + "\n")
+        print(f"[replay] report written to {args.report}")
+    else:
+        print(text)
+    if ok:
+        return 0
+    return 1 if replay_ran else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,6 +48,10 @@ def main():
     ap.add_argument("--grad-compress-bits", type=int, default=None)
     ap.add_argument("--workdir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--record", action="store_true",
+                    help="arm the bit-exact flight recorder: per-step "
+                         "journal at <workdir>/journal.jsonl, verifiable "
+                         "with repro.launch.replay (DESIGN.md §8)")
     ap.add_argument("--mesh-shape", default=None, help="e.g. 2,16,16")
     ap.add_argument("--mesh-axes", default="pod,data,model")
     add_pa_args(ap)
@@ -68,12 +72,16 @@ def main():
                     total_steps=args.steps)
     data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                       global_batch=args.batch)
+    recorder = None
+    if args.record:
+        from repro.resilience import FlightRecorder, journal_path
+        recorder = FlightRecorder(journal_path(args.workdir))
     params, hist = train(
         model, opt, data, args.workdir,
         LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every),
         TrainConfig(microbatches=args.microbatches,
                     grad_compress_bits=args.grad_compress_bits),
-        mesh=mesh)
+        mesh=mesh, recorder=recorder)
     print(f"final loss {hist['loss'][-1]:.4f} "
           f"(first {hist['loss'][0]:.4f}); "
           f"median step {sorted(hist['step_time'])[len(hist['step_time'])//2]*1e3:.0f} ms")

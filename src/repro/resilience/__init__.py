@@ -4,6 +4,11 @@ from .detectors import (LossSpikeDetector, nonfinite_count, nonfinite_rows,
                         saturated_rows)
 from .recovery import (RecoveryPolicy, UnrecoverableTrainingError, data_index,
                        retry_io)
+from .recorder import (FlightRecorder, combine_digests, float_bits,
+                       fold_token, journal_path, request_digest_seed,
+                       rows_digest, tree_digest, tree_leaf_digests)
+from .replay import ReplayReport, leaf_family, replay_train
+from .forensics import FORENSICS_SCHEMA_VERSION, bisect
 
 __all__ = [
     "FAULT_KINDS", "FaultPlan", "FaultSpec", "flip_checkpoint_bit",
@@ -11,4 +16,9 @@ __all__ = [
     "LossSpikeDetector", "nonfinite_count", "nonfinite_rows",
     "saturated_rows",
     "RecoveryPolicy", "UnrecoverableTrainingError", "data_index", "retry_io",
+    "FlightRecorder", "combine_digests", "float_bits", "fold_token",
+    "journal_path", "request_digest_seed", "rows_digest", "tree_digest",
+    "tree_leaf_digests",
+    "ReplayReport", "leaf_family", "replay_train",
+    "FORENSICS_SCHEMA_VERSION", "bisect",
 ]

@@ -1,0 +1,191 @@
+"""Divergence forensics: localize the first diverging leaf and kernel.
+
+When ``replay.replay_train`` finds the first step whose regenerated flight
+record does not match the journal, this module answers "what broke":
+
+  * **anchor divergence** — the restored checkpoint itself disagrees with
+    the journal record it should equal: on-disk corruption/tampering of
+    checkpoint or journal, localized to the exact leaf/leaves by the
+    per-leaf digest diff (no compute ever ran, so no kernel is suspect).
+  * **step divergence** — the step re-executed from a VERIFIED anchor
+    produced different bits. The diverging step is re-executed under
+    cross-checks, each a one-step probe from the captured pre-state:
+      - ``rerun`` — same program again: if it disagrees with its own first
+        replay, the platform is nondeterministic (hardware/scheduling);
+      - ``engine:<impl>`` — the PA kernels swapped pallas <-> jnp
+        (bit-identical by the kernel parity contract): whichever engine
+        reproduces the journal isolates a kernel-engine bug;
+      - ``attn_fused:<on|off>`` — fused PAM flash attention toggled
+        against the unfused reference path.
+    The per-leaf digest diff names the leaves, ``replay.leaf_family``
+    attributes them to a kernel family (pam_optim / pam_attention /
+    pam_matmul / pam_eltwise), and the cross-check verdicts narrow the
+    family to an engine.
+
+``bisect`` emits one machine-readable report (``FORENSICS_SCHEMA_VERSION``)
+consumed by ``launch.replay --bisect`` (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+
+from .recorder import FlightRecorder, _hex
+from .replay import (DivergenceContext, ReplayReport, leaf_family,
+                     replay_train)
+
+FORENSICS_SCHEMA_VERSION = 1
+
+
+def _exec_step(model, opt_cfg, train_cfg, ctx: DivergenceContext):
+    """Re-execute the captured diverging step once under ``model``'s
+    kernels; returns (leaf_digests uint32[n], loss_bits, grad_norm_bits)."""
+    from repro.train.step import make_train_step
+    step_fn = jax.jit(make_train_step(model, opt_cfg, train_cfg))
+    args = (ctx.pre_state["params"], ctx.pre_state["opt"], ctx.batch)
+    if train_cfg.fault_arg:
+        args = args + (np.float32(0.0),)
+    _, _, metrics = step_fn(*args)
+    return (np.asarray(metrics["leaf_digests"]),
+            int(np.asarray(metrics["loss_bits"])),
+            int(np.asarray(metrics["grad_norm_bits"])))
+
+
+def _variant_models(model) -> List[Tuple[str, Any]]:
+    """Cross-check kernel variants of ``model``: alternate PA engine
+    (pallas <-> jnp) and the fused-attention toggle. Only variants that
+    actually change the traced program for this config are emitted."""
+    from repro.models import build_model
+    cfg, pa = model.cfg, model.cfg.pa
+    out: List[Tuple[str, Any]] = []
+    if pa.mode != "off" and pa.impl in ("pallas", "jnp"):
+        alt = "jnp" if pa.impl == "pallas" else "pallas"
+        out.append((f"engine:{alt}", build_model(
+            cfg.replace(pa=dataclasses.replace(pa, impl=alt)))))
+    if pa.mode == "full":
+        toggled = not cfg.attn_fused_pam
+        out.append((f"attn_fused:{'on' if toggled else 'off'}",
+                    build_model(cfg.replace(attn_fused_pam=toggled))))
+    return out
+
+
+def _check(name: str, digests: np.ndarray, loss_bits: int,
+           recorded: List[int], rec: dict,
+           first_replay: Optional[np.ndarray]) -> Dict[str, Any]:
+    digests = np.asarray(digests)
+    want = np.asarray(recorded, np.uint32)
+    matches_journal = (digests.shape[0] == want.shape[0]
+                      and bool(np.all(digests == want))
+                      and _hex(loss_bits) == rec["loss_bits"])
+    entry = {
+        "name": name,
+        "matches_journal": matches_journal,
+        "diverged_leaves": int(np.sum(digests != want))
+        if digests.shape[0] == want.shape[0] else -1,
+        "loss_bits": _hex(loss_bits),
+    }
+    if first_replay is not None:
+        entry["matches_first_replay"] = (
+            digests.shape[0] == first_replay.shape[0]
+            and bool(np.all(digests == np.asarray(first_replay))))
+    return entry
+
+
+def _verdict(checks: List[dict], families: List[str], site: str) -> str:
+    if site == "checkpoint_anchor":
+        return ("anchor checkpoint state disagrees with the journal record "
+                "it was saved from: on-disk corruption or tampering of the "
+                "checkpoint (or journal) — no compute ran, no kernel is "
+                "suspect")
+    if site == "journal":
+        return ("journal is internally inconsistent (missing/torn records "
+                "inside the replay range): suspect journal truncation or a "
+                "non-atomic writer")
+    rerun = next((c for c in checks if c["name"] == "rerun"), None)
+    if rerun is not None and not rerun.get("matches_first_replay", True):
+        return ("the SAME program produced different bits across two "
+                "executions from identical state: platform nondeterminism "
+                "(hardware/scheduling), not a kernel logic bug")
+    fam = ", ".join(families) or "unknown"
+    winners = [c["name"] for c in checks
+               if c["name"] != "rerun" and c["matches_journal"]]
+    if winners:
+        return (f"cross-check variant(s) {winners} reproduce the journal "
+                f"while the primary engine does not: the divergence is in "
+                f"the primary engine's {fam} kernel(s)")
+    return (f"no engine variant reproduces the recorded bits for this step "
+            f"(diverging families: {fam}): the journal line itself or the "
+            f"pre-step trajectory is suspect — tampered journal, or a "
+            f"divergence upstream that the anchor window did not cover")
+
+
+def bisect(model, opt_cfg, data_cfg, workdir: str,
+           window: Optional[Tuple[int, int]] = None,
+           log: Callable[[str], None] = print,
+           journal: Optional[FlightRecorder] = None) -> dict:
+    """Replay the window, and — at the first divergence — localize it:
+    exact step, exact leaf/leaves, kernel family, and an engine verdict
+    from one-step cross-checks. Returns the machine-readable forensics
+    report (``launch.replay --bisect`` serializes it verbatim)."""
+    report, ctx = replay_train(model, opt_cfg, data_cfg, workdir,
+                               window=window, log=log,
+                               capture_divergence=True, journal=journal)
+    out: Dict[str, Any] = {
+        "schema_version": FORENSICS_SCHEMA_VERSION,
+        "kind": "forensics_report",
+        "workdir": workdir,
+        "diverged": not report.ok,
+        "replay": report.to_dict(),
+    }
+    if report.ok:
+        out["verdict"] = (f"replay of [{report.window[0]}, "
+                          f"{report.window[1]}) is bit-exact against the "
+                          f"journal — nothing to bisect")
+        return out
+
+    leaves = [l if isinstance(l, dict) else l.to_dict()
+              for l in report.diverged_leaves]
+    families = [f for f, _ in Counter(
+        l["family"] for l in leaves).most_common()]
+    site = ("checkpoint_anchor" if report.divergence_kind == "anchor_state"
+            else "journal" if ctx is None else "train_step")
+    loc: Dict[str, Any] = {
+        "site": site,
+        "step": report.first_divergence,
+        "kind": report.divergence_kind,
+        "leaves": leaves,
+        "families": families,
+        "first_leaf": leaves[0]["path"] if leaves else None,
+        "kernel_family": families[0] if families else None,
+    }
+
+    checks: List[dict] = []
+    if ctx is not None:
+        recorded = FlightRecorder.record_leaves(ctx.record)
+        # 1) self-determinism: the exact same program, twice
+        d0, lb0, _ = _exec_step(model, opt_cfg, ctx.train_cfg, ctx)
+        d1, lb1, _ = _exec_step(model, opt_cfg, ctx.train_cfg, ctx)
+        checks.append(_check("rerun", d1, lb1, recorded, ctx.record, d0))
+        # 2) kernel variants: alternate engine, fused-attention toggle
+        for name, variant in _variant_models(model):
+            try:
+                dv, lbv, _ = _exec_step(variant, opt_cfg, ctx.train_cfg, ctx)
+            except Exception as e:  # noqa: BLE001 — a variant that cannot
+                # trace (e.g. pallas unavailable) is reported, not fatal
+                checks.append({"name": name, "error": str(e),
+                               "matches_journal": False})
+                continue
+            checks.append(_check(name, dv, lbv, recorded, ctx.record, d0))
+        log(f"[forensics] step {ctx.step}: "
+            + "; ".join(f"{c['name']}="
+                        f"{'journal' if c.get('matches_journal') else 'diverged'}"
+                        for c in checks))
+
+    out["localization"] = loc
+    out["cross_checks"] = checks
+    out["verdict"] = _verdict(checks, families, site)
+    return out

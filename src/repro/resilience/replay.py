@@ -1,0 +1,309 @@
+"""Deterministic replay: regenerate and verify the flight journal.
+
+Because the full-PA train step is integer arithmetic on bit patterns, the
+journal written by ``FlightRecorder`` is not a statistical trace — it is a
+bit-exact contract. ``replay_train`` re-executes any step window from the
+nearest good checkpoint anchor and re-derives every journal line:
+
+  1. **anchor** — walk checkpoints newest -> oldest among those ``<=`` the
+     window start; restore the newest one that passes integrity (skipped
+     corrupt candidates are surfaced in the report, mirroring
+     ``restore_latest``). A checkpoint at step ``k`` holds the state AFTER
+     step ``k-1``, so the restored tree's per-leaf digests are verified
+     against journal record ``k-1`` BEFORE any step is re-run — a rotted
+     checkpoint is distinguished from a diverging computation.
+  2. **program** — the journal header pins the recorded ``TrainConfig``
+     (health/fault_arg/microbatches change the traced graph, and even
+     ``g + 0.0`` is not a bit-level identity on ``-0.0``); replay rebuilds
+     exactly that program, jitted WITHOUT donation so the pre-step state
+     survives for forensic re-execution.
+  3. **data** — each record carries its ``data_index``: the deterministic
+     stream plus the recorded skip-set collapse to "replay the index the
+     journal says ran", which also replays runs with rollbacks, preemption
+     restarts, and skipped batches without re-arming any fault plan (the
+     journal is the healthy trajectory — truncated on rollback exactly
+     like ``history``).
+  4. **verify** — per step, compare loss bits, grad-norm bits, and every
+     per-leaf digest. The first mismatch localizes the divergence to an
+     exact step and parameter/optimizer leaf (and its kernel family);
+     ``forensics.bisect`` then re-executes that single step under
+     cross-checks.
+
+``launch.replay`` is the CLI (``--verify`` / ``--bisect``, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .recorder import (FlightRecorder, combine_digests, journal_path,
+                       tree_leaf_digests, _hex)
+
+# Leaf-path substrings -> the kernel family (DESIGN.md §4 kernel inventory)
+# whose output stream feeds that leaf. ``opt`` state is written only by the
+# fused PA-AdamW kernel; attention projections by the PAM attention path;
+# matmul-heavy leaves by the PAM matmul; norm scales/biases by elementwise
+# PA ops. Forensics reports the family so a divergence points at a kernel
+# to cross-check, not just a tensor.
+_FAMILY_RULES = (
+    (("attn", "wq", "wk", "wv", "wo", "q_norm", "k_norm"), "pam_attention"),
+    (("mlp", "embed", "head", "moe", "expert"), "pam_matmul"),
+    (("norm", "scale", "bias"), "pam_eltwise"),
+)
+
+
+def leaf_family(path: str) -> str:
+    """Kernel family attribution for a state-tree leaf path."""
+    p = path.lower()
+    if "'opt'" in p or p.startswith("opt") or "['opt']" in p:
+        return "pam_optim"
+    for keys, fam in _FAMILY_RULES:
+        if any(k in p for k in keys):
+            return fam
+    return "pam_matmul"
+
+
+@dataclasses.dataclass
+class DivergingLeaf:
+    index: int
+    path: str
+    recorded: str          # hex digest from the journal
+    replayed: str          # hex digest this replay produced
+    family: str            # kernel family attribution (leaf_family)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ReplayReport:
+    workdir: str
+    anchor_step: int
+    window: Tuple[int, int]               # [a, b) actually verified
+    steps_checked: int = 0
+    verified_steps: int = 0
+    anchor_ok: bool = True
+    first_divergence: Optional[int] = None
+    # anchor_state | digest | loss_bits | grad_norm_bits | missing_record
+    divergence_kind: Optional[str] = None
+    diverged_leaves: List[DivergingLeaf] = dataclasses.field(
+        default_factory=list)
+    restore_skipped: List[int] = dataclasses.field(default_factory=list)
+    torn_lines: int = 0
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return (self.error is None and self.anchor_ok
+                and self.first_divergence is None)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        d["window"] = list(self.window)
+        d["diverged_leaves"] = [dataclasses.asdict(l) if not isinstance(l, dict)
+                                else l for l in self.diverged_leaves]
+        return d
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True, **kw)
+
+
+@dataclasses.dataclass
+class DivergenceContext:
+    """Everything forensics needs to re-execute the diverging step."""
+    step: int
+    data_index: int
+    pre_state: Any                 # {"params", "opt"} BEFORE the step
+    batch: Any
+    record: dict                   # the journal line it failed against
+    train_cfg: Any                 # the recorded TrainConfig
+
+
+def _leaf_diff(paths: List[str], recorded: List[int],
+               replayed: np.ndarray) -> List[DivergingLeaf]:
+    out = []
+    for i, (want, got) in enumerate(zip(recorded, np.asarray(replayed))):
+        if int(want) != int(got):
+            path = paths[i] if i < len(paths) else f"leaf_{i}"
+            out.append(DivergingLeaf(index=i, path=path, recorded=_hex(want),
+                                     replayed=_hex(int(got)),
+                                     family=leaf_family(path)))
+    return out
+
+
+def recorded_train_cfg(journal: FlightRecorder):
+    """Rebuild the exact ``TrainConfig`` the journal was recorded under
+    (unknown future fields are dropped rather than fatal)."""
+    from repro.train.step import TrainConfig
+    cfg = journal.step_cfg()
+    known = {f.name for f in dataclasses.fields(TrainConfig)}
+    return TrainConfig(**{k: v for k, v in cfg.items() if k in known})
+
+
+def find_anchor(ckpt_dir: str, state_like: Any, upto: int,
+                log: Callable[[str], None] = print):
+    """Newest restorable checkpoint with step <= ``upto``; returns
+    ``(anchor_step, state, skipped_steps)`` — ``(0, None, skipped)`` means
+    "no usable checkpoint, anchor at the deterministic fresh init"."""
+    from repro.checkpoint import Checkpointer
+    skipped: List[int] = []
+    if not os.path.isdir(ckpt_dir):
+        return 0, None, skipped
+    ckpt = Checkpointer(ckpt_dir)
+    for s in reversed(ckpt.all_steps()):
+        if s > upto:
+            continue
+        try:
+            return s, ckpt.restore(s, state_like), skipped
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            skipped.append(s)
+            log(f"[replay] checkpoint step {s} failed integrity ({e}); "
+                f"anchoring further back")
+    return 0, None, skipped
+
+
+def replay_train(model, opt_cfg, data_cfg, workdir: str,
+                 window: Optional[Tuple[int, int]] = None,
+                 log: Callable[[str], None] = print,
+                 capture_divergence: bool = False,
+                 journal: Optional[FlightRecorder] = None,
+                 ) -> Tuple[ReplayReport, Optional[DivergenceContext]]:
+    """Re-execute steps ``[window[0], window[1])`` of the recorded run in
+    ``workdir`` and verify every regenerated journal line bit-for-bit.
+
+    Returns ``(report, ctx)``; ``ctx`` is the pre-step state/batch of the
+    first diverging step when ``capture_divergence`` is set (None when the
+    replay verifies clean or the divergence is in the anchor state itself).
+    """
+    from repro.data import SyntheticLM
+    from repro.optim import init_opt_state
+    from repro.train.step import make_train_step
+
+    if journal is None:
+        journal = FlightRecorder.load(journal_path(workdir))
+    steps = journal.steps()
+    report = ReplayReport(workdir=workdir, anchor_step=0, window=(0, 0),
+                          torn_lines=journal.torn_lines)
+    if not steps:
+        report.error = f"no records in {journal.path}"
+        return report, None
+
+    lo = steps[0] if window is None or window[0] is None else int(window[0])
+    hi = steps[-1] + 1 if window is None or window[1] is None else int(window[1])
+    lo, hi = max(lo, steps[0]), min(hi, steps[-1] + 1)
+    if lo >= hi:
+        report.error = (f"empty verify window [{lo}, {hi}) — journal covers "
+                        f"[{steps[0]}, {steps[-1] + 1})")
+        return report, None
+    report.window = (lo, hi)
+
+    # fresh deterministic init — also the structure template for restore
+    params = model.init(jax.random.PRNGKey(data_cfg.seed))
+    opt_state = init_opt_state(params, opt_cfg)
+    state = {"params": params, "opt": opt_state}
+    # binds leaf paths and validates n_leaves/paths_digest vs the header
+    journal.attach(state)
+
+    anchor, restored, skipped = find_anchor(
+        os.path.join(workdir, "ckpts"), state, lo, log=log)
+    report.anchor_step = anchor
+    report.restore_skipped = skipped
+    if restored is not None:
+        state = restored
+
+    train_cfg = recorded_train_cfg(journal)
+    train_cfg = dataclasses.replace(train_cfg, record=True)
+    # jit WITHOUT donation: forensics needs the pre-step state to survive
+    step_fn = jax.jit(make_train_step(model, opt_cfg, train_cfg))
+
+    digest_fn = jax.jit(tree_leaf_digests)
+    paths = journal.paths
+
+    # -- anchor verification: ckpt step k == post-step-(k-1) state ----------
+    if anchor > 0:
+        rec = journal.records.get(anchor - 1)
+        if rec is None:
+            log(f"[replay] no journal record for step {anchor - 1}; anchor "
+                f"state accepted unverified")
+        else:
+            got = np.asarray(digest_fn(state))
+            want = FlightRecorder.record_leaves(rec)
+            if len(want) != got.shape[0]:
+                report.anchor_ok = False
+                report.divergence_kind = "anchor_state"
+                report.error = (f"anchor leaf count mismatch: journal has "
+                                f"{len(want)}, state has {got.shape[0]}")
+                return report, None
+            diff = _leaf_diff(paths, want, got)
+            if diff:
+                report.anchor_ok = False
+                report.first_divergence = anchor - 1
+                report.divergence_kind = "anchor_state"
+                report.diverged_leaves = diff
+                log(f"[replay] ANCHOR DIVERGES: checkpoint step {anchor} "
+                    f"does not match journal record {anchor - 1} on "
+                    f"{len(diff)} leaf/leaves (first: {diff[0].path})")
+                return report, None
+        log(f"[replay] anchored at checkpoint step {anchor} (verified "
+            f"against journal)")
+
+    data = SyntheticLM(data_cfg)
+    fault0 = np.float32(0.0)  # healthy steps recorded fault == identity
+
+    for step in range(anchor, hi):
+        rec = journal.records.get(step)
+        if rec is None:
+            report.first_divergence = step
+            report.divergence_kind = "missing_record"
+            report.error = (f"journal has no record for step {step} inside "
+                            f"the replay range [{anchor}, {hi})")
+            return report, None
+        batch = jax.tree.map(jnp.asarray, data.batch(rec["data_index"]))
+        pre_state = state
+        if train_cfg.fault_arg:
+            p, o, metrics = step_fn(pre_state["params"], pre_state["opt"],
+                                    batch, fault0)
+        else:
+            p, o, metrics = step_fn(pre_state["params"], pre_state["opt"],
+                                    batch)
+        state = {"params": p, "opt": o}
+        report.steps_checked += 1
+
+        kind = None
+        if _hex(int(np.asarray(metrics["loss_bits"]))) != rec["loss_bits"]:
+            kind = "loss_bits"
+        elif (_hex(int(np.asarray(metrics["grad_norm_bits"])))
+              != rec["grad_norm_bits"]):
+            kind = "grad_norm_bits"
+        got = np.asarray(metrics["leaf_digests"])
+        diff = _leaf_diff(paths, FlightRecorder.record_leaves(rec), got)
+        if diff and kind is None:
+            kind = "digest"
+        if kind is not None:
+            report.first_divergence = step
+            report.divergence_kind = kind
+            report.diverged_leaves = diff
+            log(f"[replay] step {step} DIVERGES ({kind}): "
+                + (f"{len(diff)} leaf/leaves, first {diff[0].path} "
+                   f"[{diff[0].family}]" if diff else
+                   f"recorded {rec['loss_bits']}/{rec['grad_norm_bits']}"))
+            ctx = None
+            if capture_divergence:
+                ctx = DivergenceContext(step=step,
+                                        data_index=int(rec["data_index"]),
+                                        pre_state=pre_state, batch=batch,
+                                        record=rec, train_cfg=train_cfg)
+            return report, ctx
+        if lo <= step < hi:
+            report.verified_steps += 1
+
+    log(f"[replay] verified {report.verified_steps} step(s) in "
+        f"[{lo}, {hi}) from anchor {anchor}: journal is bit-exact")
+    return report, None

@@ -82,6 +82,9 @@ class ContinuousEngine:
         self.scheduler = Scheduler(cfg.n_slots, max_queue=cfg.max_queue)
         self.cache = model.init_cache(cfg.n_slots, cfg.max_len)
         self._tokens: Dict[int, List[int]] = {}
+        # flight recorder (cfg.record): running per-request digest — every
+        # emitted token id + its step's logits-row fingerprint folded in
+        self._digests: Dict[int, int] = {}
         self.counters = _fresh_counters()
         self._tainted_slots: set = set()
         self.metrics = {
@@ -95,6 +98,7 @@ class ContinuousEngine:
         model, cfg = self.model, self.cfg
         pa = model.cfg.pa
         temp, seed, guard = cfg.temperature, cfg.seed, cfg.guard_nonfinite
+        record = cfg.record
 
         def fold_key(rid, j):
             key = jax.random.PRNGKey(seed)
@@ -106,18 +110,36 @@ class ContinuousEngine:
             from repro.resilience.detectors import nonfinite_rows
             return nonfinite_rows(lg, axis=-1)
 
+        def digest(lg):
+            # flight recorder (DESIGN.md §8): per-slot logits fingerprint
+            # over the RAW pre-temperature bits — bitcast + integer mixing
+            # only, so recording keeps the full-PA audit at zero
+            from repro.resilience.recorder import rows_digest
+            return rows_digest(lg)
+
+        def extras(raw):
+            out = ()
+            if guard:
+                # guard the RAW logits: 1/T scaling of an inf row can
+                # only keep or lose information, never create it
+                out += (health(raw),)
+            if record:
+                out += (digest(raw),)
+            return out
+
         if temp <= 0:
             def step(params, cache, tok, pos):
                 logits, cache = model.decode_at(params, cache, tok, pos)
                 lg = logits[:, -1].astype(jnp.float32)
                 nxt = jnp.argmax(lg, -1).astype(jnp.int32)
-                if guard:
-                    return nxt, health(lg), cache
-                return nxt, cache
+                return (nxt,) + extras(lg) + (cache,)
 
             def first(logits, rid):
                 lg = logits[:, -1].astype(jnp.float32)
-                return jnp.argmax(lg, -1)[0].astype(jnp.int32)
+                tok = jnp.argmax(lg, -1)[0].astype(jnp.int32)
+                if record:
+                    return tok, digest(lg)[0]
+                return tok
         else:
             if pa.nonlin_is_pa and pa.impl != "hw":
                 # PA Gumbel-argmax: jax.random.categorical's Gumbel path
@@ -135,15 +157,15 @@ class ContinuousEngine:
                 lg = scale_logits(raw, temp, pa)
                 keys = jax.vmap(fold_key)(rids, js)
                 nxt = jax.vmap(draw)(keys, lg).astype(jnp.int32)
-                if guard:
-                    # guard the RAW logits: 1/T scaling of an inf row can
-                    # only keep or lose information, never create it
-                    return nxt, health(raw), cache
-                return nxt, cache
+                return (nxt,) + extras(raw) + (cache,)
 
             def first(logits, rid):
-                lg = scale_logits(logits[:, -1].astype(jnp.float32), temp, pa)
-                return draw(fold_key(rid, 0), lg[0]).astype(jnp.int32)
+                raw = logits[:, -1].astype(jnp.float32)
+                lg = scale_logits(raw, temp, pa)
+                tok = draw(fold_key(rid, 0), lg[0]).astype(jnp.int32)
+                if record:
+                    return tok, digest(raw)[0]
+                return tok
 
         self._step_impl = step        # unjitted: the audit traces this
         self._step_fn = jax.jit(step, donate_argnums=(1,))
@@ -159,6 +181,7 @@ class ContinuousEngine:
         self.scheduler = Scheduler(self.cfg.n_slots,
                                    max_queue=self.cfg.max_queue)
         self._tokens = {}
+        self._digests = {}
         self.counters = _fresh_counters()
         self._tainted_slots = set()
         self.metrics = {
@@ -196,7 +219,15 @@ class ContinuousEngine:
                                    np.asarray(req.prompt, np.int32)[None])
         one = self.model.init_cache(1, self.cfg.max_len)
         logits, one = self._prefill_fn(self.params, batch, one)
-        first = int(self._first_fn(logits, jnp.int32(req.rid)))
+        if self.cfg.record:
+            from repro.resilience.recorder import (fold_token,
+                                                   request_digest_seed)
+            first, fdig = self._first_fn(logits, jnp.int32(req.rid))
+            first = int(first)
+            self._digests[req.rid] = fold_token(
+                request_digest_seed(req.rid), first, int(fdig))
+        else:
+            first = int(self._first_fn(logits, jnp.int32(req.rid)))
         self.cache = self._insert_fn(self.cache, one,
                                      np.int32(slot.index))
         self.metrics["prefills"] += 1
@@ -280,12 +311,11 @@ class ContinuousEngine:
                     rids[s.index] = s.request.rid
                     js[s.index] = s.produced
                 args = (self.params, self.cache, tok, pos, rids, js)
-            if cfg.guard_nonfinite:
-                nxt, bad, self.cache = self._step_fn(*args)
-                bad = np.asarray(bad)
-            else:
-                nxt, self.cache = self._step_fn(*args)
-                bad = None
+            outs = self._step_fn(*args)
+            nxt, rest = outs[0], list(outs[1:-1])
+            self.cache = outs[-1]
+            bad = np.asarray(rest.pop(0)) if cfg.guard_nonfinite else None
+            digs = np.asarray(rest.pop(0)) if cfg.record else None
             nxt = np.asarray(nxt)
             self.metrics["decode_wall"].append(time.perf_counter() - t0)
             for s in active:
@@ -302,6 +332,14 @@ class ContinuousEngine:
                 s.produced += 1
                 s.last_token = t
                 self._tokens[s.request.rid].append(t)
+                if digs is not None:
+                    # fold only EMITTED tokens: a quarantined slot's garbage
+                    # token never reaches the digest, matching the token
+                    # stream the client actually saw
+                    from repro.resilience.recorder import fold_token
+                    rid = s.request.rid
+                    self._digests[rid] = fold_token(
+                        self._digests[rid], t, int(digs[s.index]))
                 self._emit(s.request.rid, t, on_token)
                 produced += 1
                 if sch.should_finish(s, t, cfg.eos_id):
@@ -355,6 +393,13 @@ class ContinuousEngine:
         }
         for k, v in self.health_snapshot().items():
             out[f"recovery_{k}"] = v
+        if self.cfg.record:
+            # bit-exact per-request fingerprints (token ids + logits bits):
+            # two traces of the same workload must match digest-for-digest —
+            # the serve-bench determinism gate compares exactly this dict
+            out["request_digests"] = {
+                str(rid): f"0x{d:08x}"
+                for rid, d in sorted(self._digests.items())}
         return out
 
     def decode_step_mul_stats(self) -> Dict:

@@ -39,6 +39,13 @@ class ServeConfig:
     # (submit past it raises QueueFullError — explicit backpressure).
     guard_nonfinite: bool = True
     max_queue: Optional[int] = None
+    # flight recorder (DESIGN.md §8): fold every emitted token id + the
+    # decode step's per-slot logits digest (integer-only, computed in the
+    # same jit) into a per-request digest, exposed via
+    # ``latency_summary()['request_digests']`` — the unit the serve-bench
+    # determinism gate replays against. Adds two integer reductions to the
+    # decode step; the full-PA audit stays at zero.
+    record: bool = False
 
 
 def make_prefill_batch(cfg, tokens):

@@ -73,14 +73,28 @@ def straggler_check(ewma, dt: float, factor: float):
 
 def _fresh_history():
     return {"loss": [], "step_time": [], "straggler_alerts": 0,
-            "rollbacks": 0, "io_retries": 0, "skipped_batches": []}
+            "rollbacks": 0, "io_retries": 0, "skipped_batches": [],
+            "restore_skipped": []}
+
+
+def _note_restore_skipped(ckpt, history, log):
+    """Surface checkpoints that ``restore_latest`` walked past because they
+    failed integrity: the operator must see that corruption happened, and
+    replay must anchor to the step that was ACTUALLY restored, not the
+    newest step on disk."""
+    skipped = getattr(ckpt, "last_restore_skipped", [])
+    if skipped:
+        history["restore_skipped"] = sorted(
+            set(history.get("restore_skipped", [])) | set(skipped))
+        log(f"[loop] restore skipped corrupted checkpoint step(s) "
+            f"{skipped} — integrity failures recorded in history")
 
 
 def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
           workdir: str, loop_cfg: LoopConfig = LoopConfig(),
           train_cfg: TrainConfig = TrainConfig(),
           mesh=None, log: Callable[[str], None] = print,
-          fault_plan=None, recovery=None):
+          fault_plan=None, recovery=None, recorder=None):
     """Run (or resume) a training job. Returns (params, history).
 
     ``history`` is CUMULATIVE across preempt/restart cycles: it is
@@ -88,7 +102,12 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
     ``history['loss'][k]`` is always the loss of global step ``k``.
 
     ``recovery`` (``resilience.RecoveryPolicy``) arms self-healing;
-    ``fault_plan`` (``resilience.FaultPlan``) arms chaos injection.
+    ``fault_plan`` (``resilience.FaultPlan``) arms chaos injection;
+    ``recorder`` (``resilience.FlightRecorder``) arms the bit-exact
+    flight journal (DESIGN.md §8): per-step loss/grad-norm bits + an
+    integer fingerprint of the updated param/opt tree, truncated on
+    rollback exactly like ``history`` and flushed atomically with every
+    checkpoint — ``resilience.replay`` verifies it from any anchor.
     """
     from repro.resilience.detectors import LossSpikeDetector
     from repro.resilience.recovery import (UnrecoverableTrainingError,
@@ -101,14 +120,22 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
     data = SyntheticLM(data_cfg)
 
     use_fault_arg = fault_plan is not None and fault_plan.armed("nan_grad")
-    if recovery is not None or use_fault_arg:
+    if recovery is not None or use_fault_arg or recorder is not None:
         train_cfg = dataclasses.replace(train_cfg,
                                         health=recovery is not None,
-                                        fault_arg=use_fault_arg)
+                                        fault_arg=use_fault_arg,
+                                        record=recorder is not None)
     step_fn = make_train_step(model, opt_cfg, train_cfg)
 
     params = model.init(jax.random.PRNGKey(data_cfg.seed))
     opt_state = init_opt_state(params, opt_cfg)
+    if recorder is not None:
+        # The journal header pins the step configuration: replay rebuilds a
+        # bit-identical program from it (health/fault_arg change the traced
+        # graph, and even `g + 0.0` is not a bit-level identity on -0.0).
+        recorder.load_existing()
+        recorder.attach({"params": params, "opt": opt_state},
+                        step_cfg=dataclasses.asdict(train_cfg))
 
     start_step = 0
     state_like = {"params": params, "opt": opt_state}
@@ -137,12 +164,26 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
         saved = ckpt.load_extra(restored_step)
         if saved and "history" in saved:
             history.update(saved["history"])
+        _note_restore_skipped(ckpt, history, log)
         log(f"[loop] resumed from checkpoint step {restored_step}")
+    if recorder is not None:
+        # Journal records past the restored step belong to a trajectory
+        # this run will re-execute (and re-record bit-identically) — or,
+        # after a fallback past corruption, to one it never will. Either
+        # way the journal must anchor to the step actually restored.
+        recorder.truncate(start_step)
 
     def save_ckpt(step, blocking):
         def do():
+            extra = {"history": history}
+            if recorder is not None:
+                # journal first: the on-disk journal must cover at least as
+                # far as any checkpoint that might anchor a replay, and the
+                # ring tail rides in the extra.json sidecar
+                recorder.flush()
+                extra["flight"] = recorder.sidecar()
             ckpt.save(step, {"params": params, "opt": opt_state},
-                      blocking=blocking, extra={"history": history})
+                      blocking=blocking, extra=extra)
         if recovery is not None:
             attempts = {"n": 0}
 
@@ -215,11 +256,16 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
                     retries=recovery.io_retries,
                     backoff_s=recovery.io_backoff_s, log=log)
                 params, opt_state = restored["params"], restored["opt"]
+                _note_restore_skipped(ckpt, history, log)
                 log(f"[loop] UNHEALTHY step {step}: {reason} — rolled back "
                     f"to checkpoint step {good_step}, skipping batch {d} "
                     f"(retry {consecutive_rollbacks}/{recovery.max_rollbacks})")
                 history["loss"] = history["loss"][:good_step]
                 history["step_time"] = history["step_time"][:good_step]
+                if recorder is not None:
+                    # the journal mirrors history: the rolled-back steps
+                    # never ran, and their replay re-records bit-identically
+                    recorder.truncate(good_step)
                 spike.reset()
                 ewma = None
                 step = good_step
@@ -233,6 +279,8 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
                 f"{prev_ewma:.3f}s")
         history["loss"].append(loss)
         history["step_time"].append(dt)
+        if recorder is not None:
+            recorder.record_step(step, d, metrics)
 
         if step % loop_cfg.log_every == 0:
             log(f"[loop] step {step:5d} loss {loss:.4f} "
@@ -262,4 +310,6 @@ def train(model: Model, opt_cfg: OptConfig, data_cfg: DataConfig,
             log(f"[loop] final async checkpoint failed after retries: {e}")
     else:
         ckpt.wait()
+    if recorder is not None:
+        recorder.flush()
     return params, history

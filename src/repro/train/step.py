@@ -37,6 +37,13 @@ class TrainConfig:
     # every gradient leaf: 0.0 is the identity, NaN/Inf poisons the step.
     health: bool = False
     fault_arg: bool = False
+    # Flight recorder (DESIGN.md §8). ``record=True`` adds the bit-exact
+    # flight metrics to the step output: loss/grad-norm BIT PATTERNS and a
+    # per-leaf integer fingerprint of the updated param/opt tree
+    # (bitcast -> position-mixed xor fold, resilience/recorder.py). All
+    # integer ops, so the full-PA multiplication audit stays at zero with
+    # the recorder armed.
+    record: bool = False
 
 
 def _split_micro(batch, n):
@@ -106,6 +113,16 @@ def make_train_step(model: Model, opt_cfg: OptConfig,
             from repro.resilience.detectors import nonfinite_count
             metrics["nonfinite"] = nonfinite_count(
                 (loss, metrics["grad_norm"], params))
+        if train_cfg.record:
+            # Flight recorder (resilience/recorder.py): bit patterns +
+            # integer tree fingerprint of the POST-update state — exactly
+            # what a checkpoint at this step would contain, which is what
+            # lets replay verify its anchor before re-running a window.
+            from repro.resilience.recorder import float_bits, tree_leaf_digests
+            metrics["loss_bits"] = float_bits(loss)
+            metrics["grad_norm_bits"] = float_bits(metrics["grad_norm"])
+            metrics["leaf_digests"] = tree_leaf_digests(
+                {"params": params, "opt": opt_state})
         return params, opt_state, metrics
 
     if train_cfg.fault_arg:

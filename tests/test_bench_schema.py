@@ -201,8 +201,10 @@ def test_serve_requires_fingerprint_parity_gate_and_audit():
     record that includes token parity, the throughput-vs-seed ratio,
     slot-occupancy telemetry, and a clean decode-step multiplication
     audit — a throughput win without output parity (or with a leaky
-    decode step) can't commit a trajectory point."""
-    base = {"benchmark": "serve", "schema_version": 1,
+    decode step) can't commit a trajectory point. Serve is schema_version 2
+    since the flight recorder landed: a run-twice ``determinism`` section
+    with identical request digests is also mandatory."""
+    base = {"benchmark": "serve", "schema_version": 2,
             "generated_utc": "t", "backend": "cpu",
             "pallas_mode": "n/a",
             "timing": {"rounds": 1, "stat": "min", "unit": "us"},
@@ -216,6 +218,7 @@ def test_serve_requires_fingerprint_parity_gate_and_audit():
     assert any("slot_occupancy" in e for e in errs)
     assert any("'recovery'" in e for e in errs)
     assert any("multiplication_audit" in e for e in errs)
+    assert any("determinism" in e for e in errs)
     base.update({
         "serve_fingerprint": "abc",
         "gates_passed": ["throughput_vs_seed"],
@@ -223,13 +226,22 @@ def test_serve_requires_fingerprint_parity_gate_and_audit():
         "slot_occupancy": {"mean": 0.8},
         "recovery": {"evicted_nonfinite": 1.0, "recovered_slots": 1.0},
         "multiplication_audit": {"tensor_total": 1},
+        "determinism": {"runs": 2, "requests": 12, "identical": False,
+                        "digest_fold": "0xdeadbeef"},
     })
     errs = validate_report(base, "BENCH_serve.json")
     assert any("token-parity" in e for e in errs)
     assert any("tensor_total must be 0" in e for e in errs)
+    assert any("identical" in e for e in errs)
     base["gates_passed"] = ["token_parity_continuous_vs_oneshot"]
     base["multiplication_audit"] = {"tensor_total": 0}
+    base["determinism"]["identical"] = True
     assert validate_report(base, "BENCH_serve.json") == []
+    # a pre-recorder v1 report is rejected outright: no silent downgrades
+    v1 = dict(base, schema_version=1)
+    del v1["determinism"]
+    assert any("schema_version" in e
+               for e in validate_report(v1, "BENCH_serve.json"))
 
 
 def test_rejects_stale_serve_fingerprint(tmp_path):

@@ -122,3 +122,119 @@ def test_pam_monotone_for_positive(data):
     p_lo = float(pam_value(f32(lo), f32(b)))
     p_hi = float(pam_value(f32(hi), f32(b)))
     assert p_hi >= p_lo
+
+
+# ---------------------------------------------------------------------------
+# Flight-recorder tree fingerprint (resilience/recorder.py, DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+from repro.resilience.recorder import (combine_digests, leaf_digest,  # noqa: E402
+                                       tree_digest, tree_leaf_digests)
+
+_SHAPES = [(3,), (2, 4), (5,)]
+
+
+def _tree_from(vals, dtypes):
+    """A small {a, b/{c,d}, e} tree over fixed shapes with chosen dtypes."""
+    a, c, d = [np.full(s, v, dt)
+               for v, dt, s in zip(vals, dtypes, _SHAPES)]
+    return {"a": jnp.asarray(a), "b": {"c": jnp.asarray(c),
+                                       "d": jnp.asarray(d)}}
+
+
+_leaf_floats = st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                                  allow_nan=False, width=32),
+                        min_size=1, max_size=1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_tree_digest_order_independent(data):
+    """The combined digest is a function of {path: leaf bits}, not of dict
+    insertion order: rebuilding the same tree with keys inserted in a
+    different order must not change it (leaves are salted by PATH crc32)."""
+    vals = [data.draw(st.floats(min_value=-1e6, max_value=1e6,
+                                allow_nan=False, width=32))
+            for _ in range(3)]
+    fwd = {"a": jnp.full(_SHAPES[0], np.float32(vals[0])),
+           "b": {"c": jnp.full(_SHAPES[1], np.float32(vals[1])),
+                 "d": jnp.full(_SHAPES[2], np.float32(vals[2]))}}
+    rev = {}
+    rev["b"] = {}
+    rev["b"]["d"] = jnp.full(_SHAPES[2], np.float32(vals[2]))
+    rev["b"]["c"] = jnp.full(_SHAPES[1], np.float32(vals[1]))
+    rev["a"] = jnp.full(_SHAPES[0], np.float32(vals[0]))
+    assert int(tree_digest(fwd)) == int(tree_digest(rev))
+    # and the host-side combine mirrors the in-jit one
+    assert int(tree_digest(fwd)) == combine_digests(
+        [int(v) for v in np.asarray(tree_leaf_digests(fwd))])
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_tree_digest_mixed_dtypes_deterministic(data):
+    """f32/bf16 mixed trees digest deterministically (same values+dtypes ->
+    same digest; bf16 and f32 encodings of a value differ)."""
+    v = data.draw(st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                            width=32))
+    mixed = {"a": jnp.full(_SHAPES[0], v, jnp.float32),
+             "b": {"c": jnp.full(_SHAPES[1], v, jnp.bfloat16),
+                   "d": jnp.full(_SHAPES[2], v, jnp.float32)}}
+    again = {"a": jnp.full(_SHAPES[0], v, jnp.float32),
+             "b": {"c": jnp.full(_SHAPES[1], v, jnp.bfloat16),
+                   "d": jnp.full(_SHAPES[2], v, jnp.float32)}}
+    assert int(tree_digest(mixed)) == int(tree_digest(again))
+    all_f32 = {"a": mixed["a"],
+               "b": {"c": mixed["b"]["c"].astype(jnp.float32),
+                     "d": mixed["b"]["d"]}}
+    if v != 0.0:   # 0.0 has identical (zero) bits in both encodings' words
+        assert int(tree_digest(mixed)) != int(tree_digest(all_f32))
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_single_bit_flip_changes_digest(data):
+    """Acceptance property: ANY single bit flip in ANY leaf changes both
+    that leaf's digest and the combined tree digest (fmix32 is a bijection,
+    so this is structural, not probabilistic)."""
+    vals = [data.draw(st.floats(min_value=-1e6, max_value=1e6,
+                                allow_nan=False, width=32))
+            for _ in range(3)]
+    dtypes = data.draw(st.tuples(*[st.sampled_from([np.float32, "bfloat16"])
+                                   for _ in range(3)]))
+    import ml_dtypes
+    dtypes = [np.dtype(ml_dtypes.bfloat16) if d == "bfloat16" else np.dtype(d)
+              for d in dtypes]
+    tree = _tree_from(vals, dtypes)
+    leaf_i = data.draw(st.integers(min_value=0, max_value=2))
+    base = np.asarray(tree_leaf_digests(tree))
+    base_combined = int(tree_digest(tree))
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    arr = np.array(flat[leaf_i])
+    bits = arr.reshape(-1).view(np.uint8)
+    bit = data.draw(st.integers(min_value=0, max_value=bits.size * 8 - 1))
+    bits[bit // 8] ^= np.uint8(1 << (bit % 8))
+    flat[leaf_i] = jnp.asarray(arr)
+    flipped = jax.tree_util.tree_unflatten(treedef, flat)
+
+    got = np.asarray(tree_leaf_digests(flipped))
+    assert int(got[leaf_i]) != int(base[leaf_i])
+    others = [i for i in range(3) if i != leaf_i]
+    assert all(int(got[i]) == int(base[i]) for i in others)
+    assert int(tree_digest(flipped)) != base_combined
+
+
+@settings(max_examples=50, deadline=None)
+@given(salt=st.integers(min_value=0, max_value=0xFFFFFFFF),
+       data=st.data())
+def test_leaf_digest_position_sensitive(salt, data):
+    """Swapping two distinct elements changes the digest (words are mixed
+    with their index before the XOR fold — a plain XOR would be blind to
+    transpositions)."""
+    a = data.draw(st.floats(min_value=0.5, max_value=1e3, width=32))
+    b = data.draw(st.floats(min_value=-1e3, max_value=-0.5, width=32))
+    x = jnp.asarray(np.array([a, b, 0.25], np.float32))
+    y = jnp.asarray(np.array([b, a, 0.25], np.float32))
+    assert int(leaf_digest(x, salt)) != int(leaf_digest(y, salt))

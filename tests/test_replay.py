@@ -1,0 +1,476 @@
+"""Flight recorder / deterministic replay / divergence forensics tests
+(DESIGN.md §8).
+
+Fast tier: journal roundtrip + torn-tail tolerance, record -> replay
+verification (full window and interior checkpoint anchors), journal-tamper
+localization to the exact step and leaf, anchor-tamper (bit flip with the
+manifest re-crc'd so restore CANNOT catch it) localized by the digest diff,
+forensics report schema, the zero-tensor-multiply audits with the recorder
+armed, and the restore-skipped surfacing satellite.
+
+Slow tier (`make replay-verify`): the PR-6 chaos run — all six fault kinds
+including preemption kill/restart, rollback + batch skip, and an on-disk
+checkpoint bit flip — recorded and then replayed bit-exactly; serve-side
+determinism under slot poisoning; and the launch.replay CLI end to end.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import zlib
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import PAConfig
+from repro.models.common import ModelConfig
+from repro.models import build_model
+from repro.optim import OptConfig, init_opt_state
+from repro.data import DataConfig
+from repro.train import LoopConfig, TrainConfig, train, make_train_step
+from repro.serve import ContinuousEngine, Request, ServeConfig
+from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.resilience import (FaultPlan, FaultSpec, FlightRecorder,
+                              RecoveryPolicy, bisect, combine_digests,
+                              fold_token, journal_path, leaf_family,
+                              replay_train, request_digest_seed,
+                              tree_leaf_digests)
+
+TINY = ModelConfig(name="tiny", family="decoder", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+                   vocab_size=64, max_seq_len=64, param_dtype="float32",
+                   compute_dtype="float32", remat="none")
+PA_FULL = PAConfig(mode="full", deriv="approx", loss_deriv="exact")
+OPT = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=12,
+                weight_decay=1e-4)
+DATA = DataConfig(vocab_size=64, seq_len=32, global_batch=8, seed=1)
+LOOP = LoopConfig(steps=12, ckpt_every=5, log_every=100)
+
+_quiet = lambda *_: None
+
+
+@pytest.fixture(scope="module")
+def recorded_run(tmp_path_factory):
+    """One recorded 12-step run (checkpoints at 5, 10, 12) shared by the
+    replay tests; tests that tamper copy the workdir first."""
+    wd = str(tmp_path_factory.mktemp("flight"))
+    model = build_model(TINY)
+    rec = FlightRecorder(journal_path(wd))
+    train(model, OPT, DATA, wd, LOOP, TrainConfig(), recorder=rec,
+          log=_quiet)
+    return model, wd
+
+
+def _copy(workdir, tmp_path):
+    dst = str(tmp_path / "run")
+    shutil.copytree(workdir, dst)
+    return dst
+
+
+# ---------------------------------------------------------------------------
+# Journal persistence.
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_sidecar(recorded_run):
+    _, wd = recorded_run
+    j = FlightRecorder.load(journal_path(wd))
+    assert j.steps() == list(range(12))
+    assert j.header is not None and j.header["n_leaves"] > 0
+    rec = j.records[3]
+    leaves = FlightRecorder.record_leaves(rec)
+    assert len(leaves) == j.header["n_leaves"]
+    assert rec["digest"] == f"0x{combine_digests(leaves):08x}"
+    # the ring tail rides in every checkpoint's extra.json sidecar
+    from repro.checkpoint import Checkpointer
+    ckpt = Checkpointer(os.path.join(wd, "ckpts"))
+    extra = ckpt.load_extra(10)
+    assert extra["flight"]["n_leaves"] == j.header["n_leaves"]
+    tail_steps = [r["step"] for r in extra["flight"]["tail"]]
+    assert tail_steps and tail_steps[-1] == 9   # post-step-9 state == ckpt 10
+    for r in extra["flight"]["tail"]:
+        assert r == j.records[r["step"]]
+
+
+def test_journal_tolerates_torn_tail(recorded_run, tmp_path):
+    _, wd = recorded_run
+    path = str(tmp_path / "journal.jsonl")
+    shutil.copy(journal_path(wd), path)
+    with open(path, "a") as f:
+        f.write('{"step": 99, "data_index": 99, "loss_bi')   # torn write
+    j = FlightRecorder.load(path)
+    assert j.steps() == list(range(12))       # torn line skipped, not fatal
+    assert j.torn_lines == 1
+
+
+def test_journal_truncate_mirrors_rollback(recorded_run, tmp_path):
+    _, wd = recorded_run
+    j = FlightRecorder.load(journal_path(tmp_path / "x"))
+    j.load_existing()
+    src = FlightRecorder.load(journal_path(wd))
+    j.header, j.records = dict(src.header), dict(src.records)
+    assert j.truncate(8) == 4
+    assert j.steps() == list(range(8))
+    assert [r["step"] for r in j.tail()][-1] == 7
+
+
+# ---------------------------------------------------------------------------
+# Replay verification.
+# ---------------------------------------------------------------------------
+
+def test_replay_verifies_recorded_run(recorded_run):
+    model, wd = recorded_run
+    report, ctx = replay_train(model, OPT, DATA, wd, log=_quiet)
+    assert report.ok and ctx is None
+    assert report.anchor_step == 0
+    assert report.window == (0, 12)
+    assert report.verified_steps == 12
+
+
+def test_replay_window_anchors_at_checkpoint(recorded_run):
+    model, wd = recorded_run
+    report, _ = replay_train(model, OPT, DATA, wd, window=(7, 12),
+                             log=_quiet)
+    assert report.ok
+    assert report.anchor_step == 5            # newest ckpt <= window start
+    assert report.verified_steps == 5         # steps 7..11 in-window
+
+
+def test_replay_localizes_journal_tamper(recorded_run, tmp_path):
+    """A single flipped digest bit in one journal line is localized to the
+    exact step and the exact leaf."""
+    model, wd0 = recorded_run
+    wd = _copy(wd0, tmp_path)
+    j = FlightRecorder.load(journal_path(wd))
+    rec = j.records[8]
+    leaves = FlightRecorder.record_leaves(rec)
+    leaves[3] ^= 1
+    rec["leaves"] = "".join(f"{v:08x}" for v in leaves)
+    j.flush()
+    report, ctx = replay_train(model, OPT, DATA, wd, log=_quiet,
+                               capture_divergence=True)
+    assert not report.ok
+    assert report.first_divergence == 8
+    assert report.divergence_kind == "digest"
+    assert [l.index for l in report.diverged_leaves] == [3]
+    assert ctx is not None and ctx.step == 8
+
+
+def _flip_ckpt_leaf_and_recrc(ckpt_dir, step, leaf_i, bit=5):
+    """Flip one payload bit in a checkpoint leaf AND rewrite the manifest
+    crc32: an UNDETECTABLE tamper for the restore integrity check — only
+    the flight journal's digests can catch it."""
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    data = {k: np.array(v) for k, v in np.load(
+        os.path.join(d, "proc0.npz")).items()}
+    a = data[f"leaf_{leaf_i}"]
+    a.reshape(-1).view(np.uint8)[bit // 8] ^= np.uint8(1 << (bit % 8))
+    np.savez(os.path.join(d, "proc0.npz"), **data)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest["leaves"][leaf_i]["crc32"] = (
+        zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def test_bisect_localizes_anchor_bit_flip(recorded_run, tmp_path):
+    """An injected single-bit parameter divergence in the anchor checkpoint
+    (crc re-written, so restore cannot see it) is localized by --bisect
+    semantics to the exact step and leaf (acceptance criterion)."""
+    model, wd0 = recorded_run
+    wd = _copy(wd0, tmp_path)
+    _flip_ckpt_leaf_and_recrc(os.path.join(wd, "ckpts"), 10, leaf_i=4)
+    out = bisect(model, OPT, DATA, wd, window=(10, 12), log=_quiet)
+    assert out["diverged"]
+    loc = out["localization"]
+    assert loc["site"] == "checkpoint_anchor"
+    assert loc["kind"] == "anchor_state"
+    assert loc["step"] == 9                   # ckpt 10 == post-step-9 state
+    assert [l["index"] for l in loc["leaves"]] == [4]
+    assert loc["first_leaf"] and loc["kernel_family"]
+    # the path names the leaf; family attribution is consistent with it
+    assert loc["kernel_family"] == leaf_family(loc["first_leaf"])
+
+
+def test_forensics_report_schema(recorded_run, tmp_path):
+    model, wd0 = recorded_run
+    wd = _copy(wd0, tmp_path)
+    j = FlightRecorder.load(journal_path(wd))
+    rec = j.records[6]
+    leaves = FlightRecorder.record_leaves(rec)
+    leaves[0] ^= 1 << 17
+    rec["leaves"] = "".join(f"{v:08x}" for v in leaves)
+    j.flush()
+    out = bisect(model, OPT, DATA, wd, log=_quiet)
+    # machine-readable contract (launch.replay --bisect serializes this)
+    assert out["schema_version"] == 1
+    assert out["kind"] == "forensics_report"
+    assert out["diverged"] is True
+    assert out["replay"]["first_divergence"] == 6
+    loc = out["localization"]
+    for k in ("site", "step", "kind", "leaves", "families", "first_leaf",
+              "kernel_family"):
+        assert k in loc, k
+    assert loc["site"] == "train_step"
+    names = [c["name"] for c in out["cross_checks"]]
+    assert "rerun" in names                   # self-determinism probe ran
+    rerun = next(c for c in out["cross_checks"] if c["name"] == "rerun")
+    # the platform is deterministic: the re-executed step matches its own
+    # first replay (so the tampered JOURNAL is the suspect, per verdict)
+    assert rerun["matches_first_replay"] is True
+    assert not rerun["matches_journal"]
+    assert isinstance(out["verdict"], str) and out["verdict"]
+    json.dumps(out)                           # fully serializable
+
+
+def test_replay_without_journal_errors(tmp_path):
+    model = build_model(TINY)
+    report, _ = replay_train(model, OPT, DATA, str(tmp_path), log=_quiet)
+    assert not report.ok and report.error
+
+
+# ---------------------------------------------------------------------------
+# Recorder satellites: audits stay clean, restore_skipped surfaced.
+# ---------------------------------------------------------------------------
+
+def test_full_pa_train_step_audit_zero_with_record():
+    """Acceptance criterion: arming the recorder adds ONLY integer ops —
+    the full-PA train step still audits to zero tensor-shaped multiplies
+    (digest mixing lands in the integer exemption class)."""
+    model = build_model(TINY.replace(pa=PA_FULL))
+    step = make_train_step(model, OPT, TrainConfig(record=True, health=True))
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params, OPT)
+    from repro.data import SyntheticLM
+    batch = SyntheticLM(DATA).batch(0)
+    jaxpr = jax.make_jaxpr(step)(params, opt_state, batch)
+    s = jaxpr_mul_stats(jaxpr)
+    assert s["tensor_total"] == 0, s["tensor_sites"]
+    assert s["integer"] > 0                   # the digest mixing is there
+
+
+def test_full_pa_decode_step_audit_zero_with_record():
+    model = build_model(TINY.replace(pa=PA_FULL))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ContinuousEngine(model, params,
+                           ServeConfig(max_len=32, n_slots=2, record=True))
+    s = eng.decode_step_mul_stats()
+    assert s["tensor_total"] == 0, s["tensor_sites"]
+
+
+def test_serve_record_transparent_and_deterministic():
+    """Recording must not perturb tokens, and the per-request digests must
+    be identical across two runs of the same workload."""
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, (8,)).astype(np.int32),
+                    max_new_tokens=5) for i in range(3)]
+    cfg = ServeConfig(max_len=64, n_slots=2)
+    plain = ContinuousEngine(model, params, cfg).run(list(reqs))
+    eng = ContinuousEngine(model, params,
+                           ServeConfig(max_len=64, n_slots=2, record=True))
+    out1 = eng.run(list(reqs))
+    d1 = eng.latency_summary()["request_digests"]
+    eng.reset()
+    out2 = eng.run(list(reqs))
+    d2 = eng.latency_summary()["request_digests"]
+    assert sorted(d1) == [str(r.rid) for r in reqs]
+    assert d1 == d2
+    for r in reqs:
+        np.testing.assert_array_equal(out1[r.rid], plain[r.rid])
+        np.testing.assert_array_equal(out2[r.rid], plain[r.rid])
+    # digests are a function of (rid, content): distinct across requests
+    assert len(set(d1.values())) == len(d1)
+
+
+def test_fold_token_host_chain_is_pure():
+    d = request_digest_seed(7)
+    assert d == request_digest_seed(7) != request_digest_seed(8)
+    d1 = fold_token(d, 3, 0xDEADBEEF)
+    assert d1 == fold_token(d, 3, 0xDEADBEEF)
+    assert d1 != fold_token(d, 4, 0xDEADBEEF)
+    assert d1 != fold_token(d, 3, 0xDEADBEEE)
+
+
+def test_restore_skipped_surfaced_in_history(tmp_path):
+    """Satellite: restore_latest walking past a corrupted checkpoint must
+    surface the skipped step(s) in the restore result and the loop
+    history, not silently fall back."""
+    from repro.resilience import flip_checkpoint_bit
+    from repro.checkpoint import Checkpointer
+    wd = str(tmp_path)
+    model = build_model(TINY)
+    train(model, OPT, DATA, wd, LoopConfig(steps=10, ckpt_every=5,
+                                           log_every=100), TrainConfig(),
+          log=_quiet)
+    flip_checkpoint_bit(os.path.join(wd, "ckpts"), 10, seed=3)
+    # the Checkpointer itself reports what it walked past
+    ckpt = Checkpointer(os.path.join(wd, "ckpts"))
+    params = model.init(jax.random.PRNGKey(DATA.seed))
+    like = {"params": params, "opt": init_opt_state(params, OPT)}
+    step, _ = ckpt.restore_latest(like, log=_quiet)
+    assert step == 5
+    assert ckpt.last_restore_skipped == [10]
+    assert ckpt.last_restore_failures[0][0] == 10
+    # ...and the resumed run records it in persistent history
+    _, hist = train(model, OPT, DATA, wd,
+                    LoopConfig(steps=12, ckpt_every=5, log_every=100),
+                    TrainConfig(), log=_quiet)
+    assert hist["restore_skipped"] == [10]
+
+
+def test_replay_anchors_past_corrupt_checkpoint(recorded_run, tmp_path):
+    """A corrupt (detectably — crc mismatch) newest checkpoint makes
+    replay anchor further back and surface the skip in the report."""
+    from repro.resilience import flip_checkpoint_bit
+    model, wd0 = recorded_run
+    wd = _copy(wd0, tmp_path)
+    flip_checkpoint_bit(os.path.join(wd, "ckpts"), 10, seed=3)
+    report, _ = replay_train(model, OPT, DATA, wd, window=(11, 12),
+                             log=_quiet)
+    assert report.ok
+    assert report.anchor_step == 5
+    assert report.restore_skipped == [10]
+
+
+# ---------------------------------------------------------------------------
+# Slow tier (`make replay-verify`): chaos replay + CLI end to end.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_run_replays_bit_exact(tmp_path):
+    """Acceptance criterion: the full PR-6 chaos trajectory — nan_grad
+    rollback + batch skip, ckpt IO error + retry, straggler delay,
+    preemption kill/restart, on-disk checkpoint bit flip — recorded with
+    the flight recorder armed, then REPLAYED bit-exactly from checkpoint
+    anchors, including a window behind the corrupted checkpoint."""
+    plan = FaultPlan([
+        FaultSpec("nan_grad", at=7),
+        FaultSpec("ckpt_io_error", at=10),
+        FaultSpec("straggler", at=18, delay_s=2.0),
+        FaultSpec("preempt", at=25),
+        FaultSpec("ckpt_bit_flip", at=30),
+    ], seed=42)
+    model = build_model(TINY)
+    opt = OptConfig(peak_lr=3e-3, warmup_steps=5, total_steps=40,
+                    weight_decay=1e-4)
+    wd = str(tmp_path)
+
+    def run(steps):
+        rec = FlightRecorder(journal_path(wd))   # fresh, loads on attach
+        return train(model, opt, DATA, wd,
+                     LoopConfig(steps=steps, ckpt_every=5, log_every=100),
+                     log=_quiet, fault_plan=plan,
+                     recovery=RecoveryPolicy(), recorder=rec)
+
+    _, h1 = run(30)                    # preempt at 25 -> ckpt 26, exit
+    assert len(h1["loss"]) == 26
+    _, h2 = run(30)                    # restart appends bit-identically
+    assert h2["loss"][:26] == h1["loss"]
+    flips = plan.apply_bit_flips(os.path.join(wd, "ckpts"))
+    assert flips and flips[0][0] == 30
+    _, h3 = run(35)                    # restore falls back past the flip
+    assert h3["skipped_batches"] == [7]
+    assert h3["rollbacks"] >= 1
+    assert h3["restore_skipped"] == [30]
+
+    j = FlightRecorder.load(journal_path(wd))
+    assert j.steps() == list(range(35))          # healthy trajectory only
+    assert j.records[7]["data_index"] == 8       # batch 7 skipped forever
+
+    # full-window replay from the fresh-init anchor: every recorded step
+    # (including across the rollback, the preempt restart, and the
+    # fallback-past-corruption resume) regenerates its digests bit-exactly
+    report, _ = replay_train(model, opt, DATA, wd, log=_quiet)
+    assert report.ok, report.to_json()
+    assert report.verified_steps == 35
+    # interior window: anchors at a checkpoint, not at init
+    report2, _ = replay_train(model, opt, DATA, wd, window=(31, 35),
+                              log=_quiet)
+    assert report2.ok and report2.anchor_step >= 25
+
+
+@pytest.mark.slow
+def test_chaos_serve_poison_determinism(tmp_path):
+    """Serve-side determinism under quarantine: two recorded runs of the
+    same poisoned trace produce identical per-request digests, and the
+    quarantined request's digest covers exactly its delivered prefix."""
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, (8,)).astype(np.int32),
+                    max_new_tokens=6) for i in range(3)]
+    cfg = ServeConfig(max_len=64, n_slots=2, record=True)
+
+    def drive():
+        plan = FaultPlan([FaultSpec("poison_slot", at=2, rid=0)])
+        eng = ContinuousEngine(model, params, cfg, fault_plan=plan)
+        eng.submit(reqs[0]); eng.submit(reqs[1])
+        eng.step()
+        eng.submit(reqs[2])
+        while not eng.scheduler.idle:
+            eng.step()
+        return ({r: np.asarray(t) for r, t in eng.scheduler.finished.items()},
+                eng.latency_summary()["request_digests"], eng)
+
+    out1, d1, eng1 = drive()
+    out2, d2, _ = drive()
+    assert d1 == d2                               # chaos run is bit-stable
+    assert eng1.scheduler.status[0] == "evicted_nonfinite"
+    assert sorted(d1) == ["0", "1", "2"]
+    # clean engine digest of rid 1/2 matches the poisoned run's: quarantine
+    # never perturbed batch-mates' digests either
+    clean = ContinuousEngine(model, params, cfg)
+    clean.run(list(reqs))
+    dc = clean.latency_summary()["request_digests"]
+    assert d1["1"] == dc["1"] and d1["2"] == dc["2"]
+    # the victim's digest differs from clean (shorter stream), and its
+    # garbage token was never folded: re-folding the delivered prefix from
+    # the clean engine's per-step digests is out of scope here, but the
+    # digest must at least be a pure function of the delivered tokens
+    assert len(out1[0]) < 6 and d1["0"] != dc["0"]
+
+
+@pytest.mark.slow
+def test_launch_replay_cli_end_to_end(tmp_path):
+    """launch.train --record -> launch.replay --verify (exit 0) ->
+    journal tamper -> --verify exit 1 + --bisect report file."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    wd = str(tmp_path / "run")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "smollm-135m", "--smoke", "--steps", "8", "--seq-len", "16",
+            "--batch", "4", "--ckpt-every", "4", "--workdir", wd,
+            "--record"]
+    subprocess.run(base, check=True, env=env, capture_output=True)
+    assert os.path.exists(journal_path(wd))
+
+    replay = [sys.executable, "-m", "repro.launch.replay", "--arch",
+              "smollm-135m", "--smoke", "--steps", "8", "--seq-len", "16",
+              "--batch", "4", "--workdir", wd]
+    r = subprocess.run(replay + ["--verify"], env=env, capture_output=True,
+                       text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    j = FlightRecorder.load(journal_path(wd))
+    rec = j.records[5]
+    leaves = FlightRecorder.record_leaves(rec)
+    leaves[1] ^= 1 << 9
+    rec["leaves"] = "".join(f"{v:08x}" for v in leaves)
+    j.flush()
+    r = subprocess.run(replay + ["--verify"], env=env, capture_output=True,
+                       text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    rep = str(tmp_path / "forensics.json")
+    r = subprocess.run(replay + ["--bisect", "--report", rep], env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    with open(rep) as f:
+        out = json.load(f)
+    assert out["kind"] == "forensics_report"
+    assert out["localization"]["step"] == 5
+    assert [l["index"] for l in out["localization"]["leaves"]] == [1]

@@ -239,6 +239,74 @@ def test_bit_flip_is_seed_deterministic(tmp_path):
                                                                     seed=9)
 
 
+def test_restore_latest_surfaces_skipped_steps(tmp_path):
+    """Walking past a corrupted checkpoint must be VISIBLE: the skipped
+    steps (and reasons) land on the Checkpointer, and the train loop
+    persists them in history['restore_skipped'] (tested end to end in
+    tests/test_replay.py)."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=True)
+    ck.save(2, _tree(2.0), blocking=True)
+    flip_checkpoint_bit(str(tmp_path), 2, seed=3)
+    step, _ = ck.restore_latest(_tree(), log=lambda *_: None)
+    assert step == 1
+    assert ck.last_restore_skipped == [2]
+    assert ck.last_restore_failures[0][0] == 2
+    assert "crc32" in ck.last_restore_failures[0][1]
+    # a later clean restore resets the record
+    ck2 = Checkpointer(str(tmp_path))
+    step, _ = ck2.restore_latest(_tree(), log=lambda *_: None)
+    assert ck2.last_restore_skipped == [2]
+    import shutil
+    shutil.rmtree(str(tmp_path / "step_0000000002"))
+    step, _ = ck2.restore_latest(_tree())
+    assert step == 1 and ck2.last_restore_skipped == []
+
+
+def test_journal_flush_survives_kill_mid_write(tmp_path, monkeypatch):
+    """Flight-journal crash safety (DESIGN.md §8, same contract as atomic
+    checkpoint dirs): a kill at ANY point of flush() — during the tmp
+    write or at the rename — leaves the previous intact journal visible
+    and no tmp debris; the next flush lands everything."""
+    from repro.resilience import FlightRecorder, journal_path
+    path = journal_path(str(tmp_path))
+    rec = FlightRecorder(path)
+    rec.attach({"w": jnp.zeros((4,), jnp.float32)})
+    mk = lambda s: {"loss_bits": np.uint32(s), "grad_norm_bits": np.uint32(s),
+                    "leaf_digests": np.asarray([s], np.uint32)}
+    rec.record_step(0, 0, mk(11))
+    rec.record_step(1, 1, mk(22))
+    rec.flush()
+
+    rec.record_step(2, 2, mk(33))
+    real_replace = os.replace
+
+    def die(*a, **k):
+        raise OSError("killed at rename")
+    # kill #1: at the rename — tmp written, never published
+    monkeypatch.setattr(os, "replace", die)
+    with pytest.raises(OSError, match="killed at rename"):
+        rec.flush()
+    monkeypatch.setattr(os, "replace", real_replace)
+    assert not os.path.exists(path + ".tmp")      # no debris
+    on_disk = FlightRecorder.load(path)
+    assert on_disk.steps() == [0, 1]              # previous journal intact
+    assert on_disk.torn_lines == 0
+
+    # kill #2: mid tmp write (before the fsync/rename ever happens)
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (_ for _ in ()).throw(
+        OSError("killed mid-write")))
+    with pytest.raises(OSError, match="killed mid-write"):
+        rec.flush()
+    monkeypatch.setattr(os, "fsync", real_fsync)
+    assert not os.path.exists(path + ".tmp")
+    assert FlightRecorder.load(path).steps() == [0, 1]
+
+    rec.flush()                                   # recovery: all three land
+    assert FlightRecorder.load(path).steps() == [0, 1, 2]
+
+
 def test_injected_ckpt_io_error_then_retry(tmp_path):
     plan = FaultPlan([FaultSpec("ckpt_io_error", at=5)])
     ck = Checkpointer(str(tmp_path), io_fault=plan.io_fault)
