@@ -2,16 +2,19 @@
 # `python -m benchmarks.*` invocations don't need it spelled out.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-faults replay-verify bench bench-fast bench-all check-bench
+.PHONY: test test-all test-faults replay-verify bench bench-fast bench-all check-bench audit
 
 # Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
-# The bench-schema check runs first — a malformed BENCH_*.json trajectory
+# The whole-repo multiplication audit runs first and refreshes AUDIT.json,
+# so the bench-schema check that follows validates a report whose source
+# fingerprints match the tree being tested (check_bench_schema treats a
+# stale AUDIT.json as a failure). A malformed BENCH_*.json trajectory
 # point fails the tier before any test time is spent. The chaos suite
 # (slow-marked, but minutes not hours) rides in the default gate too:
 # resilience regressions should not wait for `test-all` — and so does the
 # replay-verify gate (a seeded chaos run with the flight recorder armed,
 # replayed from checkpoint anchors and verified bit-exactly).
-test: check-bench test-faults replay-verify
+test: audit check-bench test-faults replay-verify
 	$(PY) -m pytest -x -q
 
 # Seeded end-to-end fault-injection runs (tests/test_resilience.py):
@@ -30,9 +33,18 @@ replay-verify:
 test-all: check-bench
 	$(PY) -m pytest -q -m "slow or not slow"
 
-# Validate every repo-root BENCH_*.json against the trajectory schema.
+# Validate every repo-root BENCH_*.json against the trajectory schema
+# (and AUDIT.json against the audit schema + source-fingerprint freshness).
 check-bench:
 	$(PY) -m benchmarks.check_bench_schema
+
+# Whole-repo multiplication-provenance sweep (repro.launch.audit): every
+# registry family x PA mode across train/optimizer/attention/decode, plus
+# shard_map data-parallel and compiled-HLO targets. Rewrites AUDIT.json at
+# the repo root; exits non-zero if any full-PA target has a tensor-shaped
+# multiply or a PA contract error.
+audit:
+	$(PY) -m repro.launch.audit
 
 # Regenerate every perf-trajectory point (all benchmarks/*_bench.py), then
 # validate the files just written.

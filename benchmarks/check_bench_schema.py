@@ -36,8 +36,18 @@ section — the flight-recorder gate (DESIGN.md §8) runs the trace twice on
 a recording engine and both runs must produce identical per-request
 digests (``identical: true``, with the folded digest published).
 
+``AUDIT.json`` (the whole-repo multiplication-audit baseline written by
+`make audit` — ``repro.launch.audit``, DESIGN.md §9) is validated here
+too: schema, full family x PA-mode coverage, at least one shard_map and
+one compiled-HLO target, ``tensor_total == 0`` and zero contract errors
+on EVERY target, and source-fingerprint freshness over
+``src/repro/analysis/`` plus every audited subsystem — a PR that edits a
+hot path and skips `make audit` fails the tier exactly like a stale
+BENCH file.
+
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
-or import ``validate_report`` / ``validate_file`` from tests.
+or import ``validate_report`` / ``validate_file`` /
+``validate_audit_file`` from tests.
 """
 from __future__ import annotations
 
@@ -299,6 +309,133 @@ def validate_file(path: str) -> list:
     return errs
 
 
+# ---------------------------------------------------------------------------
+# AUDIT.json — the whole-repo multiplication-audit baseline (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+# Sources whose edits can change any audited program: the analysis
+# subsystem itself plus every subsystem the sweep traces. A fingerprint
+# mismatch means AUDIT.json was not regenerated after the edit.
+AUDIT_FINGERPRINT_DIRS = (
+    "analysis", "core", "kernels", "kernels/flash_attention",
+    "kernels/pa_softmax", "kernels/pam_eltwise", "kernels/pam_matmul",
+    "kernels/pam_optim", "models", "optim", "train", "serve",
+    "resilience", "launch",
+)
+
+_AUDIT_FAMILIES = ("decoder", "encdec", "hybrid", "rwkv", "vision_lm")
+_AUDIT_MODES = ("approx", "full")
+_AUDIT_KINDS = ("jaxpr", "hlo", "shard_map")
+
+
+def audit_fingerprints(root: str = _ROOT) -> dict:
+    return {d: source_fingerprint(d, root) for d in AUDIT_FINGERPRINT_DIRS}
+
+
+def validate_audit_report(report, name: str = "AUDIT.json") -> list:
+    """Schema + invariant checks for the audit baseline (freshness is
+    checked separately in ``validate_audit_file``)."""
+    errs = []
+    if not isinstance(report, dict):
+        return [f"{name}: top level is not a JSON object"]
+    if report.get("kind") != "audit":
+        errs.append(f"{name}: kind must be 'audit'")
+    if report.get("schema_version") != 1:
+        errs.append(f"{name}: schema_version must be 1, got "
+                    f"{report.get('schema_version')!r}")
+    for key in ("generated_utc", "backend"):
+        if not isinstance(report.get(key), str):
+            errs.append(f"{name}: missing/invalid '{key}'")
+    if not _is_num(report.get("device_count")):
+        errs.append(f"{name}: device_count must be numeric")
+
+    fps = report.get("fingerprints")
+    if not isinstance(fps, dict) or not fps:
+        errs.append(f"{name}: missing 'fingerprints' object")
+    else:
+        missing = set(AUDIT_FINGERPRINT_DIRS) - set(fps)
+        if missing:
+            errs.append(f"{name}: fingerprints missing dirs "
+                        f"{sorted(missing)}")
+
+    targets = report.get("targets")
+    if not isinstance(targets, dict) or not targets:
+        return errs + [f"{name}: missing/empty 'targets' object"]
+
+    for tname, t in sorted(targets.items()):
+        if not isinstance(t, dict):
+            errs.append(f"{name}: target '{tname}' is not an object")
+            continue
+        if t.get("kind") not in _AUDIT_KINDS:
+            errs.append(f"{name}: target '{tname}' kind must be one of "
+                        f"{_AUDIT_KINDS}")
+        if t.get("tensor_total") != 0:
+            errs.append(
+                f"{name}: target '{tname}' tensor_total is "
+                f"{t.get('tensor_total')!r} — a multiplication regressed "
+                f"into a full-PA program (sites: {t.get('tensor_sites')})")
+        contract = t.get("contract")
+        if not isinstance(contract, dict):
+            errs.append(f"{name}: target '{tname}' missing 'contract'")
+        elif contract.get("errors") != 0:
+            errs.append(f"{name}: target '{tname}' has "
+                        f"{contract.get('errors')!r} PA-contract errors")
+        if not _is_num(t.get("pow2")):
+            errs.append(f"{name}: target '{tname}' pow2 must be numeric")
+
+    for fam in _AUDIT_FAMILIES:
+        for mode in _AUDIT_MODES:
+            if f"{fam}/{mode}/train" not in targets:
+                errs.append(f"{name}: missing coverage — no "
+                            f"'{fam}/{mode}/train' target")
+    shard = [t for t in targets.values() if t.get("kind") == "shard_map"]
+    if not shard:
+        errs.append(f"{name}: no shard_map multi-device target")
+    elif not any(_is_num(t.get("collective_count"))
+                 and t["collective_count"] > 0 for t in shard):
+        errs.append(f"{name}: shard_map targets contain no collectives — "
+                    f"the audit-survives-collectives invariant is vacuous")
+    if not any(t.get("kind") == "hlo" for t in targets.values()):
+        errs.append(f"{name}: no compiled-HLO-verified target")
+
+    totals = report.get("totals")
+    if not isinstance(totals, dict):
+        errs.append(f"{name}: missing 'totals' object")
+    else:
+        want = sum(t.get("tensor_total", 0) for t in targets.values()
+                   if isinstance(t, dict))
+        if totals.get("tensor_total") != want:
+            errs.append(f"{name}: totals.tensor_total "
+                        f"{totals.get('tensor_total')!r} != sum over "
+                        f"targets ({want})")
+        if totals.get("violating_targets"):
+            errs.append(f"{name}: totals.violating_targets is non-empty: "
+                        f"{totals['violating_targets']}")
+    return errs
+
+
+def validate_audit_file(path: str, root: str = _ROOT) -> list:
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{name}: unreadable ({e})"]
+    errs = validate_audit_report(report, name)
+    fps = report.get("fingerprints")
+    if isinstance(fps, dict):
+        for d in AUDIT_FINGERPRINT_DIRS:
+            got = fps.get(d)
+            if isinstance(got, str):
+                want = source_fingerprint(d, root)
+                if got != want:
+                    errs.append(
+                        f"{name}: stale — fingerprint for src/repro/{d} "
+                        f"{got!r} does not match the current sources "
+                        f"({want!r}); re-run `make audit`")
+    return errs
+
+
 def bench_files(root: str = _ROOT) -> list:
     return sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
 
@@ -312,6 +449,13 @@ def main() -> int:
     errs = []
     for path in files:
         errs.extend(validate_file(path))
+    audit_path = os.path.join(_ROOT, "AUDIT.json")
+    if os.path.exists(audit_path):
+        errs.extend(validate_audit_file(audit_path))
+        files = files + [audit_path]
+    else:
+        errs.append("AUDIT.json: missing — run `make audit` (the "
+                    "multiplication-audit baseline is part of the tier)")
     for e in errs:
         print(f"check_bench_schema: {e}", file=sys.stderr)
     if not errs:

@@ -15,7 +15,7 @@ Correctness gates the file's existence (exit nonzero, no JSON on failure):
     chain (same PA ops, fused layout — parity is the §5 contract),
   * extreme ±1e20 gradients must stay finite,
   * the update jaxpr must audit multiplication-free
-    (``launch.hlo_stats.jaxpr_mul_stats``: zero tensor-shaped mul-family
+    (``repro.analysis.jaxpr_mul_stats``: zero tensor-shaped mul-family
     ops on both engines, O(1) scalar schedule and power-of-two literal
     scales exempt).
 
@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.core import PAConfig
 from repro.kernels._backend import use_interpret
 from repro.kernels import autotune
-from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.analysis import jaxpr_mul_stats
 from repro.optim import OptConfig, adamw_update, init_opt_state
 from .common import Gates, emit, interleaved_min_ms
 from .check_bench_schema import pam_optim_fingerprint, validate_file

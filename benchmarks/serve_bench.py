@@ -230,10 +230,37 @@ def main(argv=None) -> None:
             "digest_fold": f"0x{fold:08x}",
         }
 
+    def audit_shard_map():
+        # Slot-pool data parallelism: the decode+sample step shard_mapped
+        # over a forced 4-device mesh (cache leaves sharded on their slot
+        # dim) must stay at zero tensor multiplies. Subprocess, because the
+        # device-count flag must precede jax init (repro.analysis.shard_check).
+        import json as _json
+        import subprocess
+        import sys as _sys
+        proc = subprocess.run(
+            [_sys.executable, "-m", "repro.analysis.shard_check"],
+            capture_output=True, text=True, timeout=600,
+            env={**os.environ, "PYTHONPATH": "src"})
+        assert proc.returncode in (0, 1), (
+            f"shard_check produced no report:\n{proc.stderr[-2000:]}")
+        rep = _json.loads(proc.stdout)
+        dp = rep["checks"]["decode_dp"]
+        assert dp["tensor_total"] == 0, (
+            f"shard_mapped decode step emits tensor multiplies: "
+            f"{dp.get('violations')}")
+        state["shard_audit"] = {"device_count": rep["device_count"],
+                                "tensor_total": dp["tensor_total"],
+                                "pow2": dp["pow2"]}
+
     gates.run("token_parity_continuous_vs_oneshot", parity)
     gates.run("token_parity_full_pa", pa_parity)
     gates.run("decode_step_zero_tensor_mul_full_pa", audit)
     gates.run("decode_step_zero_tensor_mul_full_pa_sampled", audit_sampled)
+    if not args.smoke:
+        # tier-1 already proves this via the shard_audit_report fixture
+        # gates; the ~30 s subprocess trace rides the full bench only.
+        gates.run("decode_step_zero_tensor_mul_shard_map", audit_shard_map)
     gates.run("quarantine_parity_under_poison", quarantine)
     gates.run("determinism_request_digests", determinism)
 

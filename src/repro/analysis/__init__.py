@@ -1,0 +1,32 @@
+"""Static-analysis subsystem: the multiplication-free claim as a
+machine-checked invariant (DESIGN.md §9).
+
+Four layers, lowest to highest:
+
+  * ``analysis.audit``     — jaxpr-level multiplication auditor with full
+    provenance (non-library frame chains, kernel-family attribution,
+    sub-jaxpr context) and the shared kernel-family path rules.
+  * ``analysis.contract``  — PA numeric-contract linter: static
+    dtype-and-provenance flow over a jaxpr flagging operations outside
+    the documented PA contract (non-pow2 divisors, 2^129 wrap-risk
+    literals, bitcast width mismatches, scalar multiplies inside scans).
+  * ``analysis.hlo_audit`` — post-compile verification that XLA has not
+    re-introduced multiplies after fusion/canonicalization, plus the
+    collective wire-bytes model (moved from ``launch.hlo_stats``).
+  * ``analysis.shard_check`` — subprocess entry point that forces a
+    4-device host platform and proves the audit survives ``shard_map``
+    collectives (grad psum, norm all-reduce).
+
+``launch.audit`` drives the whole-repo sweep (`make audit` → AUDIT.json).
+``launch.hlo_stats`` remains as a deprecation shim over this package.
+"""
+from .audit import (FAMILIES, MulSite, format_violations, jaxpr_mul_stats,
+                    leaf_family, site_family)
+from .contract import contract_lint
+from .hlo_audit import collective_stats, hlo_mul_stats
+
+__all__ = [
+    "FAMILIES", "MulSite", "format_violations", "jaxpr_mul_stats",
+    "leaf_family", "site_family", "contract_lint", "collective_stats",
+    "hlo_mul_stats",
+]

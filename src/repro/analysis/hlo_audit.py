@@ -1,0 +1,278 @@
+"""Compiled-HLO verification (layer 3 of the analysis subsystem,
+DESIGN.md §9) and the collective wire-bytes model (moved here from
+``launch.hlo_stats``).
+
+The jaxpr auditor proves the program we *staged* is multiplication-free;
+XLA then fuses, canonicalizes, and rewrites it. ``hlo_mul_stats`` parses
+``lowered.compile().as_text()`` and verifies the compiler has not
+re-introduced ``multiply``/``divide``/``dot``/``convolution``/``rsqrt``
+on floating tensor shapes — the honest form of the paper's claim on a
+compiled backend (ROADMAP item 5).
+
+The pow2 exemption must be re-proved at this level: a ``pow2_mul`` that
+the PA layer expressed as an exponent add may be constant-folded by XLA
+back into a literal ``multiply(x, 2^-23)``, which is still exempt — a
+pow2 constant scale is an exponent add in any reasonable lowering. So
+operands are resolved through broadcast/convert/copy/reshape/transpose
+chains to scalar constants, **rounded through float32** before the
+pow2 test (HLO prints f32 constants at decimal precision — ``2^-23``
+prints as ``1.1920929e-07``, which is not a power of two as a double),
+and exempted under the same rule as the jaxpr audit: either multiply
+operand, only the divisor of a divide; dot/convolution/rsqrt never.
+
+Resolution is scoped per HLO computation (fusion bodies reuse parameter
+names); an operand that cannot be resolved to a scalar constant is NOT
+exempt — unresolved means unproven.
+
+Collectives: cost_analysis() does not attribute collective bytes, so we
+regex the compiled-HLO module text: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op contributes
+ring-model bytes-on-the-wire per device:
+
+    all-reduce        2 (g-1)/g * bytes      (reduce-scatter + all-gather)
+    all-gather          (g-1)/g * result_bytes
+    reduce-scatter      (g-1)/g * operand_bytes (= result*g)
+    all-to-all          (g-1)/g * bytes
+    collective-permute  bytes
+
+where g is the replica-group size parsed from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .audit import _shorten, site_family
+
+# ---------------------------------------------------------------------------
+# Compiled-HLO multiplication audit.
+# ---------------------------------------------------------------------------
+
+# Ops that are multiplication work in compiled HLO. dot/convolution are
+# contractions (never exempt, any shape); rsqrt is never pow2-exempt.
+HLO_MUL_OPS = ("multiply", "divide", "dot", "convolution", "rsqrt")
+HLO_CONTRACTIONS = ("dot", "convolution")
+
+_FLOAT_DTYPES = {"f64", "f32", "f16", "bf16"}
+
+_HLO_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<op>[\w\-]+)\(")
+_HLO_SHAPE_RE = re.compile(r"^(\w+)\[([\d,]*)\]")
+_HLO_CONST_RE = re.compile(
+    r"constant\((-?(?:\d+\.?\d*|\.\d+)(?:[eE][+-]?\d+)?)\)")
+_HLO_META_RE = re.compile(
+    r'source_file="(?P<file>[^"]*)"\s+source_line=(?P<line>\d+)')
+_HLO_OPNAME_RE = re.compile(r'op_name="(?P<op>[^"]*)"')
+# A computation opens with `%name (...) -> ... {` or `ENTRY ... {`.
+_HLO_COMP_OPEN_RE = re.compile(r"^\s*(ENTRY\s|%?[\w.\-]+\s*\().*\{\s*$")
+
+# Value-preserving (for the scalar-constant pow2 question) unary chains.
+_RESOLVE_THROUGH = ("broadcast", "convert", "copy", "reshape", "transpose")
+
+
+def _is_pow2_f32(v: float) -> bool:
+    f = abs(float(np.float32(v)))
+    return f > 0 and math.isfinite(f) and math.frexp(f)[0] == 0.5
+
+
+def _operands(after_paren: str) -> List[str]:
+    """Operand names from the text following ``op(`` on a def line."""
+    args = after_paren.split("metadata=")[0]
+    args = args.split("), ")[0]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _parse_computations(hlo_text: str) -> List[List[dict]]:
+    """Split module text into computations; each is a list of instruction
+    records {name, op, dtype, dims, operands, const, file, line, op_name}."""
+    comps: List[List[dict]] = []
+    cur: Optional[List[dict]] = None
+    for line in hlo_text.splitlines():
+        if _HLO_COMP_OPEN_RE.match(line) and "=" not in line.split("{")[0]:
+            cur = []
+            comps.append(cur)
+            continue
+        m = _HLO_DEF_RE.match(line)
+        if m is None:
+            continue
+        if cur is None:          # instruction outside any header — tolerate
+            cur = []
+            comps.append(cur)
+        shape = m.group("shape")
+        sm = _HLO_SHAPE_RE.match(shape)
+        dtype, dims = (sm.group(1), sm.group(2)) if sm else (None, None)
+        rest = line[m.end():]
+        const = None
+        if m.group("op") == "constant" and dims == "":
+            cm = _HLO_CONST_RE.search(line)
+            if cm:
+                try:
+                    const = float(cm.group(1))
+                except ValueError:
+                    const = None
+        meta = _HLO_META_RE.search(line)
+        opn = _HLO_OPNAME_RE.search(line)
+        cur.append({
+            "name": m.group("name"), "op": m.group("op"),
+            "dtype": dtype, "dims": dims, "operands": _operands(rest),
+            "const": const,
+            "file": meta.group("file") if meta else None,
+            "line": int(meta.group("line")) if meta else None,
+            "op_name": opn.group("op") if opn else None,
+        })
+    return comps
+
+
+def _resolve_const(name: str, defs: Dict[str, dict],
+                   depth: int = 12) -> Optional[float]:
+    """Resolve an operand to a scalar float constant through
+    value-preserving unary chains, else None (unproven)."""
+    while depth > 0:
+        ins = defs.get(name)
+        if ins is None:
+            return None
+        if ins["const"] is not None:
+            return ins["const"]
+        if ins["op"] in _RESOLVE_THROUGH and ins["operands"]:
+            name = ins["operands"][0]
+            depth -= 1
+            continue
+        return None
+    return None
+
+
+def hlo_mul_stats(hlo_text: str) -> Dict:
+    """Audit compiled-HLO module text for multiplication ops.
+
+    Returns the same shape as ``jaxpr_mul_stats``: ``{"tensor": {op: n},
+    "scalar": {op: n}, "pow2": n, "integer": n, "tensor_total": n,
+    "tensor_sites": [...], "violations": [...], "by_family": {...}}``.
+    Violations carry ``metadata`` provenance (source file:line, op_name).
+    """
+    stats = {"tensor": defaultdict(int), "scalar": defaultdict(int),
+             "pow2": 0, "integer": 0}
+    by_family: Dict[str, int] = defaultdict(int)
+    violations: List[dict] = []
+
+    for comp in _parse_computations(hlo_text):
+        defs = {ins["name"]: ins for ins in comp}
+        for ins in comp:
+            op = ins["op"]
+            if op not in HLO_MUL_OPS:
+                continue
+            dtype, dims = ins["dtype"], ins["dims"]
+            if dtype is None or dtype not in _FLOAT_DTYPES:
+                stats["integer"] += 1
+                continue
+            if op not in HLO_CONTRACTIONS and dims == "":
+                stats["scalar"][op] += 1
+                continue
+            pow2_ok = False
+            if op == "multiply":
+                pow2_ok = any(
+                    (c := _resolve_const(o, defs)) is not None
+                    and _is_pow2_f32(c) for o in ins["operands"][:2])
+            elif op == "divide" and len(ins["operands"]) > 1:
+                c = _resolve_const(ins["operands"][1], defs)
+                pow2_ok = c is not None and _is_pow2_f32(c)
+            if op not in HLO_CONTRACTIONS and pow2_ok:
+                stats["pow2"] += 1
+                continue
+            site = "?"
+            if ins["file"]:
+                site = f"{_shorten(ins['file'])}:{ins['line']}"
+            fam = site_family(site)
+            stats["tensor"][op] += 1
+            by_family[fam] += 1
+            violations.append({
+                "prim": op, "site": site, "family": fam,
+                "frames": [site] if site != "?" else [],
+                "context": ["hlo"],
+                "shape": [int(d) for d in dims.split(",") if d.strip()],
+                "dtype": dtype, "op_name": ins["op_name"]})
+
+    sites = [f"{v['prim']}@{v['site']}" for v in violations]
+    return {"tensor": dict(stats["tensor"]), "scalar": dict(stats["scalar"]),
+            "pow2": stats["pow2"], "integer": stats["integer"],
+            "tensor_total": sum(stats["tensor"].values()),
+            "tensor_sites": sorted(set(sites)),
+            "violations": violations, "by_family": dict(by_family)}
+
+
+# ---------------------------------------------------------------------------
+# Collective wire-bytes model (regex over compiled-HLO text).
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+    re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> Dict:
+    """Returns {kind: {"count": n, "bytes": wire_bytes_per_device}} plus a
+    "total_bytes" entry. Skips `-done` halves of async pairs."""
+    out: Dict = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m is None or "-done(" in line:
+            continue
+        kind = m.group("kind")
+        g = _group_size(line, default_group)
+        if g <= 1 and kind != "collective-permute":
+            continue
+        result_bytes = _shape_bytes(m.group("shape"))
+        frac = (g - 1) / g if g > 1 else 1.0
+        if kind == "all-reduce":
+            wire = 2.0 * frac * result_bytes
+        elif kind == "all-gather":
+            wire = frac * result_bytes
+        elif kind == "reduce-scatter":
+            wire = frac * result_bytes * g
+        elif kind == "all-to-all":
+            wire = frac * result_bytes
+        else:  # collective-permute
+            wire = float(result_bytes)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += wire
+    total = sum(v["bytes"] for v in out.values())
+    result = {k: dict(v) for k, v in out.items()}
+    result["total_bytes"] = total
+    return result

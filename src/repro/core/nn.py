@@ -148,8 +148,12 @@ def pa_gelu(x, pa: PAConfig):
 
 
 def pa_relu(x, pa: PAConfig):
-    del pa  # max(x, 0) is already piecewise affine and multiplication-free.
-    return jnp.maximum(x, 0.0)
+    # relu is already piecewise affine, but jnp.maximum is off-limits: its
+    # JVP rule is mul(g, balanced_eq(...)) with a tensor div inside (the
+    # tie-splitting 0.5 subgradient), so the backward pass would multiply.
+    # where/select differentiates through select_n alone.
+    del pa
+    return jnp.where(x > 0, x, jnp.zeros_like(x))
 
 
 def pa_softplus(x, pa: PAConfig):

@@ -42,7 +42,7 @@ from repro.optim import OptConfig, opt_state_meta
 from repro.parallel.sharding import tree_shardings, tree_pspecs
 from repro.train import make_train_step
 from .mesh import make_production_mesh
-from .hlo_stats import collective_stats
+from repro.analysis import collective_stats
 
 DRY_PA = PAConfig(mode="full", impl="hw")
 

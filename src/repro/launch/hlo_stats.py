@@ -1,192 +1,18 @@
-"""Compiled-program statistics: collective traffic (for §Roofline) and the
-multiplication audit (for the paper's multiplication-free claim).
+"""DEPRECATED shim — the auditor moved to ``repro.analysis`` (DESIGN.md §9).
 
-``jaxpr_mul_stats`` walks a (Closed)Jaxpr — recursing through scan/cond/
-pjit/custom-vjp/pallas sub-jaxprs — and counts multiplication-family
-primitives (mul, div, pow, integer_pow, sqrt, rsqrt, square) on floating
-tensor outputs, plus contractions (dot_general, conv_general_dilated),
-which are multiplication work regardless of output shape. Exemptions,
-each implementable without a multiplier (contractions get none):
-
-  * scalar-shaped elementwise results — the O(1) per-step schedule (lr,
-    loss mean, bias-correction scalars);
-  * mul where either operand — and div where the DIVISOR — is a scalar
-    literal that is an exact power of two: an exponent add on the bit
-    pattern (``floatbits.pow2_mul`` semantics; the paper's "power-of-two
-    scales are exact under PAM"). ``2 / x`` is a real per-element
-    reciprocal and is not exempt;
-  * integer-dtype ops — addressing/bit arithmetic, not float compute.
-
-The full-PA train step must report ``tensor_total == 0``
-(tests/test_pam_optim.py's audit gate; DESIGN.md §5).
-
-Collectives: cost_analysis() does not attribute collective bytes, so we
-regex the compiled-HLO module text:
-every all-gather / all-reduce / reduce-scatter / all-to-all /
-collective-permute op contributes ring-model bytes-on-the-wire per device:
-
-    all-reduce        2 (g-1)/g * bytes      (reduce-scatter + all-gather)
-    all-gather          (g-1)/g * result_bytes
-    reduce-scatter      (g-1)/g * operand_bytes (= result*g)
-    all-to-all          (g-1)/g * bytes
-    collective-permute  bytes
-
-where g is the replica-group size parsed from the op's replica_groups.
+``jaxpr_mul_stats`` lives in ``repro.analysis.audit`` (now with full
+frame-chain provenance, kernel-family attribution, and sub-jaxpr context
+per violation); ``collective_stats`` lives in ``repro.analysis.hlo_audit``
+alongside the compiled-HLO multiplication audit. Import from
+``repro.analysis`` directly; this module re-exports for older call sites
+and will be removed once nothing imports it.
 """
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-from typing import Dict
+from repro.analysis.audit import (CONTRACTIONS, MUL_FAMILY,  # noqa: F401
+                                  _eqn_site, _is_pow2_scalar_literal,
+                                  jaxpr_mul_stats)
+from repro.analysis.hlo_audit import collective_stats  # noqa: F401
 
-import numpy as np
-import jax
-
-
-# ---------------------------------------------------------------------------
-# Multiplication audit (jaxpr-level).
-# ---------------------------------------------------------------------------
-
-MUL_FAMILY = ("mul", "div", "pow", "integer_pow", "sqrt", "rsqrt", "square")
-# Contractions are multiplication work regardless of output shape (a dot
-# producing a scalar still multiplies per element) — no exemptions apply.
-CONTRACTIONS = ("dot_general", "conv_general_dilated")
-
-
-def _is_pow2_scalar_literal(var) -> bool:
-    if not isinstance(var, jax.core.Literal):
-        return False
-    val = np.asarray(var.val)
-    if val.size != 1 or not np.issubdtype(val.dtype, np.floating):
-        return False
-    f = abs(float(val.reshape(())))
-    return f > 0 and np.isfinite(f) and np.frexp(f)[0] == 0.5
-
-
-def _eqn_site(eqn) -> str:
-    try:
-        frames = [f for f in eqn.source_info.traceback.frames
-                  if "site-packages" not in f.file_name]
-        f = frames[0]
-        return f"{f.file_name.split('/')[-1]}:{f.line_num}"
-    except Exception:   # noqa: BLE001 — source info is best-effort
-        return "?"
-
-
-def jaxpr_mul_stats(jaxpr) -> Dict:
-    """Audit a (Closed)Jaxpr for multiplication-family ops.
-
-    Returns ``{"tensor": {prim: n}, "scalar": {prim: n}, "pow2": n,
-    "integer": n, "tensor_total": n, "tensor_sites": [...]}`` where
-    ``tensor`` counts the violations — floating, tensor-shaped, not a
-    power-of-two literal scale — and ``tensor_sites`` holds one
-    ``prim@file:line`` entry per violation (dedup'd, for failure messages).
-    """
-    stats = {"tensor": defaultdict(int), "scalar": defaultdict(int),
-             "pow2": 0, "integer": 0}
-    sites = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            name = eqn.primitive.name
-            if name in MUL_FAMILY or name in CONTRACTIONS:
-                aval = eqn.outvars[0].aval
-                # The pow2 exemption is an exponent add: either mul operand,
-                # but ONLY the divisor of a div (2 / x is a real reciprocal).
-                pow2_ok = (
-                    (name == "mul" and any(_is_pow2_scalar_literal(v)
-                                           for v in eqn.invars))
-                    or (name == "div"
-                        and _is_pow2_scalar_literal(eqn.invars[1])))
-                if not np.issubdtype(np.dtype(aval.dtype), np.floating):
-                    stats["integer"] += 1
-                elif name in CONTRACTIONS:
-                    stats["tensor"][name] += 1
-                    sites.append(f"{name}@{_eqn_site(eqn)}")
-                elif aval.shape == ():
-                    stats["scalar"][name] += 1
-                elif pow2_ok:
-                    stats["pow2"] += 1
-                else:
-                    stats["tensor"][name] += 1
-                    sites.append(f"{name}@{_eqn_site(eqn)}")
-            for p in eqn.params.values():
-                for item in (p if isinstance(p, (tuple, list)) else (p,)):
-                    if isinstance(item, jax.core.ClosedJaxpr):
-                        walk(item.jaxpr)
-                    elif isinstance(item, jax.core.Jaxpr):
-                        walk(item)
-
-    walk(jaxpr.jaxpr if isinstance(jaxpr, jax.core.ClosedJaxpr) else jaxpr)
-    return {"tensor": dict(stats["tensor"]), "scalar": dict(stats["scalar"]),
-            "pow2": stats["pow2"], "integer": stats["integer"],
-            "tensor_total": sum(stats["tensor"].values()),
-            "tensor_sites": sorted(set(sites))}
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
-
-_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (?P<shape>\([^)]*\)|\S+)\s+"
-    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
-    r"collective-permute)(?:-start)?\(",
-    re.M)
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(text: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        n = 1
-        for d in dims.split(","):
-            if d.strip():
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _group_size(line: str, default: int) -> int:
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_RE.search(line)
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip()])
-    return default
-
-
-def collective_stats(hlo_text: str, default_group: int = 1) -> Dict:
-    """Returns {kind: {"count": n, "bytes": wire_bytes_per_device}} plus a
-    "total_bytes" entry. Skips `-done` halves of async pairs."""
-    out: Dict = defaultdict(lambda: {"count": 0, "bytes": 0.0})
-    for line in hlo_text.splitlines():
-        m = _OP_RE.match(line)
-        if m is None or "-done(" in line:
-            continue
-        kind = m.group("kind")
-        g = _group_size(line, default_group)
-        if g <= 1 and kind != "collective-permute":
-            continue
-        result_bytes = _shape_bytes(m.group("shape"))
-        frac = (g - 1) / g if g > 1 else 1.0
-        if kind == "all-reduce":
-            wire = 2.0 * frac * result_bytes
-        elif kind == "all-gather":
-            wire = frac * result_bytes
-        elif kind == "reduce-scatter":
-            wire = frac * result_bytes * g
-        elif kind == "all-to-all":
-            wire = frac * result_bytes
-        else:  # collective-permute
-            wire = float(result_bytes)
-        out[kind]["count"] += 1
-        out[kind]["bytes"] += wire
-    total = sum(v["bytes"] for v in out.values())
-    result = {k: dict(v) for k, v in out.items()}
-    result["total_bytes"] = total
-    return result
+__all__ = ["MUL_FAMILY", "CONTRACTIONS", "jaxpr_mul_stats",
+           "collective_stats"]

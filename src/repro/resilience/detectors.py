@@ -6,7 +6,7 @@ true multiply would — it silently turns into in-range garbage. So the
 guards that watch for it must (a) look at the BIT PATTERN, not rely on
 float comparisons downstream of PA ops, and (b) themselves add zero
 tensor-shaped multiplies, or enabling them would break the PR-4 full-PA
-audit (``launch.hlo_stats.jaxpr_mul_stats``).
+audit (``repro.analysis.jaxpr_mul_stats``).
 
 Everything here is integer compares on the f32 bitcast, in the spirit of
 ``kernels/pa_prims.py``:

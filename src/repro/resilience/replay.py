@@ -44,29 +44,10 @@ import jax.numpy as jnp
 
 from .recorder import (FlightRecorder, combine_digests, journal_path,
                        tree_leaf_digests, _hex)
-
-# Leaf-path substrings -> the kernel family (DESIGN.md §4 kernel inventory)
-# whose output stream feeds that leaf. ``opt`` state is written only by the
-# fused PA-AdamW kernel; attention projections by the PAM attention path;
-# matmul-heavy leaves by the PAM matmul; norm scales/biases by elementwise
-# PA ops. Forensics reports the family so a divergence points at a kernel
-# to cross-check, not just a tensor.
-_FAMILY_RULES = (
-    (("attn", "wq", "wk", "wv", "wo", "q_norm", "k_norm"), "pam_attention"),
-    (("mlp", "embed", "head", "moe", "expert"), "pam_matmul"),
-    (("norm", "scale", "bias"), "pam_eltwise"),
-)
-
-
-def leaf_family(path: str) -> str:
-    """Kernel family attribution for a state-tree leaf path."""
-    p = path.lower()
-    if "'opt'" in p or p.startswith("opt") or "['opt']" in p:
-        return "pam_optim"
-    for keys, fam in _FAMILY_RULES:
-        if any(k in p for k in keys):
-            return fam
-    return "pam_matmul"
+# Kernel-family attribution (leaf-path rules) is shared with the static
+# auditor — one taxonomy serves both the replay bisector and the
+# multiplication audit. Re-exported here for existing call sites.
+from repro.analysis.audit import leaf_family  # noqa: F401
 
 
 @dataclasses.dataclass

@@ -402,16 +402,20 @@ class ContinuousEngine:
                 for rid, d in sorted(self._digests.items())}
         return out
 
-    def decode_step_mul_stats(self) -> Dict:
-        """Multiplication audit of the fused decode+sample step (the
-        serving hot loop): trace ``_step_impl`` and count tensor-shaped
-        mul-family ops (launch.hlo_stats.jaxpr_mul_stats). Full-PA mode
-        must report ``tensor_total == 0`` — including the non-finite
-        guard, which is integer exponent-field compares only."""
-        from repro.launch.hlo_stats import jaxpr_mul_stats
+    def decode_step_jaxpr(self):
+        """Trace the fused decode+sample step (the serving hot loop) —
+        the program the audit layers (repro.analysis) inspect."""
         n = self.cfg.n_slots
         args = [self.params, self.cache, jnp.zeros((n, 1), jnp.int32),
                 jnp.zeros((n,), jnp.int32)]
         if self.cfg.temperature > 0:
             args += [jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32)]
-        return jaxpr_mul_stats(jax.make_jaxpr(self._step_impl)(*args))
+        return jax.make_jaxpr(self._step_impl)(*args)
+
+    def decode_step_mul_stats(self) -> Dict:
+        """Multiplication audit of the fused decode+sample step: count
+        tensor-shaped mul-family ops (repro.analysis.jaxpr_mul_stats).
+        Full-PA mode must report ``tensor_total == 0`` — including the
+        non-finite guard, which is integer exponent-field compares only."""
+        from repro.analysis import jaxpr_mul_stats
+        return jaxpr_mul_stats(self.decode_step_jaxpr())

@@ -5,6 +5,9 @@ import sys
 # process with XLA_FLAGS set; never set it here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import json
+import subprocess
+
 import numpy as np
 import pytest
 
@@ -12,3 +15,23 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def shard_audit_report():
+    """Parsed JSON report from one shared ``repro.analysis.shard_check``
+    subprocess run (trace-only). A subprocess because the module must set
+    ``--xla_force_host_platform_device_count=4`` before jax initialises —
+    impossible in the test process, where jax is already live on one CPU
+    device. Session-scoped: the shard_map gates in test_pam_optim.py and
+    test_resilience.py share a single ~30 s trace."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.shard_check"],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..",
+                                        "src")},
+    )
+    assert proc.returncode in (0, 1), \
+        f"shard_check did not produce a report:\n{proc.stderr[-2000:]}"
+    return json.loads(proc.stdout)

@@ -124,7 +124,7 @@ class TestShardingRules:
 
 class TestHloStats:
     def test_collective_parse(self):
-        from repro.launch.hlo_stats import collective_stats
+        from repro.analysis import collective_stats
         hlo = """
   %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %x), replica_groups={{0,1,2,3}}
   %ag = bf16[16,256]{1,0} all-gather(bf16[4,256]{1,0} %y), replica_groups=[4,8]<=[32]

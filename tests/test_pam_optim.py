@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.core import PAConfig
 from repro.core import floatbits as fb
-from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.analysis import jaxpr_mul_stats
 from repro.optim import OptConfig, adamw_update, init_opt_state
 
 from benchmarks.seed_reference import seed_pa_adamw_update
@@ -193,7 +193,7 @@ def test_pa_grad_clip0_norm_is_multiplication_free(rng):
 def test_full_pa_train_step_multiplication_audit(grad_clip, microbatches):
     """Zero tensor-shaped mul/div/pow/sqrt/square ops anywhere in the
     full-PA train step jaxpr (recursing through scan/pjit/custom-vjp
-    sub-jaxprs). Exempt, as documented in launch/hlo_stats.py: the O(1)
+    sub-jaxprs). Exempt, as documented in repro/analysis/audit.py: the O(1)
     scalar schedule, power-of-two literal scales (exact exponent adds), and
     integer addressing arithmetic."""
     from repro.train import TrainConfig
@@ -236,3 +236,19 @@ def test_audit_catches_native_multiplies(rng):
     s2 = jaxpr_mul_stats(ok)
     assert s2["tensor_total"] == 0 and s2["pow2"] == 2
     assert s2["scalar"].get("mul") == 1
+
+
+def test_shard_map_dp_train_step_audit_zero(shard_audit_report):
+    """The audit invariant survives shard_map data parallelism: the 4-way
+    DP train step (per-shard grads, gradient psum, pow2 shard mean, PA
+    partial-norm all-reduce, fused PA-AdamW) stays at zero tensor-shaped
+    multiplies — and actually contains the collectives (a psum-free program
+    would prove nothing). Runs in a subprocess with a forced 4-device host
+    platform (see conftest.shard_audit_report)."""
+    rep = shard_audit_report
+    assert rep["device_count"] >= 4, rep
+    check = rep["checks"]["train_dp"]
+    assert check["tensor_total"] == 0, check.get("violations")
+    assert check["collective_count"] > 0
+    assert check["pow2"] > 0          # pow2 shard mean + PA kernel scales
+    assert rep["ok"], rep["checks"].keys()

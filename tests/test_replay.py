@@ -31,7 +31,7 @@ from repro.optim import OptConfig, init_opt_state
 from repro.data import DataConfig
 from repro.train import LoopConfig, TrainConfig, train, make_train_step
 from repro.serve import ContinuousEngine, Request, ServeConfig
-from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.analysis import jaxpr_mul_stats
 from repro.resilience import (FaultPlan, FaultSpec, FlightRecorder,
                               RecoveryPolicy, bisect, combine_digests,
                               fold_token, journal_path, leaf_family,

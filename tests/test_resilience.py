@@ -26,7 +26,7 @@ from repro.data import DataConfig, SyntheticLM
 from repro.train import LoopConfig, TrainConfig, train, make_train_step
 from repro.serve import ContinuousEngine, QueueFullError, Request, ServeConfig
 from repro.checkpoint import Checkpointer
-from repro.launch.hlo_stats import jaxpr_mul_stats
+from repro.analysis import jaxpr_mul_stats
 from repro.resilience import (FAULT_KINDS, FaultPlan, FaultSpec,
                               LossSpikeDetector, RecoveryPolicy,
                               UnrecoverableTrainingError, data_index,
@@ -129,6 +129,20 @@ def test_full_pa_decode_step_audit_zero_with_guard():
                                            temperature=temp))
         s = eng.decode_step_mul_stats()
         assert s["tensor_total"] == 0, (temp, s["tensor_sites"])
+
+
+def test_shard_map_health_and_decode_audit_zero(shard_audit_report):
+    """The bit-level non-finite sentinel stays audit-exempt under shard_map
+    collectives (integer exponent-field compares never become float work in
+    a DP psum step), and the slot-sharded decode+sample step is clean too.
+    Shares the subprocess run with the test_pam_optim gate (session-scoped
+    fixture)."""
+    rep = shard_audit_report
+    health = rep["checks"]["train_dp_health"]
+    assert health["tensor_total"] == 0, health.get("violations")
+    assert health["collective_count"] > 0
+    decode = rep["checks"]["decode_dp"]
+    assert decode["tensor_total"] == 0, decode.get("violations")
 
 
 # ---------------------------------------------------------------------------
