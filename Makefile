@@ -2,7 +2,7 @@
 # `python -m benchmarks.*` invocations don't need it spelled out.
 PY := PYTHONPATH=src python
 
-.PHONY: test test-all test-faults replay-verify bench bench-fast bench-all check-bench audit
+.PHONY: test test-all test-faults replay-verify bench bench-fast bench-all check-bench audit lint-pa
 
 # Tier-1: the default gate (skips tests marked `slow`, see pytest.ini).
 # The whole-repo multiplication audit runs first and refreshes AUDIT.json,
@@ -14,7 +14,7 @@ PY := PYTHONPATH=src python
 # resilience regressions should not wait for `test-all` — and so does the
 # replay-verify gate (a seeded chaos run with the flight recorder armed,
 # replayed from checkpoint anchors and verified bit-exactly).
-test: audit check-bench test-faults replay-verify
+test: lint-pa audit check-bench test-faults replay-verify
 	$(PY) -m pytest -x -q
 
 # Seeded end-to-end fault-injection runs (tests/test_resilience.py):
@@ -45,6 +45,13 @@ check-bench:
 # multiply or a PA contract error.
 audit:
 	$(PY) -m repro.launch.audit
+
+# Fast standalone PA gate (DESIGN.md §10): contract lint + abstract-
+# interpretation range analysis over the traced train/optimizer programs
+# — no decode-engine build, no shard_map subprocess, no XLA compile, no
+# AUDIT.json write. Fails on any contract error or reachable PAM wrap.
+lint-pa:
+	$(PY) -m repro.launch.audit --lint
 
 # Regenerate every perf-trajectory point (all benchmarks/*_bench.py), then
 # validate the files just written.

@@ -38,12 +38,18 @@ digests (``identical: true``, with the folded digest published).
 
 ``AUDIT.json`` (the whole-repo multiplication-audit baseline written by
 `make audit` — ``repro.launch.audit``, DESIGN.md §9) is validated here
-too: schema, full family x PA-mode coverage, at least one shard_map and
-one compiled-HLO target, ``tensor_total == 0`` and zero contract errors
-on EVERY target, and source-fingerprint freshness over
+too: schema (version 2), full family x PA-mode coverage, at least one
+shard_map and one compiled-HLO target, ``tensor_total == 0`` and zero
+contract errors on EVERY target, and source-fingerprint freshness over
 ``src/repro/analysis/`` plus every audited subsystem — a PR that edits a
 hot path and skips `make audit` fails the tier exactly like a stale
-BENCH file.
+BENCH file. Schema v2 (DESIGN.md §10) additionally requires every jaxpr
+target to carry a ``range_safety`` verdict (wrap count must be 0 — a
+reachable unguarded 2^129 PAM wrap cannot be committed as baseline) and
+``error_certificates`` with finite, width-monotone f32/f16/bf16 bounds,
+plus the ``declared_ranges`` block those verdicts are conditional on,
+and at least one recognised PAM site on every full-mode train target
+(the analyzer must not be blind).
 
 Usage: ``python -m benchmarks.check_bench_schema`` (exit 1 on violations),
 or import ``validate_report`` / ``validate_file`` /
@@ -332,6 +338,64 @@ def audit_fingerprints(root: str = _ROOT) -> dict:
     return {d: source_fingerprint(d, root) for d in AUDIT_FINGERPRINT_DIRS}
 
 
+_ABSINT_WIDTHS = ("f32", "f16", "bf16")
+_ABSINT_VERDICTS = ("safe", "denormal", "overflow")
+
+
+def _validate_absint_sections(t, tname: str, name: str) -> list:
+    """v2: every jaxpr target carries a ``range_safety`` verdict and a
+    per-mantissa-width ``error_certificates`` section (DESIGN.md §10).
+    Reachable unguarded PAM wrap fails the baseline outright; certificate
+    bounds must be finite, non-negative, and monotone in mantissa width
+    (a narrower mantissa can never have a SMALLER worst-case bound)."""
+    errs = []
+    rs = t.get("range_safety")
+    if not isinstance(rs, dict):
+        return [f"{name}: target '{tname}' missing 'range_safety' (v2)"]
+    if rs.get("verdict") not in _ABSINT_VERDICTS:
+        errs.append(f"{name}: target '{tname}' range_safety verdict "
+                    f"{rs.get('verdict')!r} — reachable PAM wrap (or an "
+                    f"unknown verdict) may not be committed as baseline")
+    if rs.get("wrap") != 0:
+        errs.append(f"{name}: target '{tname}' has {rs.get('wrap')!r} "
+                    f"reachable unguarded 2^129 PAM-wrap sites "
+                    f"(worst: {rs.get('worst_sites')})")
+    for k in ("pam_sites", "padiv_sites", "overflow", "denormal",
+              "opaque_eqns"):
+        if not _is_num(rs.get(k)):
+            errs.append(f"{name}: target '{tname}' range_safety.{k} must "
+                        f"be numeric")
+    certs = t.get("error_certificates")
+    if not isinstance(certs, dict):
+        return errs + [f"{name}: target '{tname}' missing "
+                       f"'error_certificates' (v2)"]
+    pw = certs.get("per_width")
+    if not isinstance(pw, dict):
+        return errs + [f"{name}: target '{tname}' error_certificates "
+                       f"missing 'per_width'"]
+    prev = None
+    for w in _ABSINT_WIDTHS:
+        c = pw.get(w)
+        if not isinstance(c, dict):
+            errs.append(f"{name}: target '{tname}' has no {w} certificate")
+            continue
+        rw = c.get("rel_worst")
+        if not (_is_num(rw) and 0.0 <= rw < float("inf")):
+            errs.append(f"{name}: target '{tname}' {w}.rel_worst must be "
+                        f"finite and >= 0, got {rw!r}")
+            continue
+        aw = c.get("abs_worst")
+        if not (_is_num(aw) and 0.0 <= aw < float("inf")):
+            errs.append(f"{name}: target '{tname}' {w}.abs_worst must be "
+                        f"finite and >= 0, got {aw!r}")
+        if prev is not None and rw < prev - 1e-12:
+            errs.append(f"{name}: target '{tname}' certificate not "
+                        f"monotone in mantissa width ({w}.rel_worst {rw} "
+                        f"< previous {prev})")
+        prev = rw
+    return errs
+
+
 def validate_audit_report(report, name: str = "AUDIT.json") -> list:
     """Schema + invariant checks for the audit baseline (freshness is
     checked separately in ``validate_audit_file``)."""
@@ -340,9 +404,14 @@ def validate_audit_report(report, name: str = "AUDIT.json") -> list:
         return [f"{name}: top level is not a JSON object"]
     if report.get("kind") != "audit":
         errs.append(f"{name}: kind must be 'audit'")
-    if report.get("schema_version") != 1:
-        errs.append(f"{name}: schema_version must be 1, got "
+    if report.get("schema_version") != 2:
+        errs.append(f"{name}: schema_version must be 2, got "
                     f"{report.get('schema_version')!r}")
+    dr = report.get("declared_ranges")
+    if not isinstance(dr, dict) or "float_range" not in dr:
+        errs.append(f"{name}: v2 requires a 'declared_ranges' object (the "
+                    f"input assumptions the range_safety verdicts are "
+                    f"conditional on)")
     for key in ("generated_utc", "backend"):
         if not isinstance(report.get(key), str):
             errs.append(f"{name}: missing/invalid '{key}'")
@@ -382,12 +451,22 @@ def validate_audit_report(report, name: str = "AUDIT.json") -> list:
                         f"{contract.get('errors')!r} PA-contract errors")
         if not _is_num(t.get("pow2")):
             errs.append(f"{name}: target '{tname}' pow2 must be numeric")
+        if t.get("kind") == "jaxpr":
+            errs.extend(_validate_absint_sections(t, tname, name))
 
     for fam in _AUDIT_FAMILIES:
         for mode in _AUDIT_MODES:
             if f"{fam}/{mode}/train" not in targets:
                 errs.append(f"{name}: missing coverage — no "
                             f"'{fam}/{mode}/train' target")
+        tr = targets.get(f"{fam}/full/train")
+        if isinstance(tr, dict):
+            rs = tr.get("range_safety")
+            if isinstance(rs, dict) and not rs.get("pam_sites"):
+                errs.append(
+                    f"{name}: '{fam}/full/train' reports zero PAM sites — "
+                    f"a full-PA train step with no recognised PA "
+                    f"magnitude-adds means the analyzer went blind")
     shard = [t for t in targets.values() if t.get("kind") == "shard_map"]
     if not shard:
         errs.append(f"{name}: no shard_map multi-device target")

@@ -1,7 +1,7 @@
 """Static-analysis subsystem: the multiplication-free claim as a
 machine-checked invariant (DESIGN.md §9).
 
-Four layers, lowest to highest:
+Five layers, lowest to highest:
 
   * ``analysis.audit``     — jaxpr-level multiplication auditor with full
     provenance (non-library frame chains, kernel-family attribution,
@@ -10,6 +10,12 @@ Four layers, lowest to highest:
     dtype-and-provenance flow over a jaxpr flagging operations outside
     the documented PA contract (non-pow2 divisors, 2^129 wrap-risk
     literals, bitcast width mismatches, scalar multiplies inside scans).
+  * ``analysis.absint``    — abstract interpreter over jaxprs
+    (``analysis.domains`` holds the domains): an exponent-aware interval
+    domain proving per-equation denormal-flush / overflow / 2^129
+    PAM-wrap reachability with frame-chain provenance, and a relative-
+    error affine domain propagating worst-case and expected PA error
+    per mantissa width (DESIGN.md §10).
   * ``analysis.hlo_audit`` — post-compile verification that XLA has not
     re-introduced multiplies after fusion/canonicalization, plus the
     collective wire-bytes model (moved from ``launch.hlo_stats``).
@@ -20,13 +26,17 @@ Four layers, lowest to highest:
 ``launch.audit`` drives the whole-repo sweep (`make audit` → AUDIT.json).
 ``launch.hlo_stats`` remains as a deprecation shim over this package.
 """
+from .absint import (DEFAULT_WIDTHS, AnalysisReport, analyze_jaxpr,
+                     default_inputs)
 from .audit import (FAMILIES, MulSite, format_violations, jaxpr_mul_stats,
                     leaf_family, site_family)
 from .contract import contract_lint
+from .domains import PamSite
 from .hlo_audit import collective_stats, hlo_mul_stats
 
 __all__ = [
     "FAMILIES", "MulSite", "format_violations", "jaxpr_mul_stats",
     "leaf_family", "site_family", "contract_lint", "collective_stats",
-    "hlo_mul_stats",
+    "hlo_mul_stats", "analyze_jaxpr", "default_inputs", "AnalysisReport",
+    "DEFAULT_WIDTHS", "PamSite",
 ]

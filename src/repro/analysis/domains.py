@@ -1,0 +1,455 @@
+"""Abstract domains for the PA abstract interpreter (DESIGN.md §10).
+
+Two composable domains, shared by ``analysis/absint.py``:
+
+**Exponent-aware interval domain** (``AbsVal`` / ``IntVal``). A float is a
+signed value interval ``[lo, hi]`` plus the minimum NONZERO magnitude
+``mlo`` and a ``zero`` flag — exactly the information PAM range safety
+needs, because the int32 bit tricks treat zero out-of-band (sentinel /
+where-guard) and their failure modes are decided by the *exponent span* of
+the nonzero operands: product exponent ``>= 128`` saturates the guarded
+scalar ops to MAX_FINITE (``overflow``), ``>= 129`` silently wraps the
+UNGUARDED grouped tile product to zero (``wrap``), and ``<= -127``
+flushes a nonzero x nonzero product to zero (``denormal``). Ints carry a
+plain interval plus bit-provenance tags: ``bits_of`` (the int is the bit
+pattern of a float), ``sign_only`` (values in {0, SIGN_MASK}), ``smag``
+(sign-or-magnitude composition), and ``mag`` — a :class:`MagExpr` linear
+form over float magnitudes that recognises PAM's ``(a&MAG)+(b&MAG)-BIAS``
+and PADIV's ``(a&MAG)-(b&MAG)+BIAS`` *semantically*, wherever they were
+inlined from (``core/pam.py`` values, ``kernels/pa_prims.py`` scalar
+helpers, the bias-folded grouped tile product).
+
+**Relative-error affine domain** (``Err``). Worst-case and expected
+(signed mean) relative plus absolute error, tracked per mantissa width so
+one pass prices f32 / f16 / bf16 side by side. Transfer constants below
+are derived analytically from the paper's piecewise-affine definitions
+and pinned numerically by ``tests/test_absint.py``; the per-op
+derivations live in DESIGN.md §10 and ``kernels/pa_prims.py``.
+
+A third, tiny refinement rides along: :class:`Witness` carries one
+concretely *attained* value per reduced slice (created by the
+``x - max(x)`` pattern, propagated by exact concrete evaluation), which
+is what proves ``sum(paexp2(x - max(x))) >= 1`` and keeps the softmax
+normaliser's PADIV out of the overflow report without axioms.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import floatbits as fb
+
+# ---------------------------------------------------------------------------
+# Mantissa widths a certificate is priced at: (name, mantissa bits).
+# ---------------------------------------------------------------------------
+DEFAULT_WIDTHS: Tuple[Tuple[str, int], ...] = (
+    ("f32", 23), ("f16", 10), ("bf16", 7))
+
+# ---------------------------------------------------------------------------
+# PA transfer-function error constants (derivations: DESIGN.md §10; the
+# kernel-side mirror with the same numbers is kernels/pa_prims.py).
+# All are exact-real-arithmetic bands of the piecewise-affine ops over the
+# mantissa fractions; the mantissa-width quantisation term 2^(1-m) is
+# added separately per width.
+# ---------------------------------------------------------------------------
+EPS_PAM_WORST = 1.0 / 9.0        # pam(a,b)/(ab) in [8/9, 1]
+EPS_PAM_MEAN = -0.03845          # mean over uniform mantissa fractions
+EPS_PADIV_WORST = 1.0 / 8.0      # padiv(a,b)*(b/a) in [1, 9/8]
+EPS_PADIV_MEAN = 0.04102
+EPS_EXP2_WORST = 2.0 ** 0.0860713320559342 - 1.0   # ~0.061476, at f=1/ln2-1
+EPS_EXP2_MEAN = 0.04068
+EPS_LOG2_ABS_WORST = 0.0860713320559342  # |f - log2(1+f)| max (Mitchell)
+EPS_LOG2_ABS_MEAN = -0.05730             # palog2 underestimates
+
+LN2 = 0.6931471805599453
+BIG = 1e30          # error-channel saturation value ("unbounded")
+_EXP_CAP = 100.0    # cap on 2^x amplification exponents inside Err math
+
+FLUSH_MIN = 2.0 ** -126   # smallest normal f32 magnitude
+F32_MAX = 3.4028235e38
+
+
+def quant_eps(m: int) -> float:
+    """Per-op mantissa quantisation term at mantissa width ``m``."""
+    return 2.0 ** (1 - m)
+
+
+# ---------------------------------------------------------------------------
+# Error domain.
+# ---------------------------------------------------------------------------
+
+def _cap(x: float) -> float:
+    if x != x:          # NaN guard: poison to BIG, never propagate NaN
+        return BIG
+    return min(x, BIG)
+
+
+def _mjoin(a: float, b: float) -> float:
+    """Join for signed mean channels: keep the larger-magnitude value."""
+    return a if abs(a) >= abs(b) else b
+
+
+@dataclass(frozen=True)
+class Err:
+    """Per-width error bounds: worst relative, worst absolute, signed mean
+    relative, signed mean absolute. Tuple index follows the ``widths``
+    the interpreter was built with."""
+    rel: Tuple[float, ...]
+    abs_: Tuple[float, ...]
+    mrel: Tuple[float, ...]
+    mabs: Tuple[float, ...]
+
+    @property
+    def is_zero(self) -> bool:
+        return (not any(self.rel) and not any(self.abs_)
+                and not any(self.mrel) and not any(self.mabs))
+
+    def join(self, o: "Err") -> "Err":
+        if o.is_zero:
+            return self
+        if self.is_zero:
+            return o
+        n = len(self.rel)
+        return Err(tuple(max(self.rel[i], o.rel[i]) for i in range(n)),
+                   tuple(max(self.abs_[i], o.abs_[i]) for i in range(n)),
+                   tuple(_mjoin(self.mrel[i], o.mrel[i]) for i in range(n)),
+                   tuple(_mjoin(self.mabs[i], o.mabs[i]) for i in range(n)))
+
+    def through_add(self, o: "Err") -> "Err":
+        """x + y: relative error is bounded by the larger operand's bound
+        only under the documented no-cancellation assumption (DESIGN.md
+        §10); absolute errors add."""
+        if o.is_zero and self.is_zero:
+            return self
+        n = len(self.rel)
+        return Err(tuple(max(self.rel[i], o.rel[i]) for i in range(n)),
+                   tuple(_cap(self.abs_[i] + o.abs_[i]) for i in range(n)),
+                   tuple(_mjoin(self.mrel[i], o.mrel[i]) for i in range(n)),
+                   tuple(max(-BIG, min(self.mabs[i] + o.mabs[i], BIG))
+                         for i in range(n)))
+
+    def scale_abs(self, k: float) -> "Err":
+        """|literal| scaling of the absolute channels (rel untouched)."""
+        if self.is_zero:
+            return self
+        k = abs(k)
+        return replace(self, abs_=tuple(_cap(a * k) for a in self.abs_),
+                       mabs=tuple(max(-BIG, min(a * k, BIG))
+                                  for a in self.mabs))
+
+    def scaled_n(self, n: float) -> "Err":
+        """Absolute channels scaled by element count (reduce_sum)."""
+        return self.scale_abs(n)
+
+
+def err_zero(nw: int) -> Err:
+    z = (0.0,) * nw
+    return Err(z, z, z, z)
+
+
+def err_const(nw: int, rel: float, abs_: float = 0.0,
+              mrel: float = 0.0, mabs: float = 0.0) -> Err:
+    return Err((rel,) * nw, (abs_,) * nw, (mrel,) * nw, (mabs,) * nw)
+
+
+# ---------------------------------------------------------------------------
+# Witness refinement.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Witness:
+    """Some element of every slice along ``axes`` attains exactly ``val``.
+
+    ``axes is None`` means the value is attained at EVERY element (a
+    broadcast constant) — such a witness combines with anything.
+    ``origin`` identifies the refinement event that created it: two
+    tensor witnesses may only be combined elementwise when they descend
+    from the same origin (then the attaining element is the same one).
+    """
+    val: float
+    axes: Optional[Tuple[int, ...]]
+    origin: int = 0
+
+    def compatible(self, o: "Witness") -> bool:
+        if self.axes is None or o.axes is None:
+            return True
+        return self.axes == o.axes and self.origin == o.origin
+
+    def merge_meta(self, o: "Witness") -> Tuple[Optional[Tuple[int, ...]], int]:
+        if self.axes is None:
+            return o.axes, o.origin
+        return self.axes, self.origin
+
+
+# ---------------------------------------------------------------------------
+# Float abstract value.
+# ---------------------------------------------------------------------------
+
+def _exp_of(m: float) -> int:
+    """floor(log2(m)) for m > 0, clamped to a sane window."""
+    if m <= 0:
+        return -200
+    if math.isinf(m):
+        return 200
+    return max(-200, min(200, math.frexp(m)[1] - 1))
+
+
+@dataclass(frozen=True)
+class AbsVal:
+    lo: float
+    hi: float
+    mlo: float              # min nonzero magnitude (may be +inf if always 0)
+    zero: bool              # value may be exactly 0
+    err: Err
+    wit: Optional[Witness] = None
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def mhi(self) -> float:
+        return max(abs(self.lo), abs(self.hi))
+
+    @property
+    def e_lo(self) -> int:
+        return _exp_of(self.mlo)
+
+    @property
+    def e_hi(self) -> int:
+        return _exp_of(self.mhi)
+
+    @property
+    def can_neg(self) -> bool:
+        return self.lo < 0
+
+    @property
+    def is_const(self) -> bool:
+        return self.lo == self.hi
+
+    def join(self, o: "AbsVal") -> "AbsVal":
+        wit = self.wit if (self.wit is not None and o.wit is not None
+                           and self.wit == o.wit) else None
+        return AbsVal(min(self.lo, o.lo), max(self.hi, o.hi),
+                      min(self.mlo, o.mlo), self.zero or o.zero,
+                      self.err.join(o.err), wit)
+
+    def with_err(self, err: Err) -> "AbsVal":
+        return replace(self, err=err)
+
+
+def make_val(lo: float, hi: float, mlo: Optional[float] = None,
+             zero: Optional[bool] = None, err: Optional[Err] = None,
+             wit: Optional[Witness] = None, nw: int = 3) -> AbsVal:
+    """Normalising constructor: fills mlo / zero from the interval when not
+    given. ``mlo=None`` derives the min nonzero magnitude from the bounds
+    (FLUSH_MIN when the interval straddles zero)."""
+    lo, hi = float(lo), float(hi)
+    if lo > hi:
+        lo, hi = hi, lo
+    if zero is None:
+        zero = lo <= 0.0 <= hi
+    if mlo is None:
+        if lo == 0.0 and hi == 0.0:
+            mlo = math.inf
+        elif lo <= 0.0 <= hi:
+            mlo = FLUSH_MIN
+        else:
+            mlo = min(abs(lo), abs(hi))
+    elif lo > 0.0 or hi < 0.0:
+        # A caller-declared mlo (e.g. the default 2^-24 floor) must not
+        # exceed the interval's own min magnitude — values at the near
+        # edge are reachable, so the tighter claim wins downward.
+        mlo = min(float(mlo), min(abs(lo), abs(hi)))
+    e = err if err is not None else err_zero(nw)
+    return AbsVal(lo, hi, float(mlo), bool(zero), e, wit)
+
+
+def const_val(x: float, nw: int) -> AbsVal:
+    x = float(x)
+    if math.isnan(x):
+        return make_val(-math.inf, math.inf, nw=nw)
+    return AbsVal(x, x, abs(x) if x != 0 else math.inf, x == 0.0,
+                  err_zero(nw), Witness(x, None))
+
+
+def top_float(nw: int) -> AbsVal:
+    return AbsVal(-math.inf, math.inf, FLUSH_MIN, True, err_zero(nw), None)
+
+
+# ---------------------------------------------------------------------------
+# Magnitude expressions over float operands (int32 bit domain).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MagExpr:
+    """value = sum(magbits(p) for p in pos) - sum(magbits(n) for n in neg)
+             + off,  with off an int interval (BIAS folds live in off).
+
+    ``magbits(x) = ((e_x + 127) << 23) | mantissa`` for nonzero x; in
+    units of 2^23 that is ``e_x + 127 + f_x`` with ``f_x in [0, 1)``.
+    """
+    pos: Tuple[AbsVal, ...]
+    neg: Tuple[AbsVal, ...]
+    off_lo: int
+    off_hi: int
+
+    @property
+    def nterms(self) -> int:
+        return len(self.pos) + len(self.neg)
+
+    def e_bounds(self) -> Tuple[int, int]:
+        """Exponent bounds of the float this expression decodes to."""
+        fmax = 1.0 - 2.0 ** -23
+        ulo = sum(p.e_lo + 127 for p in self.pos) \
+            - sum(n.e_hi + 127 + fmax for n in self.neg) \
+            + self.off_lo / float(1 << 23)
+        uhi = sum(p.e_hi + 127 + fmax for p in self.pos) \
+            - sum(n.e_lo + 127 for n in self.neg) \
+            + self.off_hi / float(1 << 23)
+        return int(math.floor(ulo)) - 127, int(math.floor(uhi)) - 127
+
+    def negate(self) -> "MagExpr":
+        return MagExpr(self.neg, self.pos, -self.off_hi, -self.off_lo)
+
+
+@dataclass
+class PamSite:
+    """One recognised PA magnitude-arithmetic site with its verdict."""
+    kind: str                     # "pam" | "padiv"
+    site: str
+    frames: Tuple[str, ...]
+    context: Tuple[str, ...]
+    e_lo: int
+    e_hi: int
+    guarded: bool = False         # saw the `mag < -BIAS` overflow rescue
+
+    @property
+    def overflow(self) -> bool:
+        return self.e_hi >= 128
+
+    @property
+    def wrap(self) -> bool:
+        # The guarded scalar ops rescue the int32 wrap back to MAX_FINITE
+        # (pam_value's disjoint-ranges test); only unguarded sites (the
+        # grouped tile product) silently flush a wrapped product to zero.
+        return self.e_hi >= 129 and not self.guarded
+
+    @property
+    def denormal(self) -> bool:
+        return self.e_lo <= -127
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "site": self.site,
+                "frames": list(self.frames), "context": list(self.context),
+                "e_lo": self.e_lo, "e_hi": self.e_hi,
+                "guarded": self.guarded, "wrap": self.wrap,
+                "overflow": self.overflow, "denormal": self.denormal}
+
+
+@dataclass(frozen=True)
+class PaFlow:
+    """Error/provenance payload riding a tagged int from the magnitude
+    add/sub to the decoding bitcast."""
+    kind: str
+    err: Err            # combined operand error, PA eps NOT yet applied
+    site: PamSite
+    mhi_prod: float     # |a|max * |b|max bound (abs-channel folding)
+
+
+# ---------------------------------------------------------------------------
+# Int abstract value.
+# ---------------------------------------------------------------------------
+
+INT_TOP_LO = -(2 ** 63)
+INT_TOP_HI = 2 ** 63 - 1
+
+
+@dataclass(frozen=True)
+class IntVal:
+    lo: int
+    hi: int
+    err: Err
+    mlo: Optional[int] = None         # min nonzero value (nonneg ints only)
+    sign_only: bool = False           # values in {0, SIGN_MASK as int32}
+    bits_of: Optional[AbsVal] = None  # bit pattern of this float
+    mag: Optional[MagExpr] = None     # magnitude linear form
+    smag: Optional["IntVal"] = None   # sign-bit | magnitude composition
+    pa: Optional[PaFlow] = None
+    wit: Optional[Witness] = None
+
+    def join(self, o: "IntVal") -> "IntVal":
+        mlo = None
+        if self.mlo is not None and o.mlo is not None:
+            mlo = min(self.mlo, o.mlo)
+        elif self.mlo is not None and o.lo == o.hi == 0:
+            mlo = self.mlo                 # joining with exact zero keeps
+        elif o.mlo is not None and self.lo == self.hi == 0:
+            mlo = o.mlo                    # the min NONZERO value
+        pa = self.pa or o.pa
+        wit = self.wit if (self.wit is not None and self.wit == o.wit) \
+            else None
+        return IntVal(min(self.lo, o.lo), max(self.hi, o.hi),
+                      self.err.join(o.err), mlo,
+                      self.sign_only and o.sign_only,
+                      None, None,
+                      self.smag if (self.smag is not None
+                                    and self.smag is o.smag) else None,
+                      pa, wit)
+
+
+def int_const(x: int, nw: int) -> IntVal:
+    x = int(x)
+    return IntVal(x, x, err_zero(nw), mlo=x if x > 0 else None,
+                  wit=Witness(float(x), None))
+
+
+def top_int(nw: int) -> IntVal:
+    return IntVal(INT_TOP_LO, INT_TOP_HI, err_zero(nw))
+
+
+def bool_int(nw: int) -> IntVal:
+    return IntVal(0, 1, err_zero(nw))
+
+
+# ---------------------------------------------------------------------------
+# f32 bit-pattern decode helpers (flush-to-zero semantics, DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def decode_mag(i: int) -> float:
+    """Magnitude bits -> float value, denormals flushed to 0."""
+    i = max(0, min(int(i), int(fb.MAX_FINITE)))
+    if i < int(fb.MIN_NORM):
+        return 0.0
+    e = int(i >> 23) - 127
+    man = (i & 0x7FFFFF) / float(1 << 23)
+    return math.ldexp(1.0 + man, e)
+
+
+def encode_mag(x: float) -> int:
+    """Float magnitude -> magnitude bit pattern (clamped to finite)."""
+    x = abs(float(x))
+    if x == 0.0 or x < FLUSH_MIN:
+        return 0
+    if math.isinf(x) or x > F32_MAX:
+        return int(fb.MAX_FINITE)
+    m, e = math.frexp(x)          # x = m * 2^e, m in [0.5, 1)
+    e = e - 1
+    man = int((m * 2.0 - 1.0) * (1 << 23))
+    return min(((e + 127) << 23) | min(man, 0x7FFFFF), int(fb.MAX_FINITE))
+
+
+def mag_bounds_of(a: AbsVal) -> Tuple[int, int, Optional[int]]:
+    """(lo, hi, mlo) int bounds of ``bits(a) & MAG_MASK``."""
+    hi = encode_mag(a.mhi) if a.mhi > 0 else 0
+    if math.isinf(a.mhi):
+        hi = int(fb.MAX_FINITE)
+    nz = encode_mag(a.mlo) if not math.isinf(a.mlo) else None
+    if a.lo > 0 or a.hi < 0:
+        # Interval excludes 0: min |v| >= min(|lo|, |hi|), usually much
+        # tighter than the flush-conservative mlo channel.
+        minabs = min(abs(a.lo), abs(a.hi))
+        if math.isfinite(minabs):
+            nz = max(nz or 0, encode_mag(minabs))
+    lo = 0 if a.zero else (nz if nz is not None else 0)
+    return lo, hi, (nz if nz else None)

@@ -50,6 +50,32 @@ assert _ZSENT == _fb.PAM_ZERO_SENTINEL
 _LOG2E = np.float32(1.4426950408889634)
 _LN2 = np.float32(0.6931471805599453)
 
+# ---------------------------------------------------------------------------
+# Transfer-function error bands (DESIGN.md §10). These are the analytic
+# worst-case relative-error constants of the scalar helpers below, derived
+# from the paper's piecewise-affine definitions; the abstract interpreter's
+# error domain (analysis/domains.py) uses the same values as its per-op
+# transfer functions, and tests/test_absint.py pins the two sets equal.
+#
+# Derivations (a = 2^ea (1+fa), b = 2^eb (1+fb), f in [0, 1)):
+#   _pam:    pam(a,b)/(a*b) = (1+fa+fb+[fa+fb>=1]) / ((1+fa)(1+fb)); the
+#            numerator is the mantissa-field add with carry into the
+#            exponent, so the ratio lies in [8/9, 1] — worst at
+#            fa = fb = 1/2 (ratio 2/(9/4)), exact when fa*fb = 0.
+#   _padiv:  padiv(a,b)*(b/a) lies in [1, 9/8]: the mantissa subtract
+#            drops the fa*fb cross term of the true quotient expansion,
+#            worst again at fa = fb = 1/2.
+#   _paexp2: Mitchell read-off 2^x ~ 2^floor(x) (1+frac(x)); relative
+#            error (1+f)/2^f - 1 peaks at f = 1/ln2 - 1 with value
+#            2^log2(e/(e... )) = 2^EPS_LOG2 - 1 ~ 0.061476.
+#   _palog2: log2(1+f) ~ f; |f - log2(1+f)| peaks at the same critical
+#            point f = 1/ln2 - 1 with value ~0.0860713 (ABSOLUTE error —
+#            log2 output crosses zero, so no relative band exists).
+PAM_REL_WORST = 1.0 / 9.0
+PADIV_REL_WORST = 1.0 / 8.0
+LOG2_ABS_WORST = 0.0860713320559342          # max_f |f - log2(1+f)|
+EXP2_REL_WORST = 2.0 ** LOG2_ABS_WORST - 1.0  # ~0.061476
+
 
 # ---------------------------------------------------------------------------
 # Elementwise PA helpers (VPU-friendly: pure int vector ops + one select).

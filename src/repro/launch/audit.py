@@ -18,11 +18,21 @@ This module forces ``--xla_force_host_platform_device_count=4`` at import
 (before jax initialises) so the in-process shard_map targets see a
 4-device mesh — run it as its own process::
 
-    PYTHONPATH=src python -m repro.launch.audit [--check] [--out PATH]
+    PYTHONPATH=src python -m repro.launch.audit [--check|--lint] [--out PATH]
 
-Exit status is nonzero if any target shows a tensor-shaped multiply or a
-PA-contract error; the failure message localizes each violation to
-file:line and kernel family (``analysis.audit.format_violations``).
+Every jaxpr target additionally carries abstract-interpretation sections
+(``repro.analysis.absint``, DESIGN.md §10): ``range_safety`` — the
+wrap/overflow/denormal reachability verdict under the declared input
+ranges (``DECLARED_RANGES``) — and ``error_certificates`` — worst-case /
+expected end-to-end PA relative-error bounds per mantissa width (f32,
+f16, bf16 side by side). ``--lint`` runs the contract lint + range
+analysis alone (`make lint-pa`): no decode-engine build, no shard_map
+subprocess, no XLA compile, no file written.
+
+Exit status is nonzero if any target shows a tensor-shaped multiply, a
+PA-contract error, or a reachable unguarded PAM wrap; the failure message
+localizes each violation to file:line and kernel family
+(``analysis.audit.format_violations``).
 """
 from __future__ import annotations
 
@@ -40,8 +50,8 @@ from typing import Dict
 
 import jax
 
-from repro.analysis import (contract_lint, format_violations, hlo_mul_stats,
-                            jaxpr_mul_stats)
+from repro.analysis import (analyze_jaxpr, contract_lint, format_violations,
+                            hlo_mul_stats, jaxpr_mul_stats)
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
                                      "..", "..", ".."))
@@ -64,6 +74,21 @@ PA_MODES = {
 }
 
 _OPT_KW = dict(peak_lr=3e-3, warmup_steps=5, total_steps=30)
+
+# Declared input-range assumptions for the abstract interpreter
+# (DESIGN.md §10). Every float program input — activations, params, grads,
+# optimizer state — is assumed within this range with nonzero magnitudes
+# no smaller than mlo; values the program PRODUCES are additionally
+# assumed under the ±2^32 activation ceiling that the runtime exponent
+# sentinels enforce (resilience/detectors.py). The range_safety verdicts
+# and error_certificates in AUDIT.json are conditional on exactly these
+# assumptions, and the seeded-violation tests in tests/test_absint.py
+# prove the verdicts are not vacuous under wider declarations.
+DECLARED_RANGES = {
+    "float_range": (-256.0, 256.0),
+    "float_mlo": 2.0 ** -24,
+    "activation_ceiling": 2.0 ** 32,
+}
 
 
 def _pa(mode_key: str):
@@ -110,8 +135,21 @@ def _entry(stats: Dict, lint: Dict, kind: str, **extra) -> Dict:
     return out
 
 
+def _analyze_entry(jaxpr) -> Dict:
+    """Abstract-interpretation sections for one jaxpr target: the
+    wrap/overflow/denormal reachability verdict and the per-mantissa-width
+    PA error certificate (DESIGN.md §10)."""
+    rep = analyze_jaxpr(jaxpr,
+                        float_range=DECLARED_RANGES["float_range"],
+                        float_mlo=DECLARED_RANGES["float_mlo"])
+    return {"range_safety": rep.range_safety(),
+            "error_certificates": rep.certificate()}
+
+
 def _audit_jaxpr(jaxpr, kind: str = "jaxpr", **extra) -> Dict:
-    return _entry(jaxpr_mul_stats(jaxpr), contract_lint(jaxpr), kind, **extra)
+    out = _entry(jaxpr_mul_stats(jaxpr), contract_lint(jaxpr), kind, **extra)
+    out.update(_analyze_entry(jaxpr))
+    return out
 
 
 # -- target builders --------------------------------------------------------
@@ -224,11 +262,14 @@ def sweep(log=print) -> Dict:
     targets["decoder/full/train@hlo"] = hlo_train_entry()
     log("audit: compiled-HLO target done")
 
-    violating = sorted(n for n, t in targets.items()
-                       if t["tensor_total"] or t["contract"]["errors"])
+    violating = sorted(
+        n for n, t in targets.items()
+        if t["tensor_total"] or t["contract"]["errors"]
+        or t.get("range_safety", {}).get("wrap", 0))
     report = {
         "kind": "audit",
-        "schema_version": 1,
+        "schema_version": 2,
+        "declared_ranges": dict(DECLARED_RANGES),
         "generated_utc":
             datetime.datetime.now(datetime.timezone.utc).isoformat(),
         "backend": jax.default_backend(),
@@ -242,12 +283,49 @@ def sweep(log=print) -> Dict:
             "contract_errors": sum(t["contract"]["errors"]
                                    for t in targets.values()),
             "pow2": sum(t["pow2"] for t in targets.values()),
+            "pam_sites": sum(
+                t.get("range_safety", {}).get("pam_sites", 0)
+                for t in targets.values()),
+            "wrap": sum(t.get("range_safety", {}).get("wrap", 0)
+                        for t in targets.values()),
             "violating_targets": violating,
         },
     }
     from benchmarks.check_bench_schema import audit_fingerprints
     report["fingerprints"] = audit_fingerprints()
     return report
+
+
+def lint_sweep(log=print) -> int:
+    """Fast standalone gate (`make lint-pa`): PA contract lint + range
+    analysis over the traced hot programs — no decode-engine build, no
+    shard_map subprocess, no XLA compile, no file written. Returns the
+    number of failing targets (contract errors or reachable PAM wrap)."""
+    failed = 0
+    for family in FAMILY_ARCHS:
+        for mode_key in PA_MODES:
+            model = _smoke_model(family, mode_key)
+            for kind, jx in (("train", train_jaxpr(model)),
+                             ("optim", optim_jaxpr(model))):
+                lint = contract_lint(jx)
+                an = _analyze_entry(jx)
+                rs = an["range_safety"]
+                bad = bool(lint["errors"]) or rs["wrap"] > 0
+                failed += bad
+                log(f"lint-pa: {family}/{mode_key}/{kind} "
+                    f"verdict={rs['verdict']} pam_sites={rs['pam_sites']} "
+                    f"wrap={rs['wrap']} contract_errors="
+                    f"{len(lint['errors'])}"
+                    f"{'  FAIL' if bad else ''}")
+                if bad:
+                    for err in lint["errors"]:
+                        log(f"  contract {err['rule']}@{err['site']}: "
+                            f"{err['detail']}")
+                    for s in rs["worst_sites"]:
+                        if s["e_hi"] >= 129 and not s["guarded"]:
+                            log(f"  wrap {s['kind']}@{s['site']} "
+                                f"e=[{s['e_lo']},{s['e_hi']}]")
+    return failed
 
 
 def _write_if_changed(report: Dict, path: str) -> bool:
@@ -276,7 +354,14 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=os.path.join(_ROOT, "AUDIT.json"))
     ap.add_argument("--check", action="store_true",
                     help="audit only; do not write AUDIT.json")
+    ap.add_argument("--lint", action="store_true",
+                    help="fast mode: contract lint + range analysis only "
+                         "(no decode engine, no shard_map, no compile, "
+                         "no AUDIT.json write)")
     ns = ap.parse_args(argv)
+
+    if ns.lint:
+        return 1 if lint_sweep() else 0
 
     report = sweep()
     totals = report["totals"]

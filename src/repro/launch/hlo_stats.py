@@ -9,10 +9,17 @@ and will be removed once nothing imports it.
 """
 from __future__ import annotations
 
-from repro.analysis.audit import (CONTRACTIONS, MUL_FAMILY,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.launch.hlo_stats is deprecated: import jaxpr_mul_stats / "
+    "collective_stats from repro.analysis instead (DESIGN.md §9)",
+    DeprecationWarning, stacklevel=2)
+
+from repro.analysis.audit import (CONTRACTIONS, MUL_FAMILY,  # noqa: F401,E402
                                   _eqn_site, _is_pow2_scalar_literal,
                                   jaxpr_mul_stats)
-from repro.analysis.hlo_audit import collective_stats  # noqa: F401
+from repro.analysis.hlo_audit import collective_stats  # noqa: F401,E402
 
 __all__ = ["MUL_FAMILY", "CONTRACTIONS", "jaxpr_mul_stats",
            "collective_stats"]

@@ -380,6 +380,25 @@ def test_collective_stats_group_size_one_skipped():
 # AUDIT.json schema validation.
 # ---------------------------------------------------------------------------
 
+def _mini_absint():
+    # Fresh (mutation-safe) v2 per-jaxpr-target sections.
+    per_width = {
+        "f32": {"mantissa_bits": 23, "rel_worst": 0.1111, "rel_mean": -0.038,
+                "abs_worst": 7.2},
+        "f16": {"mantissa_bits": 10, "rel_worst": 0.1131, "rel_mean": -0.038,
+                "abs_worst": 7.4},
+        "bf16": {"mantissa_bits": 7, "rel_worst": 0.1268, "rel_mean": -0.038,
+                 "abs_worst": 8.1},
+    }
+    return {
+        "range_safety": {"verdict": "safe", "pam_sites": 4, "padiv_sites": 1,
+                         "wrap": 0, "overflow": 0, "denormal": 0,
+                         "opaque_eqns": 0, "notes": [], "worst_sites": []},
+        "error_certificates": {"per_width": per_width, "saturated": False,
+                               "n_eqns": 100},
+    }
+
+
 def _mini_audit_report():
     from benchmarks.check_bench_schema import (_AUDIT_FAMILIES,
                                                audit_fingerprints)
@@ -388,7 +407,8 @@ def _mini_audit_report():
         for mode in ("approx", "full"):
             targets[f"{fam}/{mode}/train"] = {
                 "kind": "jaxpr", "tensor_total": 0,
-                "contract": {"errors": 0, "warnings": 0}, "pow2": 3}
+                "contract": {"errors": 0, "warnings": 0}, "pow2": 3,
+                **_mini_absint()}
     targets["shard_map/train_dp"] = {
         "kind": "shard_map", "tensor_total": 0,
         "contract": {"errors": 0, "warnings": 0}, "pow2": 3,
@@ -396,13 +416,17 @@ def _mini_audit_report():
     targets["decoder/full/train@hlo"] = {
         "kind": "hlo", "tensor_total": 0,
         "contract": {"errors": 0, "warnings": 0}, "pow2": 3}
-    return {"kind": "audit", "schema_version": 1,
+    return {"kind": "audit", "schema_version": 2,
             "generated_utc": "2026-08-08T00:00:00Z", "backend": "cpu",
             "device_count": 4, "families": list(_AUDIT_FAMILIES),
             "fingerprints": audit_fingerprints(),
+            "declared_ranges": {"float_range": (-256.0, 256.0),
+                                "float_mlo": 2.0 ** -24,
+                                "activation_ceiling": 2.0 ** 32},
             "targets": targets,
             "totals": {"targets": len(targets), "tensor_total": 0,
                        "contract_errors": 0, "pow2": 3 * len(targets),
+                       "pam_sites": 4 * 2 * len(_AUDIT_FAMILIES), "wrap": 0,
                        "violating_targets": []}}
 
 
@@ -425,7 +449,21 @@ def test_audit_schema_accepts_clean_report():
         errors=1), "PA-contract errors"),
     (lambda r: r["totals"].update(tensor_total=5), "!= sum over targets"),
     (lambda r: r["fingerprints"].pop("analysis"), "fingerprints missing"),
-    (lambda r: r.update(schema_version=2), "schema_version"),
+    (lambda r: r.update(schema_version=1), "schema_version"),
+    (lambda r: r.pop("declared_ranges"), "declared_ranges"),
+    (lambda r: r["targets"]["rwkv/approx/train"].pop("range_safety"),
+     "missing 'range_safety'"),
+    (lambda r: r["targets"]["decoder/full/train"]["range_safety"].update(
+        wrap=2, verdict="wrap"), "PAM-wrap"),
+    (lambda r: r["targets"]["hybrid/full/train"]["range_safety"].update(
+        pam_sites=0), "went blind"),
+    (lambda r: r["targets"]["decoder/full/train"]["error_certificates"]
+     ["per_width"]["bf16"].update(rel_worst=0.01), "not monotone"),
+    (lambda r: r["targets"]["encdec/full/train"]["error_certificates"]
+     ["per_width"]["f16"].update(rel_worst=float("inf")),
+     "finite and >= 0"),
+    (lambda r: r["targets"]["vision_lm/full/train"].pop(
+        "error_certificates"), "missing 'error_certificates'"),
 ])
 def test_audit_schema_rejects_mutations(mutate, needle):
     from benchmarks.check_bench_schema import validate_audit_report
@@ -456,3 +494,23 @@ def test_launch_hlo_stats_shim_reexports():
     assert hlo_stats.jaxpr_mul_stats is _audit.jaxpr_mul_stats
     assert hlo_stats.collective_stats is _hlo.collective_stats
     assert hlo_stats.MUL_FAMILY == _audit.MUL_FAMILY
+
+
+def test_launch_hlo_stats_shim_deprecation_fires_once():
+    import importlib
+    import warnings
+    from repro.analysis import audit as _audit
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        import repro.launch.hlo_stats as shim
+        shim = importlib.reload(shim)  # re-executes the module body
+        deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
+                and "hlo_stats is deprecated" in str(w.message)]
+    assert len(deps) == 1, [str(w.message) for w in rec]
+    # reload keeps the re-exports identical
+    assert shim.jaxpr_mul_stats is _audit.jaxpr_mul_stats
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        import repro.launch.hlo_stats  # noqa: F401 — cached: no re-exec
+    assert not [w for w in rec2
+                if issubclass(w.category, DeprecationWarning)], rec2
