@@ -64,10 +64,13 @@ bench:
 # Smoke-shape attention + optimizer + serving benches for the test tier:
 # same correctness gates and report plumbing as `bench`, tiny shapes /
 # traces, throwaway output paths (the committed BENCH_*.json files are
-# never touched).
+# never touched). The attention/optim smokes include the per-FloatFormat
+# bf16 engine gates (DESIGN.md §11); the matmul bf16 gate runs standalone
+# via --smoke-formats (format parity + dtype + lmul band, no JSON).
 bench-fast:
 	$(PY) -m benchmarks.pam_attention_bench --smoke
 	$(PY) -m benchmarks.pam_optim_bench --smoke
+	$(PY) -m benchmarks.pam_matmul_bench --smoke-formats
 	$(PY) -m benchmarks.serve_bench --smoke
 
 # Full benchmark suite (paper tables/figures + trajectory harness).

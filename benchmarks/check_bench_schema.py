@@ -71,9 +71,17 @@ _REQUIRED_TOP = ("benchmark", "schema_version", "generated_utc", "backend",
 _REQUIRED_TIMING = ("rounds", "stat", "unit")
 
 # Per-benchmark expected schema version (default 1). Bumped for
-# pam_attention when the two-sweep backward fields landed, and for serve
-# when the flight-recorder determinism section landed (DESIGN.md §8).
-_EXPECTED_VERSION = {"pam_attention": 2, "serve": 2}
+# pam_attention when the two-sweep backward fields landed, for serve
+# when the flight-recorder determinism section landed (DESIGN.md §8),
+# and for pam_matmul/pam_attention/pam_optim when the per-FloatFormat
+# engine sections landed (DESIGN.md §11).
+_EXPECTED_VERSION = {"pam_matmul": 2, "pam_attention": 3, "pam_optim": 2,
+                     "serve": 2}
+
+# Benchmarks that must carry a per-FloatFormat 'formats' section
+# (DESIGN.md §11): per-format engine timings, measured HBM bytes, and the
+# joules-style energy model from launch/roofline.py.
+_FORMAT_BENCHES = ("pam_matmul", "pam_attention", "pam_optim")
 
 
 def source_fingerprint(rel_dir: str, root: str = _ROOT) -> str:
@@ -102,6 +110,10 @@ def flash_attention_fingerprint(root: str = _ROOT) -> str:
 
 def pam_optim_fingerprint(root: str = _ROOT) -> str:
     return kernel_fingerprint("pam_optim", root)
+
+
+def pam_matmul_fingerprint(root: str = _ROOT) -> str:
+    return kernel_fingerprint("pam_matmul", root)
 
 
 def serve_fingerprint(root: str = _ROOT) -> str:
@@ -170,6 +182,8 @@ def validate_report(report, name: str) -> list:
         errs.extend(_validate_pam_optim(report, name))
     if report.get("benchmark") == "serve":
         errs.extend(_validate_serve(report, name))
+    if report.get("benchmark") in _FORMAT_BENCHES:
+        errs.extend(_validate_formats(report, name))
 
     bench = report.get("benchmark")
     if isinstance(bench, str) and name.startswith("BENCH_"):
@@ -177,6 +191,55 @@ def validate_report(report, name: str) -> list:
         if bench != expect:
             errs.append(f"{name}: benchmark field {bench!r} does not match "
                         f"filename (expect {expect!r})")
+    return errs
+
+
+def _validate_formats(report, name: str) -> list:
+    """Per-FloatFormat engine sections (DESIGN.md §11): each format row
+    must carry per-engine timings and the energy model, and bf16 operand
+    bytes must be half the f32 row's when both are recorded. The measured
+    HBM "bytes accessed" reduction is REQUIRED for the matmul bench (the
+    ISSUE acceptance claim); for the other families it is recorded but not
+    gated — the CPU jnp streaming engines interleave f32 accumulation
+    casts that XLA's cost analysis counts as extra traffic, which a
+    native-carrier TPU kernel does not pay (ROADMAP item 5)."""
+    errs = []
+    formats = report.get("formats")
+    if not isinstance(formats, dict):
+        return [f"{name}: requires a per-FloatFormat 'formats' section"]
+    for fmt in ("f32", "bf16"):
+        sec = formats.get(fmt)
+        if not isinstance(sec, dict):
+            errs.append(f"{name}: formats missing '{fmt}' section")
+            continue
+        if not _numeric_dict(sec.get("engines")):
+            errs.append(f"{name}: formats.{fmt}.engines must be a non-empty "
+                        f"numeric object")
+        energy = sec.get("energy")
+        if not isinstance(energy, dict):
+            errs.append(f"{name}: formats.{fmt} missing 'energy' model")
+        else:
+            pam = (energy.get("engines") or {}).get("pam") or {}
+            win = pam.get("win_vs_native")
+            if not (_is_num(win) and win > 1.0):
+                errs.append(f"{name}: formats.{fmt}.energy pam win_vs_native "
+                            f"must be > 1 (int-carrier add vs fp mul), got "
+                            f"{win!r}")
+    f32 = formats.get("f32") or {}
+    bf16 = formats.get("bf16") or {}
+    for key in ("operand_bytes", "state_bytes"):
+        ob_f, ob_b = f32.get(key), bf16.get(key)
+        if _is_num(ob_f) and _is_num(ob_b) and ob_b >= ob_f:
+            errs.append(f"{name}: bf16 {key} ({ob_b}) not reduced vs "
+                        f"f32 ({ob_f}) — the narrow-format claim failed")
+    if name.startswith("BENCH_pam_matmul"):
+        fb, bb = f32.get("hbm_bytes_accessed"), bf16.get("hbm_bytes_accessed")
+        if not (_is_num(fb) and _is_num(bb)):
+            errs.append(f"{name}: matmul format sections require measured "
+                        f"hbm_bytes_accessed for f32 and bf16")
+        elif bb >= fb:
+            errs.append(f"{name}: bf16 measured HBM bytes ({bb}) not reduced "
+                        f"vs f32 ({fb}) — the traffic claim failed")
     return errs
 
 
@@ -298,6 +361,8 @@ def validate_file(path: str) -> list:
     _FRESH = {"pam_attention": ("flash_attention_fingerprint",
                                 "kernels/flash_attention",
                                 "pam_attention_bench"),
+              "pam_matmul": ("pam_matmul_fingerprint",
+                             "kernels/pam_matmul", "pam_matmul_bench"),
               "pam_optim": ("pam_optim_fingerprint",
                             "kernels/pam_optim", "pam_optim_bench"),
               "serve": ("serve_fingerprint", "serve", "serve_bench")}
@@ -467,6 +532,25 @@ def validate_audit_report(report, name: str = "AUDIT.json") -> list:
                     f"{name}: '{fam}/full/train' reports zero PAM sites — "
                     f"a full-PA train step with no recognised PA "
                     f"magnitude-adds means the analyzer went blind")
+    # bf16-native coverage (DESIGN.md §11): the decoder must also audit
+    # clean under the native int16-carrier engines, and the runtime bf16
+    # error measured against exact arithmetic must sit within the static
+    # absint certificate the f32 twin proves.
+    for kind in ("train", "decode"):
+        tname = f"decoder/full_bf16/{kind}"
+        t = targets.get(tname)
+        if not isinstance(t, dict):
+            errs.append(f"{name}: missing coverage — no '{tname}' target "
+                        f"(bf16-native engines)")
+            continue
+        meas = t.get("bf16_native")
+        if not isinstance(meas, dict):
+            errs.append(f"{name}: '{tname}' missing the 'bf16_native' "
+                        f"measured-error block")
+        elif meas.get("within_certificate") is not True:
+            errs.append(f"{name}: '{tname}' measured bf16 error exceeds "
+                        f"the static absint certificate: {meas.get('ops')}")
+
     shard = [t for t in targets.values() if t.get("kind") == "shard_map"]
     if not shard:
         errs.append(f"{name}: no shard_map multi-device target")

@@ -41,6 +41,7 @@ from repro.kernels._backend import use_interpret
 from repro.kernels import autotune
 from repro.kernels.flash_attention import pam_flash_attention
 from repro.kernels.flash_attention.ref import pam_attention_ref
+from repro.launch.roofline import energy_section
 from .common import emit, interleaved_min_ms
 from .check_bench_schema import flash_attention_fingerprint, validate_file
 from .seed_reference import (seed_pam_attention, seed_pam_attention_grads,
@@ -121,6 +122,59 @@ def _gqa_gate(gates, *, dh):
 
     gates.run("gqa_fused_pallas_vs_unfused", lambda: check("pallas"))
     gates.run("gqa_fused_jnp_vs_unfused", lambda: check("jnp"))
+
+
+def _format_sections(q4, k4, v4, pos_q, pos_k, scale, rounds) -> dict:
+    """Per-FloatFormat engine sections. The bf16 row feeds bf16 operands to
+    the native int16-carrier engines (scores/e/p tiles in bf16, f32
+    streaming state — DESIGN.md §11) and must track the f32 fused output
+    within bf16 rounding of the streamed softmax."""
+    B, S, H, DH = q4.shape
+    T = k4.shape[1]
+    out = {}
+    f32_ref = None
+    for fmt_name in ("f32", "bf16"):
+        dt = jnp.float32 if fmt_name == "f32" else jnp.bfloat16
+        qd, kd, vd = (x.astype(dt) for x in (q4, k4, v4))
+        fns = {impl: jax.jit(lambda q, k, v, impl=impl: pam_flash_attention(
+                   q, k, v, pos_q, pos_k, causal=True, scale=scale,
+                   impl=impl))
+               for impl in ("pallas", "jnp")}
+        o_j = fns["jnp"](qd, kd, vd)
+        o_p = fns["pallas"](qd, kd, vd)
+        assert o_j.dtype == dt and o_p.dtype == dt, (o_j.dtype, o_p.dtype)
+        tol = {"f32": 1e-5, "bf16": 4e-2}[fmt_name]
+        oj = np.asarray(o_j, np.float32)
+        np.testing.assert_allclose(np.asarray(o_p, np.float32), oj,
+                                   atol=tol * max(1.0, np.abs(oj).max()),
+                                   err_msg=f"{fmt_name} fused engines diverge")
+        if fmt_name == "f32":
+            f32_ref = oj
+        else:
+            np.testing.assert_allclose(
+                oj, f32_ref, atol=6e-2 * max(1.0, np.abs(f32_ref).max()),
+                err_msg="bf16 fused path diverged from f32")
+        times = interleaved_min_ms(
+            {impl: (f, (qd, kd, vd)) for impl, f in fns.items()}, rounds)
+        try:
+            ca = fns["jnp"].lower(qd, kd, vd).compile().cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca
+            hbm = int((ca or {}).get("bytes accessed", 0)) or None
+        except Exception:
+            hbm = None
+        n_macs = 2 * B * H * S * T * DH          # QK^T + PV
+        out[fmt_name] = {
+            "engines": {impl: round(t * 1e3, 1) for impl, t in times.items()},
+            "hbm_bytes_accessed": hbm,
+            "operand_bytes": (q4.size + k4.size + v4.size + q4.size)
+                             * jnp.dtype(dt).itemsize,
+            "energy": energy_section(n_macs, fmt_name, hbm_bytes=hbm),
+        }
+    f32b, bf16b = (out["f32"]["hbm_bytes_accessed"],
+                   out["bf16"]["hbm_bytes_accessed"])
+    if f32b and bf16b:
+        out["hbm_bytes_ratio_bf16_vs_f32"] = round(bf16b / f32b, 3)
+    return out
 
 
 def main(argv=None) -> None:
@@ -252,6 +306,8 @@ def main(argv=None) -> None:
                                 (gq, gk, gv, gdo)),
     }, rounds)
 
+    formats = _format_sections(q4, k4, v4, pos_q, pos_k, scale, rounds)
+
     interpret = use_interpret()
     bwd_tiles = autotune.tile_params("pam_attention_bwd", (S, T, DH),
                                      interpret)
@@ -260,7 +316,7 @@ def main(argv=None) -> None:
     us_g = {k: v * 1e3 for k, v in gqa.items()}
     report = {
         "benchmark": "pam_attention",
-        "schema_version": 2,
+        "schema_version": 3,
         "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "backend": jax.default_backend(),
         "pallas_mode": "interpret" if interpret else "compiled",
@@ -312,6 +368,7 @@ def main(argv=None) -> None:
             "fused_jnp": round(us_g["seed_unfused_repeat"]
                                / us_g["fused_jnp"], 2),
         },
+        "formats": formats,
         "gates_passed": gates.passed,
     }
     with open(out_path, "w") as f:

@@ -39,6 +39,7 @@ from repro.core import PAConfig
 from repro.kernels._backend import use_interpret
 from repro.kernels import autotune
 from repro.analysis import jaxpr_mul_stats
+from repro.launch.roofline import energy_section
 from repro.optim import OptConfig, adamw_update, init_opt_state
 from .common import Gates, emit, interleaved_min_ms
 from .check_bench_schema import pam_optim_fingerprint, validate_file
@@ -145,6 +146,56 @@ def _audit_gate(gates, cfg):
     return check
 
 
+def _format_sections(d_model, cfg_bf16, rounds) -> dict:
+    """Per-FloatFormat engine sections: the bf16 row runs bf16 params,
+    grads, AND moments through the native int16-carrier moment chain
+    (fmt='bf16'), gated on jnp/pallas bit-equality per format."""
+    out = {}
+    for fmt_name in ("f32", "bf16"):
+        dt = jnp.float32 if fmt_name == "f32" else jnp.bfloat16
+        params, grads = _tree(d_model, seed=11)
+        params = jax.tree.map(lambda x: x.astype(dt), params)
+        grads = jax.tree.map(lambda x: x.astype(dt), grads)
+        cfg = cfg_bf16 if fmt_name == "bf16" else OptConfig(
+            peak_lr=3e-4, warmup_steps=10, total_steps=1000,
+            grad_clip=1.0, weight_decay=1e-4)
+        st = init_opt_state(params, cfg)
+        st = {**st, "step": jnp.asarray(7, jnp.int32)}
+        fns = {impl: jax.jit(lambda p, g, s, pa=PAConfig(
+                   mode="full", impl=impl, fmt=fmt_name): adamw_update(
+                   p, g, s, cfg, pa=pa))
+               for impl in ("jnp", "pallas")}
+        pj, sj, _ = fns["jnp"](params, grads, st)
+        pp, sp, _ = fns["pallas"](params, grads, st)
+        _assert_bit_equal(pj, pp, f"{fmt_name} formats jnp vs pallas params")
+        _assert_bit_equal(sj["m"], sp["m"], f"{fmt_name} formats m")
+        for leaf in jax.tree.leaves(pj):
+            assert leaf.dtype == dt, f"{fmt_name} update returned {leaf.dtype}"
+        times = interleaved_min_ms(
+            {impl: (f, (params, grads, st)) for impl, f in fns.items()},
+            rounds)
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        try:
+            ca = fns["jnp"].lower(params, grads, st).compile().cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca
+            hbm = int((ca or {}).get("bytes accessed", 0)) or None
+        except Exception:
+            hbm = None
+        # ~6 multiplies per param in the native AdamW chain (m, v moment
+        # EMAs, vhat sqrt-arg, update scale, lr, weight decay).
+        out[fmt_name] = {
+            "engines": {impl: round(t * 1e3, 1) for impl, t in times.items()},
+            "hbm_bytes_accessed": hbm,
+            "state_bytes": int(3 * n_params * jnp.dtype(dt).itemsize),
+            "energy": energy_section(6 * n_params, fmt_name, hbm_bytes=hbm),
+        }
+    f32b, bf16b = (out["f32"]["hbm_bytes_accessed"],
+                   out["bf16"]["hbm_bytes_accessed"])
+    if f32b and bf16b:
+        out["hbm_bytes_ratio_bf16_vs_f32"] = round(bf16b / f32b, 3)
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -186,11 +237,13 @@ def main(argv=None) -> None:
         lambda p, g, s: adamw_update(p, g, s, cfg, pa=PA_JNP))(params, grads,
                                                                st))
 
+    formats = _format_sections(d_model, cfg_bf16, rounds)
+
     interpret = use_interpret()
     rows, cols = autotune.tile_params("pam_optim", (n_params,), interpret)
     report = {
         "benchmark": "pam_optim",
-        "schema_version": 1,
+        "schema_version": 2,
         "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "backend": jax.default_backend(),
         "pallas_mode": "interpret" if interpret else "compiled",
@@ -219,6 +272,7 @@ def main(argv=None) -> None:
             "pow2_literal_scales": audit["pow2"],
             "scalar_schedule": audit["scalar"],
         },
+        "formats": formats,
         "gates_passed": gates.passed,
     }
     with open(out_path, "w") as f:

@@ -18,13 +18,13 @@ Five layers, lowest to highest:
     per mantissa width (DESIGN.md §10).
   * ``analysis.hlo_audit`` — post-compile verification that XLA has not
     re-introduced multiplies after fusion/canonicalization, plus the
-    collective wire-bytes model (moved from ``launch.hlo_stats``).
+    collective wire-bytes model.
   * ``analysis.shard_check`` — subprocess entry point that forces a
     4-device host platform and proves the audit survives ``shard_map``
     collectives (grad psum, norm all-reduce).
 
 ``launch.audit`` drives the whole-repo sweep (`make audit` → AUDIT.json).
-``launch.hlo_stats`` remains as a deprecation shim over this package.
+(The former ``launch.hlo_stats`` deprecation shim has been removed.)
 """
 from .absint import (DEFAULT_WIDTHS, AnalysisReport, analyze_jaxpr,
                      default_inputs)

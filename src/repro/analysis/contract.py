@@ -24,12 +24,12 @@ are exact or bounded (DESIGN.md §2). Four rules:
       inputs.
 
   ``bitcast_width_mismatch`` (error)
-      A float<->integer ``bitcast_convert_type`` where the float side is
-      not 32-bit. Every PA bit constant in ``kernels/pa_prims.py``
-      (sign mask, mantissa mask, ``_BIAS = 127 << 23``) assumes the f32
-      layout; bitcasting bf16/f16/f64 against them reinterprets the
-      wrong exponent field. (The planned bf16-native engine — ROADMAP
-      item 4 — must land its own constants and update this rule.)
+      A float<->integer ``bitcast_convert_type`` whose two sides differ
+      in width. Every FloatFormat pairs its storage float with the
+      same-width integer carrier (f32<->int32, bf16/f16<->int16;
+      ``core/floatbits.py``), and every PA bit constant is derived from
+      that format's layout — a cross-width bitcast (e.g. bf16 against
+      int32 constants) reinterprets the wrong exponent field.
 
   ``scalar_mul_in_scan`` (warn)
       A non-pow2-exempt scalar float mul/div INSIDE a scan/while body.
@@ -145,14 +145,19 @@ def contract_lint(jaxpr) -> Dict:
                 src = dst = None
             if src is not None and dst is not None:
                 # jnp.issubdtype, not np: bf16/f16 are ml_dtypes extension
-                # types that numpy does not classify as floating.
+                # types that numpy does not classify as floating. A
+                # float<->int bitcast is legal whenever the widths MATCH —
+                # each FloatFormat pairs its storage float with the
+                # same-width integer carrier (f32<->int32, bf16/f16<->int16;
+                # core/floatbits.py) — and an error otherwise.
                 for f_dt, o_dt in ((src, dst), (dst, src)):
                     if (jnp.issubdtype(f_dt, jnp.floating)
                             and jnp.issubdtype(o_dt, jnp.integer)
-                            and f_dt.itemsize != 4):
+                            and f_dt.itemsize != o_dt.itemsize):
                         emit("bitcast_width_mismatch", "error", eqn, ctx,
-                             f"{src}->{dst} bitcast: PA bit constants in "
-                             f"kernels/pa_prims.py assume the f32 layout")
+                             f"{src}->{dst} bitcast: PA bit math requires "
+                             f"the format's same-width integer carrier "
+                             f"(core/floatbits.py)")
                         break
 
         if name in ("mul", "div") and out_float and out_aval.shape == () \

@@ -1,6 +1,5 @@
 """Compiled-HLO verification (layer 3 of the analysis subsystem,
-DESIGN.md §9) and the collective wire-bytes model (moved here from
-``launch.hlo_stats``).
+DESIGN.md §9) and the collective wire-bytes model.
 
 The jaxpr auditor proves the program we *staged* is multiplication-free;
 XLA then fuses, canonicalizes, and rewrites it. ``hlo_mul_stats`` parses

@@ -1,13 +1,24 @@
-"""Bit-level float32 helpers underlying all piecewise-affine (PA) arithmetic.
+"""Bit-level float-format helpers underlying all piecewise-affine (PA)
+arithmetic.
 
-Everything in this module operates on IEEE-754 float32 via ``int32`` bit
+Everything here operates on IEEE-754-style floats via integer-carrier bit
 manipulation (``lax.bitcast_convert_type``). These are the primitives from
 which PAM (piecewise affine multiplication, Kosson & Jaggi 2023 / Mogami 2020)
 and its relatives are assembled.
 
 Layout of a float32:  [ S(1) | E(8) | M(23) ]   value = (-1)^S 2^(E-127) (1+M/2^23)
+
+The field layout is abstracted by :class:`FloatFormat` (DESIGN.md §11):
+sign/exponent/mantissa widths, bias, and the same-width integer *carrier*
+dtype whose adds realise PAM. ``FLOAT32`` is the historical f32/int32
+instance; ``BFLOAT16``/``FLOAT16`` carry the bit algebra in int16. The
+module-level f32 constants below are retained verbatim (and pinned equal to
+``FLOAT32``'s fields) so every pre-refactor call site keeps its exact
+immediates — the f32 path is bit-identical by construction.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 import jax
@@ -42,32 +53,129 @@ INF_BITS = np.int32(0x7F800000)
 PAM_ZERO_SENTINEL = np.int32(-(1 << 30))
 
 
-def bits(x: jax.Array) -> jax.Array:
-    """float32 -> int32 bit pattern."""
-    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+# ---------------------------------------------------------------------------
+# FloatFormat: layout-generic bit-field description (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+def _lmul_l(man_bits: int) -> int:
+    """L-Mul offset exponent l(m) ("Addition is All You Need", Eq. 7):
+    l(m) = m for m <= 3, 3 for m == 4, 4 for m > 4."""
+    if man_bits <= 3:
+        return man_bits
+    if man_bits == 4:
+        return 3
+    return 4
 
 
-def floats(i: jax.Array) -> jax.Array:
-    """int32 bit pattern -> float32."""
-    return jax.lax.bitcast_convert_type(i.astype(jnp.int32), jnp.float32)
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """Bit layout of one IEEE-754-style float format plus its derived PA
+    constants, all spelled in the format's integer *carrier* dtype (int32
+    for f32, int16 for bf16/f16) so kernel bodies close over same-width
+    immediates and every PAM add runs at native lane width.
+
+    Derived-constant semantics mirror the module-level f32 constants; the
+    zero sentinel generalises the f32 derivation at PAM_ZERO_SENTINEL:
+    ``-(2^(width-2))`` keeps sentinel + bias-folded-partner inside
+    ``[carrier_min, 0)`` — always flushed, never wrapped — for any layout
+    whose magnitudes occupy width-1 bits. ``LMUL_OFFSET`` is the L-Mul
+    mantissa correction ``2^(man_bits - l(man_bits))`` added to the PAM
+    magnitude sum (equivalently: a bias fold of ``BIAS_SHIFTED -
+    LMUL_OFFSET``).
+    """
+
+    name: str
+    width: int
+    exp_bits: int
+    man_bits: int
+
+    def __post_init__(self):
+        set_ = object.__setattr__
+        if self.width == 32:
+            dtype, carrier, np_carrier = jnp.float32, jnp.int32, np.int32
+        elif self.width == 16 and self.exp_bits == 8:
+            dtype, carrier, np_carrier = jnp.bfloat16, jnp.int16, np.int16
+        elif self.width == 16 and self.exp_bits == 5:
+            dtype, carrier, np_carrier = jnp.float16, jnp.int16, np.int16
+        else:
+            raise ValueError(f"unsupported float layout: {self!r}")
+        assert 1 + self.exp_bits + self.man_bits == self.width
+        m, e = self.man_bits, self.exp_bits
+        bias = (1 << (e - 1)) - 1
+        set_(self, "exp_bias", bias)
+        set_(self, "dtype", dtype)
+        set_(self, "carrier", carrier)
+        set_(self, "np_carrier", np_carrier)
+        set_(self, "SIGN_MASK", np_carrier(-(1 << (self.width - 1))))
+        set_(self, "MAG_MASK", np_carrier((1 << (self.width - 1)) - 1))
+        set_(self, "EXP_MASK", np_carrier(((1 << e) - 1) << m))
+        set_(self, "MAN_MASK", np_carrier((1 << m) - 1))
+        set_(self, "BIAS_SHIFTED", np_carrier(bias << m))
+        set_(self, "MIN_NORM", np_carrier(1 << m))
+        set_(self, "MAX_EXP_FIELD", np_carrier(((1 << e) - 2) << m))
+        set_(self, "MAX_FINITE",
+             np_carrier((((1 << e) - 2) << m) | ((1 << m) - 1)))
+        set_(self, "INF_BITS", np_carrier(((1 << e) - 1) << m))
+        set_(self, "ZERO_SENTINEL", np_carrier(-(1 << (self.width - 2))))
+        set_(self, "LMUL_L", _lmul_l(m))
+        set_(self, "LMUL_OFFSET", np_carrier(1 << (m - _lmul_l(m))))
 
 
-def sign_bits(x: jax.Array) -> jax.Array:
-    return bits(x) & SIGN_MASK
+FLOAT32 = FloatFormat("f32", 32, 8, 23)
+BFLOAT16 = FloatFormat("bf16", 16, 8, 7)
+FLOAT16 = FloatFormat("f16", 16, 5, 10)
+
+FORMATS = {f.name: f for f in (FLOAT32, BFLOAT16, FLOAT16)}
+
+# The refactor invariant: FLOAT32's derived fields ARE the historical
+# module constants (same np.int32 values the kernels close over).
+assert FLOAT32.SIGN_MASK == SIGN_MASK and FLOAT32.MAG_MASK == MAG_MASK
+assert FLOAT32.EXP_MASK == EXP_MASK and FLOAT32.MAN_MASK == MAN_MASK
+assert FLOAT32.BIAS_SHIFTED == BIAS_SHIFTED and FLOAT32.MIN_NORM == MIN_NORM
+assert FLOAT32.MAX_FINITE == MAX_FINITE
+assert FLOAT32.MAX_EXP_FIELD == MAX_EXP_FIELD
+assert FLOAT32.INF_BITS == INF_BITS and FLOAT32.exp_bias == EXP_BIAS
+assert FLOAT32.ZERO_SENTINEL == PAM_ZERO_SENTINEL
+assert FLOAT32.man_bits == MAN_BITS
 
 
-def magnitude_bits(x: jax.Array) -> jax.Array:
-    return bits(x) & MAG_MASK
+def format_for_dtype(dtype) -> FloatFormat:
+    """Resolve the FloatFormat of a float dtype; raises for unsupported."""
+    dt = jnp.dtype(dtype)
+    for f in (FLOAT32, BFLOAT16, FLOAT16):
+        if jnp.dtype(f.dtype) == dt:
+            return f
+    raise ValueError(
+        f"no PA FloatFormat for dtype {dt} (supported: f32, bf16, f16)")
 
 
-def exponent(x: jax.Array) -> jax.Array:
-    """Unbiased exponent E (int32). Denormals/zero report -127."""
-    return ((bits(x) & EXP_MASK) >> MAN_BITS) - EXP_BIAS
+def bits(x: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    """float -> carrier-int bit pattern (f32->int32 by default)."""
+    return jax.lax.bitcast_convert_type(x.astype(fmt.dtype), fmt.carrier)
 
 
-def mantissa_field(x: jax.Array) -> jax.Array:
-    """Raw 23-bit mantissa field as int32."""
-    return bits(x) & MAN_MASK
+def floats(i: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    """carrier-int bit pattern -> float (int32->f32 by default)."""
+    return jax.lax.bitcast_convert_type(i.astype(fmt.carrier), fmt.dtype)
+
+
+def sign_bits(x: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    return bits(x, fmt) & fmt.SIGN_MASK
+
+
+def magnitude_bits(x: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    return bits(x, fmt) & fmt.MAG_MASK
+
+
+def exponent(x: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    """Unbiased exponent E (carrier int). Denormals/zero report -bias."""
+    return (((bits(x, fmt) & fmt.EXP_MASK) >> fmt.man_bits)
+            - fmt.np_carrier(fmt.exp_bias))
+
+
+def mantissa_field(x: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    """Raw mantissa field as the carrier int."""
+    return bits(x, fmt) & fmt.MAN_MASK
 
 
 def mantissa_frac(x: jax.Array) -> jax.Array:
@@ -75,33 +183,43 @@ def mantissa_frac(x: jax.Array) -> jax.Array:
     return mantissa_field(x).astype(jnp.float32) * np.float32(2.0**-MAN_BITS)
 
 
-def compose(sign: jax.Array, unbiased_exp: jax.Array, man_field: jax.Array) -> jax.Array:
-    """Assemble a float32 from sign bits (already in position), unbiased
-    exponent (int32) and mantissa field (int32). Clamps exponent to the
+def compose(sign: jax.Array, unbiased_exp: jax.Array, man_field: jax.Array,
+            fmt: FloatFormat = FLOAT32) -> jax.Array:
+    """Assemble a float from sign bits (already in position), unbiased
+    exponent and mantissa field (both carrier ints). Clamps exponent to the
     finite range; underflow flushes to zero (bf16-style, paper §2.2)."""
-    e = unbiased_exp + EXP_BIAS
-    mag = (e << MAN_BITS) | (man_field & MAN_MASK)
-    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, MAX_FINITE))
-    return floats(sign | mag)
+    e = unbiased_exp + fmt.exp_bias
+    mag = (e << fmt.man_bits) | (man_field & fmt.MAN_MASK)
+    mag = jnp.where(e <= 0, 0, jnp.minimum(mag, fmt.MAX_FINITE))
+    return floats(sign | mag, fmt)
 
 
-def pow2(k: jax.Array) -> jax.Array:
-    """Exact 2**k as float32 from an int32 exponent, clamped to finite range."""
-    e = jnp.clip(k + EXP_BIAS, 1, 254)
-    return floats(e.astype(jnp.int32) << MAN_BITS)
+def pow2(k: jax.Array, fmt: FloatFormat = FLOAT32) -> jax.Array:
+    """Exact 2**k as a float from an integer exponent, clamped to finite
+    range."""
+    e = jnp.clip(k + fmt.exp_bias, 1, (1 << fmt.exp_bits) - 2)
+    return floats(e.astype(fmt.carrier) << fmt.man_bits, fmt)
 
 
-def pow2_mul(x: jax.Array, k) -> jax.Array:
+def pow2_mul(x: jax.Array, k, fmt: FloatFormat | None = None) -> jax.Array:
     """Exact multiply of ``x`` by 2**k via exponent arithmetic (an int add on
-    the bit pattern — multiplication-free and lossless unless it over/underflows).
-    ``k`` may be a python int or an int32 array broadcastable to ``x``."""
-    x = jnp.asarray(x, jnp.float32)
-    i = bits(x)
-    k = jnp.asarray(k, jnp.int32)
-    sign = i & SIGN_MASK
-    mag = (i & MAG_MASK) + (k << MAN_BITS)
-    mag = jnp.where(mag < MIN_NORM, 0, jnp.minimum(mag, MAX_FINITE))
-    out = floats(sign | mag)
+    the bit pattern — multiplication-free and lossless unless it
+    over/underflows). ``k`` may be a python int or an integer array
+    broadcastable to ``x``. The format follows ``x``'s dtype (non-format
+    dtypes coerce to f32, the historical behaviour)."""
+    if fmt is None:
+        dt = getattr(jnp.asarray(x), "dtype", None)
+        fmt = FLOAT32
+        if dt is not None and jnp.dtype(dt) in (jnp.bfloat16, jnp.float16):
+            fmt = format_for_dtype(dt)
+    x = jnp.asarray(x, fmt.dtype)
+    i = bits(x, fmt)
+    k = jnp.asarray(k, fmt.carrier)
+    sign = i & fmt.SIGN_MASK
+    mag = (i & fmt.MAG_MASK) + (k << fmt.np_carrier(fmt.man_bits))
+    mag = jnp.where(mag < fmt.MIN_NORM, fmt.np_carrier(0),
+                    jnp.minimum(mag, fmt.MAX_FINITE))
+    out = floats(sign | mag, fmt)
     # preserve zeros / non-finite inputs
     return jnp.where((x == 0) | ~jnp.isfinite(x), x, out)
 

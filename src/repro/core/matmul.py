@@ -67,6 +67,22 @@ def _swap(x):
     return jnp.swapaxes(x, -1, -2)
 
 
+def _zero_mask(x, xi, fmt):
+    """Operand-is-zero test for the prep step. f32 keeps the float compare
+    (bit-identical to the seed engine); narrow carriers test the exponent
+    field, making the denormal flush explicit (DESIGN.md §11)."""
+    if fmt.width == 32:
+        return x == 0.0
+    return (xi & fmt.EXP_MASK) == fmt.np_carrier(0)
+
+
+def _fold_const(fmt, lmul: bool):
+    """B-side re-bias fold: BIAS for PAM, BIAS - LMUL_OFFSET for L-Mul."""
+    if not lmul:
+        return fmt.BIAS_SHIFTED
+    return fmt.np_carrier(int(fmt.BIAS_SHIFTED) - int(fmt.LMUL_OFFSET))
+
+
 # ---------------------------------------------------------------------------
 # Cost model for the scan chunk size.
 #
@@ -132,30 +148,35 @@ def _chunk_k(m: int, k: int, n: int, g: int, budget: int | None) -> int:
 # Grouped bit-level building blocks (shared by value and exact-grad paths).
 # ---------------------------------------------------------------------------
 
-def _prep_operands(a, b):
+def _prep_operands(a, b, fmt=fb.FLOAT32, lmul: bool = False):
     """Bitcast ONCE: (saT, amT) k-major for a (zero-sentineled magnitudes),
     (sb, bmg, bz) for b (bias-folded magnitudes + zero mask — the sentinel
     only flushes against a bias-folded partner, see
     floatbits.PAM_ZERO_SENTINEL). All reshaped to (..., K/g, g, dim) with K
-    zero-padded to a multiple of g."""
-    a, b = _f32(a), _f32(b)
+    zero-padded to a multiple of g. Bit math runs in ``fmt``'s carrier
+    (int32 for f32, int16 for bf16); ``lmul`` folds the L-Mul mantissa
+    offset into the B-side re-bias."""
+    a, b = jnp.asarray(a, fmt.dtype), jnp.asarray(b, fmt.dtype)
     k = a.shape[-1]
     g = max(1, min(_GROUP, k))
     kp = -(-k // g) * g
     if kp != k:
         a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, kp - k)])
         b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, kp - k), (0, 0)])
-    ai = jax.lax.bitcast_convert_type(a, jnp.int32)
-    bi = jax.lax.bitcast_convert_type(b, jnp.int32)
-    # Zero tests are FLOAT compares: under flush-to-zero arithmetic (CPU
+    ai = jax.lax.bitcast_convert_type(a, fmt.carrier)
+    bi = jax.lax.bitcast_convert_type(b, fmt.carrier)
+    # f32 zero tests are FLOAT compares: under flush-to-zero arithmetic (CPU
     # and TPU) denormal inputs equal 0.0, matching pam_value's semantics.
+    # (Narrow carriers use the exponent-field test — see _zero_mask.)
     # The B mask is an int AND-mask (0 where b==0, else ~0) — one vpand per
     # inner element instead of a bool select.
-    saT = _swap(ai & _SIGN)                        # (..., K, M)
-    amT = _swap(jnp.where(a == 0.0, _ZSENT, ai & _MAG))
-    sb = bi & _SIGN                                # (..., K, N)
-    bmg = (bi & _MAG) - _BIAS
-    bzM = jnp.where(b == 0.0, 0, -1).astype(jnp.int32)
+    az = _zero_mask(a, ai, fmt)
+    bz = _zero_mask(b, bi, fmt)
+    saT = _swap(ai & fmt.SIGN_MASK)                # (..., K, M)
+    amT = _swap(jnp.where(az, fmt.ZERO_SENTINEL, ai & fmt.MAG_MASK))
+    sb = bi & fmt.SIGN_MASK                        # (..., K, N)
+    bmg = (bi & fmt.MAG_MASK) - _fold_const(fmt, lmul)
+    bzM = jnp.where(bz, 0, -1).astype(fmt.carrier)
 
     def grp(x):
         return x.reshape(x.shape[:-2] + (kp // g, g) + x.shape[-1:])
@@ -163,36 +184,40 @@ def _prep_operands(a, b):
     return grp(saT), grp(amT), grp(sb), grp(bmg), grp(bzM), g
 
 
-def _grouped_pam_sum(saT, amT, sb, bmg, bzM, g):
+def _grouped_pam_sum(saT, amT, sb, bmg, bzM, g, fmt=fb.FLOAT32):
     """sum_k pam(a, b) for prepped (..., C, g, M) / (..., C, g, N) chunks ->
-    (..., M, N). Two-level reduction: g in-register adds, then one vector
-    reduce over the C group axis.
+    (..., M, N) float32. Two-level reduction: g in-register adds, then one
+    vector reduce over the C group axis. Products stay in ``fmt``'s carrier;
+    partial sums accumulate in f32 (exact embedding for bf16/f16, a no-op
+    on the f32 path).
 
     NOTE: keep in sync with kernels/pam_matmul/kernel.py::_grouped_pam_sum
     (same algorithm on the kernel's per-tile layout)."""
     part = None
     for j in range(g):
         mag = amT[..., :, j, :, None] + bmg[..., :, j, None, :]
-        mag = jnp.where(mag < _MIN_NORM, 0, jnp.minimum(mag, _MAX_FINITE))
+        mag = jnp.where(mag < fmt.MIN_NORM, 0, jnp.minimum(mag, fmt.MAX_FINITE))
         mag = mag & bzM[..., :, j, None, :]               # PAM(a, ±0) = ±0
         bits = (saT[..., :, j, :, None] ^ sb[..., :, j, None, :]) | mag
-        p = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        p = jax.lax.bitcast_convert_type(bits, fmt.dtype).astype(jnp.float32)
         part = p if part is None else part + p
     return jnp.sum(part, axis=-3)
 
 
-def _pam_matmul_value(a, b, *, budget: int | None = None):
+def _pam_matmul_value(a, b, *, budget: int | None = None, fmt=fb.FLOAT32,
+                      lmul: bool = False):
     """Bit-exact PAM matmul on the jnp path; grouped k-blocks, cost-model
-    chunked ``lax.scan`` over the contraction axis for large problems."""
-    a, b = _f32(a), _f32(b)
+    chunked ``lax.scan`` over the contraction axis for large problems.
+    Output dtype is ``fmt.dtype`` (accumulation stays f32 internally)."""
+    a, b = jnp.asarray(a, fmt.dtype), jnp.asarray(b, fmt.dtype)
     m, k, n = a.shape[-2], a.shape[-1], b.shape[-1]
-    saT, amT, sb, bmg, bzM, g = _prep_operands(a, b)
+    saT, amT, sb, bmg, bzM, g = _prep_operands(a, b, fmt, lmul)
     ng = saT.shape[-3]                             # K(padded) / g groups
     kc = _chunk_k(m, ng * g, n, g, budget)
     nc = kc // g                                   # groups per scan chunk
 
     if ng <= nc:
-        return _grouped_pam_sum(saT, amT, sb, bmg, bzM, g)
+        return _grouped_pam_sum(saT, amT, sb, bmg, bzM, g, fmt).astype(fmt.dtype)
 
     # Pad the GROUP axis so it splits into whole scan steps. Padded slices
     # look like zero operands (A sentinel / B AND-mask 0) and flush; no
@@ -207,15 +232,16 @@ def _pam_matmul_value(a, b, *, budget: int | None = None):
         x = x.reshape(x.shape[:-3] + (nsteps, nc) + x.shape[-2:])
         return jnp.moveaxis(x, -4, 0)              # (nsteps, ..., nc, g, dim)
 
-    xs = (split(saT), split(amT, _ZSENT), split(sb), split(bmg), split(bzM))
+    xs = (split(saT), split(amT, fmt.ZERO_SENTINEL), split(sb), split(bmg),
+          split(bzM))
     batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
     acc0 = jnp.zeros(batch + (m, n), jnp.float32)
 
     def body(acc, chunk):
-        return acc + _grouped_pam_sum(*chunk, g), ()
+        return acc + _grouped_pam_sum(*chunk, g, fmt), ()
 
     acc, _ = jax.lax.scan(body, acc0, xs)
-    return acc
+    return acc.astype(fmt.dtype)
 
 
 def _exact_grad_a(a, b, g_, *, budget: int | None = None):
@@ -307,26 +333,45 @@ def _round_inputs(a, b, mantissa_bits):
 
 
 @functools.lru_cache(maxsize=None)
-def _build(deriv: str, impl: str, mantissa_bits, compensate: bool):
+def _build(deriv: str, impl: str, mantissa_bits, compensate: bool,
+           fmt_name: str = "f32"):
     """Build a custom_vjp PAM matmul for a static numeric configuration."""
+    fmt = fb.FORMATS[fmt_name]
+    lmul = impl == "lmul"
+    if fmt_name != "f32" and mantissa_bits is not None:
+        raise ValueError(
+            "mantissa_bits simulation is an f32-path feature; "
+            f"fmt={fmt_name!r} already has a narrow mantissa")
 
     if impl == "pallas":
         from repro.kernels.pam_matmul import ops as _kops
 
         def value(a, b):
-            a, b = _round_inputs(_f32(a), _f32(b), mantissa_bits)
-            return _kops.pam_matmul(a, b)
+            a, b = _round_inputs(jnp.asarray(a, fmt.dtype),
+                                 jnp.asarray(b, fmt.dtype), mantissa_bits)
+            return _kops.pam_matmul(a, b, fmt_name=fmt_name)
 
         def grad_exact(a, b, g):
             return (_kops.pam_exact_grad_a(a, b, g),
                     _kops.pam_exact_grad_b(a, b, g))
     else:
         def value(a, b):
-            a, b = _round_inputs(_f32(a), _f32(b), mantissa_bits)
-            return _pam_matmul_value(a, b)
+            a, b = _round_inputs(jnp.asarray(a, fmt.dtype),
+                                 jnp.asarray(b, fmt.dtype), mantissa_bits)
+            return _pam_matmul_value(a, b, fmt=fmt, lmul=lmul)
 
         def grad_exact(a, b, g):
             return _exact_grad_a(a, b, g), _exact_grad_b(a, b, g)
+
+    if fmt_name != "f32":
+        # The exact power-of-two factor contraction is int32-fused; for
+        # narrow formats run it on the (exact) f32 embedding and round the
+        # cotangents back — the dfactors are powers of two either way.
+        _ge = grad_exact
+
+        def grad_exact(a, b, g):
+            da, db = _ge(_f32(a), _f32(b), _f32(g))
+            return da.astype(fmt.dtype), db.astype(fmt.dtype)
 
     def post(y):
         if compensate:
@@ -347,6 +392,11 @@ def _build(deriv: str, impl: str, mantissa_bits, compensate: bool):
         else:
             da = value(g, _swap(b))
             db = value(_swap(a), g)
+        # The engines compute in fmt.dtype; cotangents must come back in
+        # the PRIMAL dtypes or the surrounding transpose builds ill-typed
+        # HLO (e.g. f32 operands under a bf16 config).
+        da = jnp.asarray(da, jnp.result_type(a))
+        db = jnp.asarray(db, jnp.result_type(b))
         return (_unbroadcast(da, jnp.shape(a)),
                 _unbroadcast(db, jnp.shape(b)))
 
@@ -362,7 +412,8 @@ def pa_matmul(a, b, pa: PAConfig):
     collectives to what PAM hardware would execute."""
     if not pa.matmul_is_pa or pa.impl == "hw":
         return jnp.matmul(a, b)
-    return _build(pa.deriv, pa.impl, pa.mantissa_bits, pa.compensate)(a, b)
+    return _build(pa.deriv, pa.impl, pa.mantissa_bits, pa.compensate,
+                  pa.fmt)(a, b)
 
 
 def pa_linear(x, w, bias, pa: PAConfig):
@@ -378,6 +429,8 @@ def pa_elementwise_mul(a, b, pa: PAConfig, deriv: str | None = None):
     scalar gains, optimizer-style updates inside models)."""
     if pa.mode == "off" or pa.impl == "hw" or not pa.nonlin_is_pa:
         return a * b
-    a, b = _round_inputs(_f32(a), _f32(b), pa.mantissa_bits)
-    from .pam import pam as _pam
-    return _pam(a, b, deriv or pa.deriv)
+    if pa.fmt == "f32":
+        a, b = _round_inputs(_f32(a), _f32(b), pa.mantissa_bits)
+    from .pam import pam as _pam, lmul as _lmul
+    op = _lmul if pa.impl == "lmul" else _pam
+    return op(a, b, deriv or pa.deriv)

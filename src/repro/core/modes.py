@@ -13,7 +13,8 @@ from typing import Optional
 
 MODES = ("off", "matmul", "full")
 DERIVS = ("exact", "approx")
-IMPLS = ("jnp", "pallas", "hw")
+IMPLS = ("jnp", "pallas", "hw", "lmul")
+FMTS = ("f32", "bf16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,13 @@ class PAConfig:
                    used for full-scale sharding dry-runs & roofline. The HLO
                    graph (shardings, collectives, memory) is identical to what
                    PAM hardware would execute; scalar semantics are standard.
+        "lmul"   — jnp engine with the L-Mul product (PAM + 2^-l mantissa
+                   offset, "Addition is All You Need") in place of plain PAM
+                   for matmuls/elementwise products. Approx derivs only.
+      fmt: operand FloatFormat for the PA kernels (DESIGN.md §11). "f32" is
+        the historical int32-carrier path; "bf16" runs the engines natively
+        in the int16 carrier (half the HBM traffic, twice the lanes) by
+        steering the model's compute dtype to bfloat16.
       mantissa_bits: simulate narrow-mantissa inputs (Appendix D). None = 23.
       compensate: apply the §2.7 alpha-compensation PAM after matmuls.
       pa_optimizer: run the optimizer update in PA arithmetic (paper §2.6).
@@ -44,6 +52,7 @@ class PAConfig:
     deriv: str = "approx"
     loss_deriv: str = "exact"
     impl: str = "jnp"
+    fmt: str = "f32"
     mantissa_bits: Optional[int] = None
     compensate: bool = False
     pa_optimizer: Optional[bool] = None
@@ -55,6 +64,14 @@ class PAConfig:
             raise ValueError(f"deriv must be one of {DERIVS}")
         if self.impl not in IMPLS:
             raise ValueError(f"impl must be one of {IMPLS}, got {self.impl!r}")
+        if self.fmt not in FMTS:
+            raise ValueError(f"fmt must be one of {FMTS}, got {self.fmt!r}")
+        if self.impl == "lmul" and (self.deriv != "approx"
+                                    or self.loss_deriv != "approx"):
+            raise ValueError(
+                "impl='lmul' supports deriv='approx'/loss_deriv='approx' "
+                "only (L-Mul approximates multiplication; it has no exact-"
+                "derivative family)")
         if self.mantissa_bits is not None and not (1 <= self.mantissa_bits <= 23):
             raise ValueError("mantissa_bits must be in [1, 23]")
 

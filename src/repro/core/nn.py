@@ -26,6 +26,13 @@ _LN2 = np.float32(0.6931471805599453)
 _MASK_VALUE = np.float32(-1e30)
 
 
+def _c(v, like):
+    """Dtype-preserving f32 constant: numpy float32 scalars are NOT weakly
+    typed, so ``bf16_array + np.float32(c)`` would silently promote to f32
+    and break the one-format contract of the PA ops. No-op for f32."""
+    return jnp.asarray(np.float32(v), jnp.asarray(like).dtype)
+
+
 def _pa_active(pa: PAConfig) -> bool:
     return pa.nonlin_is_pa and pa.impl != "hw"
 
@@ -76,11 +83,11 @@ def pa_layernorm(x, gamma, beta, pa: PAConfig, eps: float = 1e-5):
         mu = P.pam(jnp.sum(x, axis=-1, keepdims=True), inv_n, d)
         xc = x - mu
         var = P.pam(jnp.sum(P.pam(xc, xc, d), axis=-1, keepdims=True), inv_n, d)
-        y = P.padiv(xc, P.pasqrt(var + np.float32(eps), d), d)
+        y = P.padiv(xc, P.pasqrt(var + _c(eps, var), d), d)
     if gamma is not None:
         y = _scale(y, gamma, pa)
     if beta is not None:
-        y = y + beta
+        y = y + jnp.asarray(beta, jnp.asarray(y).dtype)
     return y
 
 
@@ -94,13 +101,17 @@ def pa_rmsnorm(x, gamma, pa: PAConfig, eps: float = 1e-6):
         d = pa.deriv
         inv_n = np.float32(1.0 / n)
         var = P.pam(jnp.sum(P.pam(x, x, d), axis=-1, keepdims=True), inv_n, d)
-        y = P.padiv(x, P.pasqrt(var + np.float32(eps), d), d)
+        y = P.padiv(x, P.pasqrt(var + _c(eps, var), d), d)
     if gamma is not None:
         y = _scale(y, gamma, pa)
     return y
 
 
 def _scale(y, gamma, pa: PAConfig):
+    # Params may be stored wider (f32 master weights) than the activation
+    # format; round gamma to y's so the activation dtype survives the norm
+    # (the float branch would otherwise promote bf16 activations to f32).
+    gamma = jnp.asarray(gamma, jnp.asarray(y).dtype)
     if not _pa_active(pa):
         return y * gamma
     return P.pam(y, gamma, pa.deriv)
@@ -114,7 +125,8 @@ def pa_sigmoid(x, pa: PAConfig):
     if not _pa_active(pa):
         return jax.nn.sigmoid(x)
     d = pa.deriv
-    return P.parecip(np.float32(1.0) + P.paexp2(P.pam(-x, _LOG2E, d), d), d)
+    e = P.paexp2(P.pam(-x, _LOG2E, d), d)
+    return P.parecip(_c(1.0, e) + e, d)
 
 
 def pa_tanh(x, pa: PAConfig):
@@ -124,7 +136,8 @@ def pa_tanh(x, pa: PAConfig):
     # tanh(x) = 2*sigmoid(2x) - 1; the *2 / 2x are exact pow2 scales.
     from . import floatbits as fb
     s = pa_sigmoid(fb.pow2_mul(x, 1), pa)
-    return fb.pow2_mul(s, 1) - np.float32(1.0)
+    s2 = fb.pow2_mul(s, 1)
+    return s2 - _c(1.0, s2)
 
 
 def pa_silu(x, pa: PAConfig):
@@ -144,7 +157,8 @@ def pa_gelu(x, pa: PAConfig):
     inner = P.pam(c0, x + P.pam(c1, x3, d), d)
     from . import floatbits as fb
     half_x = fb.pow2_mul(x, -1)
-    return P.pam(half_x, np.float32(1.0) + pa_tanh(inner, pa), d)
+    th = pa_tanh(inner, pa)
+    return P.pam(half_x, _c(1.0, th) + th, d)
 
 
 def pa_relu(x, pa: PAConfig):
@@ -160,7 +174,8 @@ def pa_softplus(x, pa: PAConfig):
     if not _pa_active(pa):
         return jax.nn.softplus(x)
     d = pa.deriv
-    return P.pam(P.palog2(np.float32(1.0) + P.paexp2(P.pam(x, _LOG2E, d), d), d), _LN2, d)
+    e = P.paexp2(P.pam(x, _LOG2E, d), d)
+    return P.pam(P.palog2(_c(1.0, e) + e, d), _LN2, d)
 
 
 ACTIVATIONS = {

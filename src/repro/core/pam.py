@@ -25,83 +25,163 @@ _LOG2E = np.float32(1.4426950408889634)   # log2(e)
 _LN2 = np.float32(0.6931471805599453)     # ln(2)
 
 # ---------------------------------------------------------------------------
-# Raw (non-differentiable) forward values.
+# Format dispatch (FloatFormat engine family, DESIGN.md §11).
 # ---------------------------------------------------------------------------
 
 def _f32(x):
     return jnp.asarray(x, jnp.float32)
 
 
-def pam_value(a, b):
-    """Bit-exact PAM forward: sign-XOR, int32 magnitude add, re-bias, clamp."""
-    a, b = _f32(a), _f32(b)
-    ai, bi = fb.bits(a), fb.bits(b)
-    sign = (ai ^ bi) & fb.SIGN_MASK
-    mag = (ai & fb.MAG_MASK) + (bi & fb.MAG_MASK) - fb.BIAS_SHIFTED
-    # int32 wraps in the intermediate cancel (mod-2^32); a final value below
-    # -BIAS can only come from a true exponent overflow (>= 2^31) -> clamp,
-    # while [-BIAS, MIN_NORM) is a genuine underflow -> flush. The two
-    # negative ranges are disjoint (hypothesis-found edge case).
-    ovf = mag < -fb.BIAS_SHIFTED
-    mag = jnp.where(mag < fb.MIN_NORM, 0, jnp.minimum(mag, fb.MAX_FINITE))
-    mag = jnp.where(ovf, fb.MAX_FINITE, mag)
-    out = fb.floats(sign | mag)
-    zero = (a == 0) | (b == 0)
+_FMT_BY_DTYPE = {
+    jnp.dtype(jnp.float32): fb.FLOAT32,
+    jnp.dtype(jnp.bfloat16): fb.BFLOAT16,
+    jnp.dtype(jnp.float16): fb.FLOAT16,
+}
+
+
+def _operand_fmt(*xs) -> fb.FloatFormat:
+    """FloatFormat implied by the operands of a PA op.
+
+    Non-scalar float arrays vote with their dtype and must all agree —
+    mixing bf16 with f32 tensors raises a TypeError (cast explicitly at the
+    boundary; silent promotion would hide an f32 round-trip). Scalars
+    (python numbers, numpy scalars, 0-d arrays — e.g. the np.float32
+    constants in core/nn.py) carry no vote and follow the array operand,
+    so ``pam(bf16_activations, _LOG2E)`` stays bf16-native. With no array
+    operand at all the historical f32 coercion applies.
+    """
+    votes, scalars = {}, {}
+    for x in xs:
+        dt = getattr(x, "dtype", None)
+        if dt is None:
+            continue
+        f = _FMT_BY_DTYPE.get(jnp.dtype(dt))
+        if f is None:
+            continue    # int / f64 operands fall back to the f32 coercion
+        (votes if np.ndim(x) else scalars).setdefault(f.name, f)
+    if len(votes) > 1:
+        raise TypeError(
+            "PA ops require operands of one float format, got "
+            f"{sorted(votes)}; cast to a single dtype explicitly "
+            "(e.g. x.astype(jnp.float32)) before the op")
+    if votes:
+        return next(iter(votes.values()))
+    if len(scalars) == 1:
+        return next(iter(scalars.values()))
+    return fb.FLOAT32
+
+
+def _value_zero(x, xi, fmt):
+    """Operand-is-zero test. f32 keeps the float compare (bit-identical to
+    the seed); narrow carriers test the exponent field so the denormal
+    flush documented by the absint domain is explicit in bits."""
+    if fmt.width == 32:
+        return x == 0
+    return (xi & fmt.EXP_MASK) == fmt.np_carrier(0)
+
+
+# ---------------------------------------------------------------------------
+# Raw (non-differentiable) forward values.
+# ---------------------------------------------------------------------------
+
+def _pam_like_value(a, b, fmt, fold):
+    """Shared PAM-family forward: sign-XOR, carrier magnitude add, re-bias
+    by ``fold``, clamp. ``fold = BIAS_SHIFTED`` is plain PAM;
+    ``BIAS_SHIFTED - LMUL_OFFSET`` is the L-Mul product."""
+    a, b = jnp.asarray(a, fmt.dtype), jnp.asarray(b, fmt.dtype)
+    ai, bi = fb.bits(a, fmt), fb.bits(b, fmt)
+    sign = (ai ^ bi) & fmt.SIGN_MASK
+    mag = (ai & fmt.MAG_MASK) + (bi & fmt.MAG_MASK) - fold
+    # The carrier wraps in the intermediate cancel (mod 2^width); a final
+    # value below -BIAS can only come from a true exponent overflow ->
+    # clamp, while [-BIAS, MIN_NORM) is a genuine underflow -> flush. The
+    # two negative ranges are disjoint in EVERY supported carrier
+    # (hypothesis-found edge case; int16 analogue in DESIGN.md §11).
+    ovf = mag < -fmt.BIAS_SHIFTED
+    mag = jnp.where(mag < fmt.MIN_NORM, 0, jnp.minimum(mag, fmt.MAX_FINITE))
+    mag = jnp.where(ovf, fmt.MAX_FINITE, mag)
+    out = fb.floats(sign | mag, fmt)
+    zero = _value_zero(a, ai, fmt) | _value_zero(b, bi, fmt)
     inf = jnp.isinf(a) | jnp.isinf(b)
-    out = jnp.where(zero, fb.floats(sign), out)                # signed zero
-    out = jnp.where(inf, fb.floats(sign | fb.INF_BITS), out)   # signed inf
-    nan = jnp.isnan(a) | jnp.isnan(b) | (inf & zero)           # 0 * inf -> nan
-    return jnp.where(nan, jnp.float32(jnp.nan), out)
+    out = jnp.where(zero, fb.floats(sign, fmt), out)                # signed zero
+    out = jnp.where(inf, fb.floats(sign | fmt.INF_BITS, fmt), out)  # signed inf
+    nan = jnp.isnan(a) | jnp.isnan(b) | (inf & zero)                # 0 * inf -> nan
+    return jnp.where(nan, jnp.asarray(jnp.nan, fmt.dtype), out)
+
+
+def pam_value(a, b):
+    """Bit-exact PAM forward: sign-XOR, carrier magnitude add, re-bias,
+    clamp. Dispatches on operand dtype (f32 -> int32 bit math, bf16/f16 ->
+    int16 native)."""
+    fmt = _operand_fmt(a, b)
+    return _pam_like_value(a, b, fmt, fmt.BIAS_SHIFTED)
+
+
+def lmul_value(a, b):
+    """L-Mul forward ("Addition is All You Need", Eq. 7): PAM with the
+    +2^-l mantissa offset folded into the re-bias constant. Error band
+    [-161/2209, +1/16] (kernels/pa_prims.py has the derivation)."""
+    fmt = _operand_fmt(a, b)
+    return _pam_like_value(
+        a, b, fmt, fmt.np_carrier(int(fmt.BIAS_SHIFTED) - int(fmt.LMUL_OFFSET)))
 
 
 def padiv_value(a, b):
-    """Bit-exact PA division: int32 magnitude subtract, re-bias, clamp."""
-    a, b = _f32(a), _f32(b)
-    ai, bi = fb.bits(a), fb.bits(b)
-    sign = (ai ^ bi) & fb.SIGN_MASK
-    mag = (ai & fb.MAG_MASK) - (bi & fb.MAG_MASK) + fb.BIAS_SHIFTED
+    """Bit-exact PA division: carrier magnitude subtract, re-bias, clamp."""
+    fmt = _operand_fmt(a, b)
+    a, b = jnp.asarray(a, fmt.dtype), jnp.asarray(b, fmt.dtype)
+    ai, bi = fb.bits(a, fmt), fb.bits(b, fmt)
+    sign = (ai ^ bi) & fmt.SIGN_MASK
+    mag = (ai & fmt.MAG_MASK) - (bi & fmt.MAG_MASK) + fmt.BIAS_SHIFTED
     # same disjoint-ranges overflow test as pam_value
-    ovf = mag < -fb.BIAS_SHIFTED
-    mag = jnp.where(mag < fb.MIN_NORM, 0, jnp.minimum(mag, fb.MAX_FINITE))
-    mag = jnp.where(ovf, fb.MAX_FINITE, mag)
-    out = fb.floats(sign | mag)
-    out = jnp.where(a == 0, fb.floats(sign), out)                      # 0/b
-    out = jnp.where(b == 0, fb.floats(sign | fb.INF_BITS), out)        # a/0
-    out = jnp.where(jnp.isinf(a), fb.floats(sign | fb.INF_BITS), out)  # inf/b
-    out = jnp.where(jnp.isinf(b), fb.floats(sign), out)                # a/inf
+    ovf = mag < -fmt.BIAS_SHIFTED
+    mag = jnp.where(mag < fmt.MIN_NORM, 0, jnp.minimum(mag, fmt.MAX_FINITE))
+    mag = jnp.where(ovf, fmt.MAX_FINITE, mag)
+    out = fb.floats(sign | mag, fmt)
+    az = _value_zero(a, ai, fmt)
+    bz = _value_zero(b, bi, fmt)
+    out = jnp.where(az, fb.floats(sign, fmt), out)                      # 0/b
+    out = jnp.where(bz, fb.floats(sign | fmt.INF_BITS, fmt), out)       # a/0
+    out = jnp.where(jnp.isinf(a), fb.floats(sign | fmt.INF_BITS, fmt), out)
+    out = jnp.where(jnp.isinf(b), fb.floats(sign, fmt), out)            # a/inf
     nan = (jnp.isnan(a) | jnp.isnan(b)
-           | ((a == 0) & (b == 0))
+           | (az & bz)
            | (jnp.isinf(a) & jnp.isinf(b)))
-    return jnp.where(nan, jnp.float32(jnp.nan), out)
+    return jnp.where(nan, jnp.asarray(jnp.nan, fmt.dtype), out)
 
 
 def paexp2_value(a):
     """paexp2(A) = 2^floor(A) * (1 + A - floor(A))   (paper Eq. 9)."""
-    a = _f32(a)
+    fmt = _operand_fmt(a)
+    a = jnp.asarray(a, fmt.dtype)
     # Clamp the range used for bit manipulation: anything <= -150 underflows
     # to 0 and anything >= 128 overflows to inf regardless, and the clamp
     # keeps floor()/int conversion well-defined for +-inf / huge mask values.
+    # (+-16384 = 2^14 is exact in every supported format.)
     ac = jnp.clip(a, -16384.0, 16384.0)
     n = jnp.floor(ac)
     f = ac - n                                  # in [0, 1): pure float subtract
-    man = jnp.round(f * np.float32(2.0**fb.MAN_BITS)).astype(jnp.int32)
-    carry = man >> fb.MAN_BITS                  # f rounded up to exactly 1.0
-    out = fb.compose(jnp.int32(0), n.astype(jnp.int32) + carry,
-                     man & fb.MAN_MASK)
-    out = jnp.where(a >= 128.0, jnp.float32(jnp.inf), out)
-    return jnp.where(jnp.isnan(a), jnp.float32(jnp.nan), out)
+    man = jnp.round(f * jnp.asarray(2.0**fmt.man_bits, fmt.dtype)).astype(fmt.carrier)
+    carry = man >> fmt.man_bits                 # f rounded up to exactly 1.0
+    out = fb.compose(fmt.np_carrier(0), n.astype(fmt.carrier) + carry,
+                     man & fmt.MAN_MASK, fmt)
+    out = jnp.where(a >= 128.0, jnp.asarray(jnp.inf, fmt.dtype), out)
+    return jnp.where(jnp.isnan(a), jnp.asarray(jnp.nan, fmt.dtype), out)
 
 
 def palog2_value(a):
     """palog2(A) = E_A + M_A for A > 0  (paper Eq. 10).
 
-    Computed as (bits(A) - bits(1.0)) * 2^-23 — an int subtract and an exact
-    power-of-two scale (multiplication-free)."""
-    a = _f32(a)
-    out = (fb.bits(a) - fb.BIAS_SHIFTED).astype(jnp.float32) * np.float32(2.0**-fb.MAN_BITS)
-    out = jnp.where(a == 0, -jnp.float32(jnp.inf), out)
-    out = jnp.where(a < 0, jnp.float32(jnp.nan), out)
-    return jnp.where(jnp.isnan(a), jnp.float32(jnp.nan), out)
+    Computed as (bits(A) - bits(1.0)) * 2^-man_bits — an int subtract and an
+    exact power-of-two scale (multiplication-free)."""
+    fmt = _operand_fmt(a)
+    a = jnp.asarray(a, fmt.dtype)
+    ai = fb.bits(a, fmt)
+    out = ((ai - fmt.BIAS_SHIFTED).astype(fmt.dtype)
+           * jnp.asarray(2.0**-fmt.man_bits, fmt.dtype))
+    out = jnp.where(_value_zero(a, ai, fmt), -jnp.asarray(jnp.inf, fmt.dtype), out)
+    out = jnp.where(a < 0, jnp.asarray(jnp.nan, fmt.dtype), out)
+    return jnp.where(jnp.isnan(a), jnp.asarray(jnp.nan, fmt.dtype), out)
 
 
 def pasqrt_value(a):
@@ -113,29 +193,35 @@ def pasqrt_value(a):
 
 # -- Exact-derivative scale factors (all signed powers of two) --------------
 
-def _pam_carry(a, b):
-    """1{M_A + M_B >= 1} as int32."""
-    return ((fb.mantissa_field(a) + fb.mantissa_field(b)) >> fb.MAN_BITS).astype(jnp.int32)
+def _pam_carry(a, b, fmt=fb.FLOAT32):
+    """1{M_A + M_B >= 1} as the carrier int."""
+    return ((fb.mantissa_field(a, fmt) + fb.mantissa_field(b, fmt))
+            >> fmt.man_bits).astype(fmt.carrier)
 
 
 def pam_exact_dfactor(a, b):
     """d(A ·̂ B)/dA = (-1)^{S_B} 2^{E_B + 1{M_A+M_B>=1}} (paper Table 1)."""
-    k = fb.exponent(b) + _pam_carry(a, b)
-    mag = jnp.clip(k + fb.EXP_BIAS, 1, 254) << fb.MAN_BITS
-    out = fb.floats(fb.sign_bits(b) | mag)
-    return jnp.where(b == 0, jnp.float32(0), out)
+    fmt = _operand_fmt(a, b)
+    a, b = jnp.asarray(a, fmt.dtype), jnp.asarray(b, fmt.dtype)
+    k = fb.exponent(b, fmt) + _pam_carry(a, b, fmt)
+    mag = jnp.clip(k + fmt.exp_bias, 1, (1 << fmt.exp_bits) - 2).astype(fmt.carrier) << fmt.man_bits
+    out = fb.floats(fb.sign_bits(b, fmt) | mag, fmt)
+    return jnp.where(_value_zero(b, fb.bits(b, fmt), fmt),
+                     jnp.zeros((), fmt.dtype), out)
 
 
-def _padiv_borrow(a, b):
-    """1{M_A - M_B < 0} as int32."""
-    return (fb.mantissa_field(a) < fb.mantissa_field(b)).astype(jnp.int32)
+def _padiv_borrow(a, b, fmt=fb.FLOAT32):
+    """1{M_A - M_B < 0} as the carrier int."""
+    return (fb.mantissa_field(a, fmt) < fb.mantissa_field(b, fmt)).astype(fmt.carrier)
 
 
 def padiv_exact_dfactor(a, b):
     """d(A ÷̂ B)/dA = (-1)^{S_B} 2^{-E_B - 1{M_A-M_B<0}}."""
-    k = -fb.exponent(b) - _padiv_borrow(a, b)
-    mag = jnp.clip(k + fb.EXP_BIAS, 1, 254) << fb.MAN_BITS
-    return fb.floats(fb.sign_bits(b) | mag)
+    fmt = _operand_fmt(a, b)
+    a, b = jnp.asarray(a, fmt.dtype), jnp.asarray(b, fmt.dtype)
+    k = -fb.exponent(b, fmt) - _padiv_borrow(a, b, fmt)
+    mag = jnp.clip(k + fmt.exp_bias, 1, (1 << fmt.exp_bits) - 2).astype(fmt.carrier) << fmt.man_bits
+    return fb.floats(fb.sign_bits(b, fmt) | mag, fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +288,17 @@ _pam_approx = _make_binary(
     lambda a, b, g: pam_value(a, g),
     "pam_approx")
 
+# L-Mul is an *approximation of multiplication*, so only the approx
+# derivative family exists (the "exact" piecewise derivative of the offset
+# product is the same power-of-two ladder as PAM's and adds nothing);
+# core/modes.py gates impl="lmul" to deriv="approx" accordingly. The
+# backward products themselves use L-Mul for engine consistency.
+_lmul_approx = _make_binary(
+    lmul_value,
+    lambda a, b, g: lmul_value(b, g),
+    lambda a, b, g: lmul_value(a, g),
+    "lmul_approx")
+
 _padiv_exact = _make_binary(
     padiv_value,
     lambda a, b, g: pam_value(padiv_exact_dfactor(a, b), g),
@@ -236,6 +333,7 @@ _palog2_approx = _make_unary(
 
 _BY_DERIV = {
     ("pam", "exact"): _pam_exact, ("pam", "approx"): _pam_approx,
+    ("lmul", "approx"): _lmul_approx,
     ("padiv", "exact"): _padiv_exact, ("padiv", "approx"): _padiv_approx,
     ("paexp2", "exact"): _paexp2_exact, ("paexp2", "approx"): _paexp2_approx,
     ("palog2", "exact"): _palog2_exact, ("palog2", "approx"): _palog2_approx,
@@ -243,32 +341,43 @@ _BY_DERIV = {
 
 
 # ---------------------------------------------------------------------------
-# Public API.
+# Public API. Each op resolves the FloatFormat from its operands
+# (_operand_fmt) and coerces scalars to it; for f32 operands this is the
+# historical jnp.float32 coercion, bit for bit.
 # ---------------------------------------------------------------------------
+
+def _coerced(fmt, *xs):
+    return tuple(jnp.asarray(x, fmt.dtype) for x in xs)
+
 
 def pam(a, b, deriv: str = "approx"):
     """Piecewise-affine multiplication A ·̂ B (paper Eq. 5–8)."""
-    return _BY_DERIV[("pam", deriv)](_f32(a), _f32(b))
+    return _BY_DERIV[("pam", deriv)](*_coerced(_operand_fmt(a, b), a, b))
+
+
+def lmul(a, b, deriv: str = "approx"):
+    """L-Mul product (PAM + 2^-l mantissa offset); approx deriv only."""
+    return _BY_DERIV[("lmul", deriv)](*_coerced(_operand_fmt(a, b), a, b))
 
 
 def padiv(a, b, deriv: str = "approx"):
     """Piecewise-affine division A ÷̂ B (paper Eq. 14–17)."""
-    return _BY_DERIV[("padiv", deriv)](_f32(a), _f32(b))
+    return _BY_DERIV[("padiv", deriv)](*_coerced(_operand_fmt(a, b), a, b))
 
 
 def paexp2(a, deriv: str = "approx"):
     """Piecewise-affine 2**A (paper Eq. 9)."""
-    return _BY_DERIV[("paexp2", deriv)](_f32(a))
+    return _BY_DERIV[("paexp2", deriv)](*_coerced(_operand_fmt(a), a))
 
 
 def palog2(a, deriv: str = "approx"):
     """Piecewise-affine log2(A), A > 0 (paper Eq. 10)."""
-    return _BY_DERIV[("palog2", deriv)](_f32(a))
+    return _BY_DERIV[("palog2", deriv)](*_coerced(_operand_fmt(a), a))
 
 
 def paexp(a, deriv: str = "approx"):
     """paexp(A) = paexp2(log2(e) ·̂ A)  (paper Eq. 18)."""
-    return paexp2(pam(_f32(a), _LOG2E, deriv), deriv)
+    return paexp2(pam(a, _LOG2E, deriv), deriv)
 
 
 def palog(a, deriv: str = "approx"):
@@ -284,7 +393,7 @@ def pasqrt(a, deriv: str = "approx"):
 
 def parecip(a, deriv: str = "approx"):
     """1 ÷̂ A — reciprocal as PA division."""
-    return padiv(jnp.float32(1.0), _f32(a), deriv)
+    return padiv(jnp.float32(1.0), a, deriv)
 
 
 # §2.7 error compensation: pam(pam(a, b), alpha) reduces the mean/worst-case

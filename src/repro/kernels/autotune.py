@@ -75,13 +75,27 @@ def _bucket(x: int) -> int:
 
 
 def register_tile_params(op: str, shape, params, *,
-                         backend: str = "interpret") -> None:
-    """Add/override the params tuple for an op's shape bucket."""
-    _TABLE[(op, backend) + tuple(_bucket(int(s)) for s in shape)] = tuple(params)
+                         backend: str = "interpret",
+                         fmt: str = "f32") -> None:
+    """Add/override the params tuple for an op's shape bucket. Non-f32
+    formats register under a format-qualified backend key."""
+    be = backend if fmt == "f32" else f"{backend}:{fmt}"
+    _TABLE[(op, be) + tuple(_bucket(int(s)) for s in shape)] = tuple(params)
 
 
-def tile_params(op: str, shape, interpret: bool):
-    """Resolve an op's params tuple for a problem shape."""
+def tile_params(op: str, shape, interpret: bool, fmt: str = "f32"):
+    """Resolve an op's params tuple for a problem shape.
+
+    The format axis is part of the key: bf16 tiles pack twice the lanes, so
+    measured optima differ from f32. Lookup falls back format-qualified ->
+    plain backend entry -> backend default, so every format resolves even
+    before a tuning sweep has run for it.
+    """
     backend = "interpret" if interpret else "tpu"
-    key = (op, backend) + tuple(_bucket(int(s)) for s in shape)
+    buckets = tuple(_bucket(int(s)) for s in shape)
+    if fmt != "f32":
+        hit = _TABLE.get((op, f"{backend}:{fmt}") + buckets)
+        if hit is not None:
+            return hit
+    key = (op, backend) + buckets
     return _TABLE.get(key, _DEFAULTS[(op, backend)])

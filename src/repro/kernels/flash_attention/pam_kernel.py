@@ -47,38 +47,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..pa_prims import _pam, _padiv, _paexp2, _pam_dot, _LOG2E, _LN2
+from repro.core import floatbits as _fb
+from ..pa_prims import (_pam, _padiv, _paexp2, _pam_dot, _LOG2E, _LN2,
+                        get_prims)
 
 _NEG = np.float32(-1e30)
 _L2E = np.float32(_LOG2E)
 _LN2F = np.float32(_LN2)
 
+# Mixed-precision posture for narrow formats (DESIGN.md §11): every
+# O(S*T)-sized tile — scores, e, p, dS — lives in the format's carrier
+# (int16 bit math, bf16 VMEM traffic), while the O(S)-sized streaming state
+# (acc, m, l, dsig) stays f32 in VMEM and is rescaled by f32 PA ops whose
+# narrow operands embed EXACTLY in f32 (bf16 -> f32 is lossless), so the
+# f32 path below is the fmt="f32" instance of the same code, bit for bit.
 
-def _masked_scores(q, k, qp, kp, *, g, scale, causal, window):
+
+def _masked_scores(q, k, qp, kp, *, g, scale, causal, window,
+                   fmt_name: str = "f32"):
     """PAM score tile with positional masking.
 
     q: (bq, dh), k: (bk, dh), qp: (bq,) int32, kp: (bk,) int32. Masked
     entries become exactly -1e30 — the same value the unfused path's
-    ``where`` select uses, so paexp2 flushes them to an exact 0.
+    ``where`` select uses, so paexp2 flushes them to an exact 0 (the
+    bf16 rounding of -1e30 flushes identically).
     """
-    s = _pam_dot(q, k.T, g)                        # (bq, bk)
+    pp = get_prims(fmt_name)
+    dt = pp.fmt.dtype
+    s = pp.pam_dot(q, k.T, g).astype(dt)           # (bq, bk)
     if scale is not None:
-        s = _pam(s, np.float32(scale))
+        s = pp.pam(s, jnp.asarray(np.float32(scale), dt))
     valid = (kp >= 0)[None, :]
     if causal:
         valid &= kp[None, :] <= qp[:, None]
     if window is not None:
         valid &= (qp[:, None] - kp[None, :]) < window
-    return jnp.where(valid, s, _NEG)
+    return jnp.where(valid, s, jnp.asarray(_NEG, dt))
 
 
-def _delta_dsig(do, o, l):
+def _delta_dsig(do, o, l, fmt_name: str = "f32"):
     """Row cotangent of the PA softmax sum via the delta trick:
     ``Σ_j padiv(pam(e, dP), pam(l, l)) == padiv(rowsum(pam(dO, O)), l)``
     in exact arithmetic (Σ_j e·dP = l·(dO·O)); both engines evaluate this
     identical PA expression (DESIGN.md §4.3). do/o: (bq, dh), l: (bq, 1).
+    The dO·O products run in the carrier; the row sum and the padiv by the
+    f32 ``l`` stat stay f32.
     """
-    return -_padiv(jnp.sum(_pam(do, o), axis=-1, keepdims=True), l)
+    pp = get_prims(fmt_name)
+    prod = pp.pam(do, o).astype(jnp.float32)
+    return -_padiv(jnp.sum(prod, axis=-1, keepdims=True), l)
 
 
 # ---------------------------------------------------------------------------
@@ -88,7 +105,10 @@ def _delta_dsig(do, o, l):
 
 def _fwd_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref,
                 l_out_ref, acc_ref, m_ref, l_ref,
-                *, g, nk, causal, window, scale):
+                *, g, nk, causal, window, scale, fmt_name):
+    pp = get_prims(fmt_name)
+    dt = pp.fmt.dtype
+    l2e = jnp.asarray(_L2E, dt)
     kv = pl.program_id(2)
 
     @pl.when(kv == 0)
@@ -101,32 +121,38 @@ def _fwd_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref,
     k = k_ref[0]                                   # (bk, dh)
     v = v_ref[0]                                   # (bk, dh)
     s = _masked_scores(q, k, qp_ref[0], kp_ref[0], g=g, scale=scale,
-                       causal=causal, window=window)
+                       causal=causal, window=window, fmt_name=fmt_name)
 
-    m_prev = m_ref[...]                            # (bq, 1)
+    m_prev = m_ref[...]                            # (bq, 1) f32
     l_prev = l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_new = jnp.maximum(m_prev,
+                        jnp.max(s.astype(jnp.float32), axis=-1,
+                                keepdims=True))
     # PA rescale: alpha == 1.0 exactly when the running max is unchanged
     # (PAM by 1.0 is the identity), so rescale error only accrues on steps
-    # that raise the max (DESIGN.md §4.2).
-    alpha = _paexp2(_pam(m_prev - m_new, _L2E))
-    p = _paexp2(_pam(s - m_new, _L2E))             # (bq, bk)
-    l_ref[...] = _pam(l_prev, alpha) + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = _pam(acc_ref[...], alpha) + _pam_dot(p, v, g)
+    # that raise the max (DESIGN.md §4.2). alpha/p run in the carrier; the
+    # f32 streaming state is rescaled by the exactly-embedded alpha.
+    alpha = pp.paexp2(pp.pam((m_prev - m_new).astype(dt), l2e))
+    p = pp.paexp2(pp.pam(s - m_new.astype(dt), l2e))   # (bq, bk)
+    l_ref[...] = (_pam(l_prev, alpha.astype(jnp.float32))
+                  + jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True))
+    acc_ref[...] = (_pam(acc_ref[...], alpha.astype(jnp.float32))
+                    + pp.pam_dot(p, v, g))
     m_ref[...] = m_new
 
     @pl.when(kv == nk - 1)
     def _out():
-        o_ref[0] = _padiv(acc_ref[...], l_ref[...])
+        o_ref[0] = _padiv(acc_ref[...], l_ref[...]).astype(o_ref.dtype)
         m_out_ref[0] = m_ref[...][:, 0]
         l_out_ref[0] = l_ref[...][:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
-                                             "bq", "bk", "g", "interpret"))
+                                             "bq", "bk", "g", "interpret",
+                                             "fmt_name"))
 def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
                                window, scale, bq: int, bk: int, g: int,
-                               interpret: bool):
+                               interpret: bool, fmt_name: str = "f32"):
     """q: (B*Hq, S, Dh), k/v: (B*Hkv, T, Dh), q_pos: (S,), k_pos: (T,) int32.
 
     ``B*Hq`` must be a multiple of ``B*Hkv``; the query group shares its KV
@@ -134,15 +160,18 @@ def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
     are never replicated in HBM. Returns (o, m, l) with m/l the (B*Hq, S)
     streaming row stats. Padding is positional: padded KV slots carry
     k_pos == -1 and are masked in every mode; padded query rows are cropped.
+    ``fmt_name`` picks the FloatFormat: bf16 streams q/k/v/o tiles at half
+    the HBM bytes while m/l and the accumulator stay f32.
     """
+    dt = _fb.FORMATS[fmt_name].dtype
     bh, s_len, dh = q.shape
     t = k.shape[1]
     rep = bh // k.shape[0]
     bq_, bk_ = min(bq, s_len), min(bk, t)
     sp, tp = -(-s_len // bq_) * bq_, -(-t // bk_) * bk_
-    qp = jnp.pad(q, ((0, 0), (0, sp - s_len), (0, 0)))
-    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    qp = jnp.pad(q.astype(dt), ((0, 0), (0, sp - s_len), (0, 0)))
+    kp = jnp.pad(k.astype(dt), ((0, 0), (0, tp - t), (0, 0)))
+    vp = jnp.pad(v.astype(dt), ((0, 0), (0, tp - t), (0, 0)))
     qpos = jnp.pad(q_pos.astype(jnp.int32), (0, sp - s_len),
                    constant_values=-1)[None]
     kpos = jnp.pad(k_pos.astype(jnp.int32), (0, tp - t),
@@ -151,7 +180,7 @@ def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
 
     o, m, l = pl.pallas_call(
         functools.partial(_fwd_kernel, g=g, nk=nk, causal=causal,
-                          window=window, scale=scale),
+                          window=window, scale=scale, fmt_name=fmt_name),
         grid=(bh, sp // bq_, nk),
         in_specs=[
             pl.BlockSpec((1, bq_), lambda b, i, j: (0, i)),
@@ -166,7 +195,7 @@ def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
             pl.BlockSpec((1, bq_), lambda b, i, j: (b, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bh, sp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sp, dh), dt),
             jax.ShapeDtypeStruct((bh, sp), jnp.float32),
             jax.ShapeDtypeStruct((bh, sp), jnp.float32),
         ],
@@ -189,38 +218,46 @@ def pam_flash_attention_fwd_bh(q, k, v, q_pos, k_pos, *, causal: bool,
 # The completed dsig rows are emitted for sweep 2.
 # ---------------------------------------------------------------------------
 
-def _ds_tile(e, dp, l, dsig, *, scale):
+def _ds_tile(e, dp, l, dsig, *, scale, fmt_name="f32"):
+    # The O(S)-sized stats (l, dsig) and the f32-accumulated dp tile feed an
+    # f32 PA chain; the result rounds to the carrier ONCE for the dS·K /
+    # dSᵀ·Q tile products (no-op round for f32).
+    pp = get_prims(fmt_name)
     de = _padiv(dp, l) + dsig
-    du = _pam(_pam(e, _LN2F), de)
+    du = _pam(_pam(e.astype(jnp.float32), _LN2F), de)
     ds = _pam(du, _L2E)
     if scale is not None:
         ds = _pam(ds, np.float32(scale))
-    return ds
+    return ds.astype(pp.fmt.dtype)
 
 
 def _dq_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, do_ref, m_ref,
                l_ref, dq_ref, dsig_ref, acc_ref, dsig_acc,
-               *, g, nk, causal, window, scale):
+               *, g, nk, causal, window, scale, fmt_name):
+    pp = get_prims(fmt_name)
+    dt = pp.fmt.dtype
+    l2e = jnp.asarray(_L2E, dt)
     kv = pl.program_id(2)
 
     @pl.when(kv == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         dsig_acc[...] = _delta_dsig(do_ref[0], o_ref[0],
-                                    l_ref[0][:, None])
+                                    l_ref[0][:, None], fmt_name)
 
     s = _masked_scores(q_ref[0], k_ref[0], qp_ref[0], kp_ref[0], g=g,
-                       scale=scale, causal=causal, window=window)
+                       scale=scale, causal=causal, window=window,
+                       fmt_name=fmt_name)
     m = m_ref[0][:, None]
     l = l_ref[0][:, None]
-    e = _paexp2(_pam(s - m, _L2E))                 # masked entries: exact 0
-    dp = _pam_dot(do_ref[0], v_ref[0].T, g)        # (bq, bk)
-    ds = _ds_tile(e, dp, l, dsig_acc[...], scale=scale)
-    acc_ref[...] += _pam_dot(ds, k_ref[0], g)      # (bq, dh)
+    e = pp.paexp2(pp.pam(s - m.astype(dt), l2e))   # masked entries: exact 0
+    dp = pp.pam_dot(do_ref[0], v_ref[0].T, g)      # (bq, bk) f32
+    ds = _ds_tile(e, dp, l, dsig_acc[...], scale=scale, fmt_name=fmt_name)
+    acc_ref[...] += pp.pam_dot(ds, k_ref[0], g)    # (bq, dh)
 
     @pl.when(kv == nk - 1)
     def _out():
-        dq_ref[0] = acc_ref[...]
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
         dsig_ref[0] = dsig_acc[...][:, 0]
 
 
@@ -234,7 +271,10 @@ def _dq_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, do_ref, m_ref,
 
 def _dkv_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
                 dsig_ref, dk_ref, dv_ref, dk_acc, dv_acc,
-                *, g, rep, nq, causal, window, scale):
+                *, g, rep, nq, causal, window, scale, fmt_name):
+    pp = get_prims(fmt_name)
+    dt = pp.fmt.dtype
+    l2e = jnp.asarray(_L2E, dt)
     r = pl.program_id(2)
     iq = pl.program_id(3)
 
@@ -246,43 +286,48 @@ def _dkv_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, do_ref, m_ref, l_ref,
     q = q_ref[0]
     do = do_ref[0]
     s = _masked_scores(q, k_ref[0], qp_ref[0], kp_ref[0], g=g, scale=scale,
-                       causal=causal, window=window)
+                       causal=causal, window=window, fmt_name=fmt_name)
     m = m_ref[0][:, None]
     l = l_ref[0][:, None]
     dsig = dsig_ref[0][:, None]
-    e = _paexp2(_pam(s - m, _L2E))
-    p = _padiv(e, l)                               # (bq, bk); masked: exact 0
-    dv_acc[...] += _pam_dot(p.T, do, g)            # (bk, dh)
-    dp = _pam_dot(do, v_ref[0].T, g)
-    ds = _ds_tile(e, dp, l, dsig, scale=scale)
-    dk_acc[...] += _pam_dot(ds.T, q, g)            # (bk, dh)
+    e = pp.paexp2(pp.pam(s - m.astype(dt), l2e))
+    # p = e / l in f32 (l is an f32 stat), rounded once to the carrier for
+    # the Pᵀ·dO tile product; masked rows stay an exact 0.
+    p = _padiv(e.astype(jnp.float32), l).astype(dt)
+    dv_acc[...] += pp.pam_dot(p.T, do, g)          # (bk, dh)
+    dp = pp.pam_dot(do, v_ref[0].T, g)
+    ds = _ds_tile(e, dp, l, dsig, scale=scale, fmt_name=fmt_name)
+    dk_acc[...] += pp.pam_dot(ds.T, q, g)          # (bk, dh)
 
     @pl.when(jnp.logical_and(r == rep - 1, iq == nq - 1))
     def _out():
-        dk_ref[0] = dk_acc[...]
-        dv_ref[0] = dv_acc[...]
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
-                                             "bq", "bk", "g", "interpret"))
+                                             "bq", "bk", "g", "interpret",
+                                             "fmt_name"))
 def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, o, m, l, do, *,
                                causal: bool, window, scale, bq: int, bk: int,
-                               g: int, interpret: bool):
+                               g: int, interpret: bool,
+                               fmt_name: str = "f32"):
     """Two-sweep recompute backward: (dq, dk, dv) from saved (o, m, l).
 
     q/o/do/m/l batch over B*Hq; k/v over B*Hkv. dk/dv are returned at true
     Hkv width — the group accumulation happens inside the KV-outer sweep.
     """
+    dt = _fb.FORMATS[fmt_name].dtype
     bh, s_len, dh = q.shape
     bkv, t = k.shape[0], k.shape[1]
     rep = bh // bkv
     bq_, bk_ = min(bq, s_len), min(bk, t)
     sp, tp = -(-s_len // bq_) * bq_, -(-t // bk_) * bk_
-    qp = jnp.pad(q, ((0, 0), (0, sp - s_len), (0, 0)))
-    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
-    op = jnp.pad(o, ((0, 0), (0, sp - s_len), (0, 0)))
-    dop = jnp.pad(do, ((0, 0), (0, sp - s_len), (0, 0)))
+    qp = jnp.pad(q.astype(dt), ((0, 0), (0, sp - s_len), (0, 0)))
+    kp = jnp.pad(k.astype(dt), ((0, 0), (0, tp - t), (0, 0)))
+    vp = jnp.pad(v.astype(dt), ((0, 0), (0, tp - t), (0, 0)))
+    op = jnp.pad(o.astype(dt), ((0, 0), (0, sp - s_len), (0, 0)))
+    dop = jnp.pad(do.astype(dt), ((0, 0), (0, sp - s_len), (0, 0)))
     mp = jnp.pad(m, ((0, 0), (0, sp - s_len)), constant_values=_NEG)
     lp = jnp.pad(l, ((0, 0), (0, sp - s_len)), constant_values=1.0)
     qpos = jnp.pad(q_pos.astype(jnp.int32), (0, sp - s_len),
@@ -299,13 +344,13 @@ def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, o, m, l, do, *,
 
     dq, dsig = pl.pallas_call(
         functools.partial(_dq_kernel, g=g, nk=nk, causal=causal,
-                          window=window, scale=scale),
+                          window=window, scale=scale, fmt_name=fmt_name),
         grid=(bh, nq, nk),
         in_specs=[pos_q_spec, pos_k_spec, q_spec, kv_spec, kv_spec, q_spec,
                   q_spec, row_spec, row_spec],
         out_specs=[q_spec, row_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((bh, sp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sp, dh), dt),
             jax.ShapeDtypeStruct((bh, sp), jnp.float32),
         ],
         scratch_shapes=[
@@ -319,7 +364,7 @@ def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, o, m, l, do, *,
     # query group member by program_id(2), query blocks by program_id(3).
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, g=g, rep=rep, nq=nq, causal=causal,
-                          window=window, scale=scale),
+                          window=window, scale=scale, fmt_name=fmt_name),
         grid=(bkv, nk, rep, nq),
         in_specs=[
             pl.BlockSpec((1, bq_), lambda b, j, r, i: (0, i)),
@@ -337,8 +382,8 @@ def pam_flash_attention_bwd_bh(q, k, v, q_pos, k_pos, o, m, l, do, *,
             pl.BlockSpec((1, bk_, dh), lambda b, j, r, i: (b, j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bkv, tp, dh), jnp.float32),
-            jax.ShapeDtypeStruct((bkv, tp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bkv, tp, dh), dt),
+            jax.ShapeDtypeStruct((bkv, tp, dh), dt),
         ],
         scratch_shapes=[
             pltpu.VMEM((bk_, dh), jnp.float32),

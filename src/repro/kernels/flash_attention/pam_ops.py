@@ -30,6 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import floatbits as _fb
 from repro.core.matmul import _pam_matmul_value
 from repro.core.pam import pam_value, padiv_value, paexp2_value
 
@@ -64,9 +65,10 @@ def _kv_blocks(k, v, k_pos, bc):
     return kb, vb, kpos.reshape(nb, bc), tp
 
 
-def _block_scores(q, kblk, q_pos, kpblk, *, causal, window, scale):
+def _block_scores(q, kblk, q_pos, kpblk, *, causal, window, scale,
+                  fmt=_fb.FLOAT32):
     """(BH, S, bc) masked PAM scores for one KV block."""
-    s = _pam_matmul_value(q, _swap(kblk))
+    s = _pam_matmul_value(q, _swap(kblk), fmt=fmt)
     if scale is not None:
         s = pam_value(s, np.float32(scale))
     valid = (kpblk >= 0)[None, None, :]
@@ -75,7 +77,7 @@ def _block_scores(q, kblk, q_pos, kpblk, *, causal, window, scale):
     if window is not None:
         valid = valid & ((q_pos[None, :, None] - kpblk[None, None, :])
                          < window)
-    return jnp.where(valid, s, _NEG)
+    return jnp.where(valid, s, jnp.asarray(_NEG, s.dtype))
 
 
 def _fold_group(x, bkv, rows):
@@ -85,7 +87,10 @@ def _fold_group(x, bkv, rows):
     return x.reshape((bkv, rows) + x.shape[2:])
 
 
-def _jnp_fwd(q, k, v, q_pos, k_pos, *, causal, window, scale, bc):
+def _jnp_fwd(q, k, v, q_pos, k_pos, *, causal, window, scale, bc,
+             fmt_name="f32"):
+    fmt = _fb.FORMATS[fmt_name]
+    dt = fmt.dtype
     bhq, s_len, dh = q.shape
     bkv = k.shape[0]
     rep = bhq // bkv
@@ -100,25 +105,30 @@ def _jnp_fwd(q, k, v, q_pos, k_pos, *, causal, window, scale, bc):
         acc, m_run, l_run = carry
         kblk, vblk, kpblk = xs
         s = _block_scores(q, kblk, qpos, kpblk, causal=causal, window=window,
-                          scale=scale)
-        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
-        alpha = paexp2_value(pam_value(m_run - m_new, _LOG2E))
-        p = paexp2_value(pam_value(s - m_new, _LOG2E))
-        l_new = pam_value(l_run, alpha) + jnp.sum(p, axis=-1, keepdims=True)
-        acc = pam_value(acc, alpha) + _pam_matmul_value(p, vblk)
+                          scale=scale, fmt=fmt)
+        m_new = jnp.maximum(m_run, jnp.max(s.astype(jnp.float32), axis=-1,
+                                           keepdims=True))
+        alpha = paexp2_value(pam_value((m_run - m_new).astype(dt), _LOG2E))
+        p = paexp2_value(pam_value(s - m_new.astype(dt), _LOG2E))
+        l_new = (pam_value(l_run, alpha.astype(jnp.float32))
+                 + jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True))
+        acc = (pam_value(acc, alpha.astype(jnp.float32))
+               + _pam_matmul_value(p, vblk, fmt=fmt).astype(jnp.float32))
         return (acc, m_new, l_new), None
 
     acc0 = jnp.zeros((bkv, rows, dh), jnp.float32)
     m0 = jnp.full((bkv, rows, 1), _NEG, jnp.float32)
     l0 = jnp.zeros((bkv, rows, 1), jnp.float32)
     (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, kpb))
-    o = padiv_value(acc, l)
+    o = padiv_value(acc, l).astype(dt)
     return (o.reshape(bhq, s_len, dh), m.reshape(bhq, s_len),
             l.reshape(bhq, s_len))
 
 
 def _jnp_bwd(q, k, v, q_pos, k_pos, o, m, l, do, *, causal, window, scale,
-             bc):
+             bc, fmt_name="f32"):
+    fmt = _fb.FORMATS[fmt_name]
+    dt = fmt.dtype
     bhq, s_len, dh = q.shape
     bkv, t = k.shape[0], k.shape[1]
     rep = bhq // bkv
@@ -133,29 +143,35 @@ def _jnp_bwd(q, k, v, q_pos, k_pos, o, m, l, do, *, causal, window, scale,
     l = l[..., None]
     # Delta-form dsig (DESIGN.md §4.3): the exact-arithmetic identity
     # Σ_j e·dP = l·(dO·O) collapses the old dsig KV sweep to one row op.
-    dsig = -padiv_value(jnp.sum(pam_value(do, o), axis=-1, keepdims=True), l)
+    # The dO·O products run in the format's carrier; the row sum and the
+    # padiv by the f32 ``l`` stat stay f32.
+    dsig = -padiv_value(jnp.sum(pam_value(do, o).astype(jnp.float32),
+                                axis=-1, keepdims=True), l)
 
     def grad_step(dq_acc, xs):
         kblk, vblk, kpblk = xs
         s = _block_scores(q, kblk, qpos, kpblk, causal=causal, window=window,
-                          scale=scale)
-        e = paexp2_value(pam_value(s - m, _LOG2E))
-        dp = _pam_matmul_value(do, _swap(vblk))
-        p = padiv_value(e, l)
-        dv_blk = _pam_matmul_value(_swap(p), do)           # (B*Hkv, bc, Dh)
+                          scale=scale, fmt=fmt)
+        e = paexp2_value(pam_value(s - m.astype(dt), _LOG2E))
+        dp = _pam_matmul_value(do, _swap(vblk), fmt=fmt).astype(jnp.float32)
+        p = padiv_value(e.astype(jnp.float32), l).astype(dt)
+        dv_blk = _pam_matmul_value(_swap(p), do, fmt=fmt)  # (B*Hkv, bc, Dh)
         de = padiv_value(dp, l) + dsig
-        du = pam_value(pam_value(e, _LN2), de)
+        du = pam_value(pam_value(e.astype(jnp.float32), _LN2), de)
         ds = pam_value(du, _LOG2E)
         if scale is not None:
             ds = pam_value(ds, np.float32(scale))
-        dk_blk = _pam_matmul_value(_swap(ds), q)           # (B*Hkv, bc, Dh)
-        return dq_acc + _pam_matmul_value(ds, kblk), (dk_blk, dv_blk)
+        ds = ds.astype(dt)
+        dk_blk = _pam_matmul_value(_swap(ds), q, fmt=fmt)  # (B*Hkv, bc, Dh)
+        return (dq_acc
+                + _pam_matmul_value(ds, kblk, fmt=fmt).astype(jnp.float32),
+                (dk_blk, dv_blk))
 
     dq0 = jnp.zeros(q.shape, jnp.float32)
     dq, (dkb, dvb) = jax.lax.scan(grad_step, dq0, (kb, vb, kpb))
     dk = jnp.moveaxis(dkb, 0, 1).reshape(bkv, tp, dh)[:, :t]
     dv = jnp.moveaxis(dvb, 0, 1).reshape(bkv, tp, dh)[:, :t]
-    return dq.reshape(bhq, s_len, dh), dk, dv
+    return dq.reshape(bhq, s_len, dh).astype(dt), dk, dv
 
 
 # ---------------------------------------------------------------------------
@@ -166,23 +182,28 @@ def _jnp_bwd(q, k, v, q_pos, k_pos, o, m, l, do, *, causal, window, scale,
 
 @functools.lru_cache(maxsize=None)
 def _build(causal: bool, window, scale, impl: str, bq: int, bk: int, g: int,
-           bbq: int, bbk: int, bg: int, interpret: bool):
+           bbq: int, bbk: int, bg: int, interpret: bool,
+           fmt_name: str = "f32"):
+    dt = _fb.FORMATS[fmt_name].dtype
     if impl == "pallas":
         def fwd_fn(q, k, v, qpos, kpos):
             return _pk.pam_flash_attention_fwd_bh(
                 q, k, v, qpos, kpos, causal=causal, window=window,
-                scale=scale, bq=bq, bk=bk, g=g, interpret=interpret)
+                scale=scale, bq=bq, bk=bk, g=g, interpret=interpret,
+                fmt_name=fmt_name)
 
         def bwd_fn(q, k, v, qpos, kpos, o, m, l, do):
             return _pk.pam_flash_attention_bwd_bh(
                 q, k, v, qpos, kpos, o, m, l, do, causal=causal,
                 window=window, scale=scale, bq=bbq, bk=bbk, g=bg,
-                interpret=interpret)
+                interpret=interpret, fmt_name=fmt_name)
     else:
         fwd_jit = jax.jit(functools.partial(
-            _jnp_fwd, causal=causal, window=window, scale=scale, bc=bk))
+            _jnp_fwd, causal=causal, window=window, scale=scale, bc=bk,
+            fmt_name=fmt_name))
         bwd_jit = jax.jit(functools.partial(
-            _jnp_bwd, causal=causal, window=window, scale=scale, bc=bbk))
+            _jnp_bwd, causal=causal, window=window, scale=scale, bc=bbk,
+            fmt_name=fmt_name))
 
         def fwd_fn(q, k, v, qpos, kpos):
             return fwd_jit(q, k, v, qpos, kpos)
@@ -201,7 +222,7 @@ def _build(causal: bool, window, scale, impl: str, bq: int, bk: int, g: int,
     def bwd(res, do):
         q, k, v, qpos, kpos, o, m, l = res
         dq, dk, dv = bwd_fn(q, k, v, qpos, kpos, o, m, l,
-                            jnp.asarray(do, jnp.float32))
+                            jnp.asarray(do, dt))
         zero = lambda p: np.zeros(np.shape(p), jax.dtypes.float0)
         return dq, dk, dv, zero(qpos), zero(kpos)
 
@@ -232,22 +253,29 @@ def pam_flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
         # rep = bh // bkv truncates, so a non-divisible head count would
         # silently map late query heads onto a clamped KV block index.
         raise ValueError(f"GQA requires Hq % Hkv == 0, got Hq={hq} Hkv={hkv}")
-    qf = jnp.asarray(q, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hq, s_len, dh)
-    kf = jnp.asarray(k, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
-    vf = jnp.asarray(v, jnp.float32).transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
+    # bf16 q/k/v run the native int16-carrier engines end to end (half the
+    # HBM bytes for tiles; f32 streaming stats); anything else takes the
+    # historical f32 path.
+    fmt_name = ("bf16" if all(jnp.asarray(x).dtype == jnp.bfloat16
+                              for x in (q, k, v)) else "f32")
+    dt = _fb.FORMATS[fmt_name].dtype
+    qf = jnp.asarray(q, dt).transpose(0, 2, 1, 3).reshape(b * hq, s_len, dh)
+    kf = jnp.asarray(k, dt).transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
+    vf = jnp.asarray(v, dt).transpose(0, 2, 1, 3).reshape(b * hkv, t, dh)
 
     interpret = use_interpret()
     abq, abk, ag = autotune.tile_params("pam_attention", (s_len, t, dh),
-                                        interpret)
+                                        interpret, fmt_name)
     bbq, bbk, bg = autotune.tile_params("pam_attention_bwd", (s_len, t, dh),
-                                        interpret)
+                                        interpret, fmt_name)
     bq_, bk_, g_ = bq or abq, bk or abk, g or ag
     bbq_, bbk_, bg_ = bq or bbq, bk or bbk, g or bg
     scale_ = None if scale is None else float(np.float32(scale))
     window_ = None if window is None else int(window)
 
     att = _build(bool(causal), window_, scale_, impl, int(bq_), int(bk_),
-                 int(g_), int(bbq_), int(bbk_), int(bg_), interpret)
+                 int(g_), int(bbq_), int(bbk_), int(bg_), interpret,
+                 fmt_name)
     o = att(qf, kf, vf, jnp.asarray(q_pos, jnp.int32),
             jnp.asarray(k_pos, jnp.int32))
     return o.reshape(b, hq, s_len, dh).transpose(0, 2, 1, 3)

@@ -20,6 +20,8 @@ flush-to-zero backends we target, inf/nan inputs are OUT of contract for
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -75,6 +77,14 @@ PAM_REL_WORST = 1.0 / 9.0
 PADIV_REL_WORST = 1.0 / 8.0
 LOG2_ABS_WORST = 0.0860713320559342          # max_f |f - log2(1+f)|
 EXP2_REL_WORST = 2.0 ** LOG2_ABS_WORST - 1.0  # ~0.061476
+#   L-Mul (l = 4, every supported format): the mantissa-add product with
+#   the +2^-l offset folded into the re-bias. No-carry ratio
+#   (1+fa+fb+2^-l)/((1+fa)(1+fb)) peaks at +2^-l (fa = fb = 0); the
+#   deficit side is worst on the carry boundary fa = fb = 15/32 where the
+#   ratio is 2048/2209, so the band is [-161/2209, +1/16] ~ [-7.29%, +6.25%]
+#   — tighter than PAM's [-1/9, 0] but two-sided.
+LMUL_REL_WORST = 161.0 / 2209.0              # ~0.072885, fa = fb = 15/32
+LMUL_REL_PLUS = 1.0 / 16.0                   # +2^-l at fa = fb = 0
 
 
 # ---------------------------------------------------------------------------
@@ -187,3 +197,165 @@ def _pam_dot(a, b, g):
     while bk % g_:
         g_ -= 1
     return _grouped_pam_sum(*_prep_tiles(a, b), g_)
+
+
+# ---------------------------------------------------------------------------
+# Per-format prims (FloatFormat engine family, DESIGN.md §11).
+#
+# ``get_prims(fmt_name, lmul)`` returns a namespace with the same seven
+# helpers as the module level, specialised to one FloatFormat: constants in
+# the format's carrier dtype (int16 for bf16/f16 — native lane width, no f32
+# round-trip) and, when ``lmul`` is set, the L-Mul mantissa offset folded
+# into the re-bias (one fused constant, zero extra adds per product).
+#
+# The ("f32", lmul=False) instance binds the module-level functions verbatim,
+# so the historical f32 path is bit-identical by construction, not by test.
+#
+# Narrow-format semantics (the deltas vs the f32 kernel contract):
+#   * zero test is the EXPONENT FIELD, not a float compare — int16 carriers
+#     see bf16 denormals explicitly, so the flush documented by the absint
+#     domain (quantize-then-flush below 2^-126) is spelled out in bits;
+#   * products below MIN_NORM flush to +0, magnitude sums saturate at
+#     MAX_FINITE; the disjoint-ranges overflow test ``mag < -BIAS`` holds in
+#     int16 exactly as in int32 (wrapped overflow lands in
+#     [-32768, -16514], genuine underflow in (-16256, 0));
+#   * grouped tile products keep each PAM product in the carrier but
+#     ACCUMULATE IN F32 (exact bf16->f32 embedding), matching the kernels'
+#     f32 VMEM scratch posture.
+# ---------------------------------------------------------------------------
+
+
+class Prims:
+    """Bound PA primitives for one (FloatFormat, lmul) pair."""
+
+    __slots__ = ("fmt", "lmul", "pam", "padiv", "paexp2", "palog2",
+                 "prep_tiles", "grouped_pam_sum", "pam_dot")
+
+    def __init__(self, fmt, lmul, **fns):
+        self.fmt = fmt
+        self.lmul = lmul
+        for k, v in fns.items():
+            setattr(self, k, v)
+
+
+def _build_prims(fmt, lmul):
+    nc = fmt.np_carrier
+    C = fmt.carrier
+    dt = fmt.dtype
+    SIGN, MAG, EXP, MAN = fmt.SIGN_MASK, fmt.MAG_MASK, fmt.EXP_MASK, fmt.MAN_MASK
+    BIAS, MINN, MAXF = fmt.BIAS_SHIFTED, fmt.MIN_NORM, fmt.MAX_FINITE
+    ZSENT = fmt.ZERO_SENTINEL
+    MB = fmt.man_bits
+    # L-Mul folds its +2^-l mantissa offset into the re-bias constant. The
+    # sentinel/overflow band proofs absorb the shift: it is <= 2^(MB-3),
+    # tiny against the 2^MB-wide guard bands (checked for both carriers in
+    # tests/test_format_dispatch.py).
+    FOLD = nc(int(BIAS) - (int(fmt.LMUL_OFFSET) if lmul else 0))
+    ZERO, NEG1 = nc(0), nc(-1)
+    shMB = nc(MB)
+
+    if fmt.width == 32:
+        def _is_zero(x, xi):
+            # Float compare: flush-to-zero backends make denormals == 0.0.
+            return x == 0.0
+    else:
+        def _is_zero(x, xi):
+            # Exponent-field test: explicit denormal flush in the carrier.
+            return (xi & EXP) == ZERO
+
+    def pam(a, b):
+        ai = jax.lax.bitcast_convert_type(a, C)
+        bi = jax.lax.bitcast_convert_type(b, C)
+        sign = (ai ^ bi) & SIGN
+        mag = (ai & MAG) + (bi & MAG) - FOLD
+        ovf = mag < -BIAS       # disjoint-ranges carrier overflow test
+        mag = jnp.where(mag < MINN, ZERO, jnp.minimum(mag, MAXF))
+        mag = jnp.where(ovf, MAXF, mag)
+        out = jax.lax.bitcast_convert_type(sign | mag, dt)
+        zero = _is_zero(a, ai) | _is_zero(b, bi)
+        return jnp.where(zero, jnp.zeros((), dt), out)
+
+    def padiv(a, b):
+        # L-Mul is a product approximation only; division keeps plain PA.
+        ai = jax.lax.bitcast_convert_type(a, C)
+        bi = jax.lax.bitcast_convert_type(b, C)
+        sign = (ai ^ bi) & SIGN
+        mag = (ai & MAG) - (bi & MAG) + BIAS
+        ovf = mag < -BIAS
+        mag = jnp.where(mag < MINN, ZERO, jnp.minimum(mag, MAXF))
+        mag = jnp.where(ovf, MAXF, mag)
+        out = jax.lax.bitcast_convert_type(sign | mag, dt)
+        return jnp.where(_is_zero(a, ai), jnp.zeros((), dt), out)
+
+    def paexp2(a):
+        # Clip bounds / overflow threshold are exact in every format
+        # (powers of two); for a < 128 the biased exponent fits the carrier
+        # un-wrapped, and a >= 128 is overridden to +inf below.
+        ac = jnp.clip(a, -16384.0, 16384.0)
+        n = jnp.floor(ac)
+        man = jnp.round((ac - n) * jnp.asarray(2.0**MB, dt)).astype(C)
+        e = n.astype(C) + (man >> shMB) + nc(fmt.exp_bias)
+        mag = (e << shMB) | (man & MAN)
+        mag = jnp.where(e <= ZERO, ZERO, jnp.minimum(mag, MAXF))
+        out = jax.lax.bitcast_convert_type(mag, dt)
+        return jnp.where(a >= 128.0, jnp.asarray(jnp.inf, dt), out)
+
+    def palog2(a):
+        i = jax.lax.bitcast_convert_type(a, C)
+        return (i - BIAS).astype(dt) * jnp.asarray(2.0**-MB, dt)
+
+    def prep_tiles(a, b):
+        ai = jax.lax.bitcast_convert_type(a, C)
+        bi = jax.lax.bitcast_convert_type(b, C)
+        az = _is_zero(a, ai)
+        bz = _is_zero(b, bi)
+        amT = jnp.where(az, ZSENT, ai & MAG).T
+        bzM = jnp.where(bz, ZERO, NEG1)
+        return (ai & SIGN).T, amT, bi & SIGN, (bi & MAG) - FOLD, bzM
+
+    def grouped_pam_sum(saT, amT, sb, bmg, bzM, g):
+        bk, bm = amT.shape
+        bn = bmg.shape[1]
+        amT = amT.reshape(bk // g, g, bm)
+        saT = saT.reshape(bk // g, g, bm)
+        bmg = bmg.reshape(bk // g, g, bn)
+        sb = sb.reshape(bk // g, g, bn)
+        bzM = bzM.reshape(bk // g, g, bn)
+        part = None
+        for j in range(g):
+            mag = amT[:, j, :, None] + bmg[:, j, None, :]
+            mag = jnp.where(mag < MINN, ZERO, jnp.minimum(mag, MAXF))
+            mag = mag & bzM[:, j, None, :]
+            bits = (saT[:, j, :, None] ^ sb[:, j, None, :]) | mag
+            p = jax.lax.bitcast_convert_type(bits, dt)
+            # Accumulate partials in f32 (exact embedding for bf16/f16;
+            # a no-op cast on the f32 path).
+            p = p.astype(jnp.float32)
+            part = p if part is None else part + p
+        return jnp.sum(part, axis=0)
+
+    def pam_dot(a, b, g):
+        bk = a.shape[-1]
+        g_ = max(1, min(g, bk))
+        while bk % g_:
+            g_ -= 1
+        return grouped_pam_sum(*prep_tiles(a, b), g_)
+
+    return Prims(fmt, lmul, pam=pam, padiv=padiv, paexp2=paexp2,
+                 palog2=palog2, prep_tiles=prep_tiles,
+                 grouped_pam_sum=grouped_pam_sum, pam_dot=pam_dot)
+
+
+@functools.lru_cache(maxsize=None)
+def get_prims(fmt_name: str = "f32", lmul: bool = False) -> Prims:
+    """Primitives namespace for ``fmt_name`` ("f32" / "bf16" / "f16").
+
+    The plain-f32 instance IS the module level: same function objects, so
+    every existing kernel trace is untouched by the format refactor.
+    """
+    fmt = _fb.FORMATS[fmt_name]
+    if fmt_name == "f32" and not lmul:
+        return Prims(fmt, False, pam=_pam, padiv=_padiv, paexp2=_paexp2,
+                     palog2=_palog2, prep_tiles=_prep_tiles,
+                     grouped_pam_sum=_grouped_pam_sum, pam_dot=_pam_dot)
+    return _build_prims(fmt, lmul)

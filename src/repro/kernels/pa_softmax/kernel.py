@@ -16,33 +16,41 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..pa_prims import _pam, _padiv, _paexp2, _LOG2E
+from repro.core import floatbits as _fb
+from ..pa_prims import _LOG2E, get_prims
 
 
-def _kernel(x_ref, o_ref):
+def _kernel(x_ref, o_ref, *, fmt_name: str = "f32"):
+    pp = get_prims(fmt_name)
     x = x_ref[...]
     m = jnp.max(x, axis=-1, keepdims=True)
-    e = _paexp2(_pam(x - m, jnp.full_like(x, _LOG2E)))
-    s = jnp.sum(e, axis=-1, keepdims=True)
-    o_ref[...] = _padiv(e, jnp.broadcast_to(s, e.shape))
+    e = pp.paexp2(pp.pam(x - m, jnp.full_like(x, _LOG2E)))
+    # Row sums accumulate in f32 (exact bf16 embedding; no-op cast for f32)
+    # and round back to the carrier once for the normalising padiv.
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True).astype(x.dtype)
+    o_ref[...] = pp.padiv(e, jnp.broadcast_to(s, e.shape))
 
 
-@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
-def pa_softmax_rows(x, *, rows: int = 8, interpret: bool = True):
-    """PA softmax over the last axis of a 2D f32 array (rows fit VMEM).
+@functools.partial(jax.jit, static_argnames=("rows", "interpret", "fmt_name"))
+def pa_softmax_rows(x, *, rows: int = 8, interpret: bool = True,
+                    fmt_name: str = "f32"):
+    """PA softmax over the last axis of a 2D array (rows fit VMEM).
 
     ``rows`` is the grid's row-block size; callers resolve it from the
     shared autotune table (see ops.py) — pass explicitly to override.
+    ``fmt_name`` selects the FloatFormat: "bf16" runs the fused chain
+    natively in the int16 carrier with bf16 HBM traffic.
     """
+    fmt = _fb.FORMATS[fmt_name]
     r, c = x.shape
     rp = -(-r // rows) * rows
-    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - r), (0, 0)))
+    xp = jnp.pad(x.astype(fmt.dtype), ((0, rp - r), (0, 0)))
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, fmt_name=fmt_name),
         grid=(rp // rows,),
         in_specs=[pl.BlockSpec((rows, c), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((rows, c), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rp, c), fmt.dtype),
         interpret=interpret,
     )(xp)
     return out[:r]

@@ -16,7 +16,13 @@ def pa_softmax(x):
     c = shape[-1]
     if c > _MAX_COLS:
         return pa_softmax_ref(x)
-    x2 = jnp.asarray(x, jnp.float32).reshape(-1, c)
+    # bf16 inputs run the native int16-carrier kernel; everything else
+    # takes the historical f32 path.
+    fmt_name = "bf16" if jnp.asarray(x).dtype == jnp.bfloat16 else "f32"
+    dt = jnp.bfloat16 if fmt_name == "bf16" else jnp.float32
+    x2 = jnp.asarray(x, dt).reshape(-1, c)
     interpret = use_interpret()
-    (rows,) = autotune.tile_params("pa_softmax", (x2.shape[0], c), interpret)
-    return pa_softmax_rows(x2, rows=rows, interpret=interpret).reshape(shape)
+    (rows,) = autotune.tile_params("pa_softmax", (x2.shape[0], c), interpret,
+                                   fmt_name)
+    return pa_softmax_rows(x2, rows=rows, interpret=interpret,
+                           fmt_name=fmt_name).reshape(shape)

@@ -1,21 +1,41 @@
-"""Public wrappers for the fused elementwise PA kernels."""
+"""Public wrappers for the fused elementwise PA kernels.
+
+Each wrapper infers the FloatFormat from its operand dtypes: bf16 operands
+run the native int16-carrier kernel, anything else the historical f32 path.
+"""
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from .._backend import use_interpret
 from .kernel import eltwise_binary, eltwise_unary
 
 
+def _fmt_of(*xs) -> str:
+    return ("bf16" if all(jnp.asarray(x).dtype == jnp.bfloat16 for x in xs)
+            else "f32")
+
+
 def pam(a, b):
-    return eltwise_binary(a, b, op="pam", interpret=use_interpret())
+    return eltwise_binary(a, b, op="pam", interpret=use_interpret(),
+                          fmt_name=_fmt_of(a, b))
+
+
+def lmul(a, b):
+    return eltwise_binary(a, b, op="lmul", interpret=use_interpret(),
+                          fmt_name=_fmt_of(a, b))
 
 
 def padiv(a, b):
-    return eltwise_binary(a, b, op="padiv", interpret=use_interpret())
+    return eltwise_binary(a, b, op="padiv", interpret=use_interpret(),
+                          fmt_name=_fmt_of(a, b))
 
 
 def paexp2(a):
-    return eltwise_unary(a, op="paexp2", interpret=use_interpret())
+    return eltwise_unary(a, op="paexp2", interpret=use_interpret(),
+                         fmt_name=_fmt_of(a))
 
 
 def palog2(a):
-    return eltwise_unary(a, op="palog2", interpret=use_interpret())
+    return eltwise_unary(a, op="palog2", interpret=use_interpret(),
+                         fmt_name=_fmt_of(a))

@@ -40,10 +40,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 # Bit-twiddling constants and the grouped tile product live in the shared
 # kernels/pa_prims.py (plain numpy int32 immediates the kernel body closes
-# over); tile tunables resolve through the shared kernels/autotune.py table.
+# over); per-format variants resolve through pa_prims.get_prims (the f32
+# instance IS the module level); tile tunables resolve through the shared
+# kernels/autotune.py table.
+from repro.core import floatbits as _fb
 from .. import autotune as _autotune
 from ..pa_prims import (_SIGN, _MAG, _EXP, _MAN, _BIAS, _MIN_NORM, _MAX_EXPF,
-                        _MAX_FINITE, _ZSENT, _prep_tiles, _grouped_pam_sum)
+                        _MAX_FINITE, _ZSENT, _prep_tiles, _grouped_pam_sum,
+                        get_prims)
 
 
 # ---------------------------------------------------------------------------
@@ -51,16 +55,17 @@ from ..pa_prims import (_SIGN, _MAG, _EXP, _MAN, _BIAS, _MIN_NORM, _MAX_EXPF,
 # ---------------------------------------------------------------------------
 
 def register_tile_params(m: int, n: int, k: int, params, *,
-                         backend: str = "interpret") -> None:
+                         backend: str = "interpret",
+                         fmt: str = "f32") -> None:
     """Add/override an autotune entry ((bm, bn, bk, g)) for a shape bucket."""
     bm, bn, bk, g = params
     _autotune.register_tile_params("pam_matmul", (m, n, k), (bm, bn, bk, g),
-                                   backend=backend)
+                                   backend=backend, fmt=fmt)
 
 
-def tile_params(m: int, n: int, k: int, interpret: bool):
+def tile_params(m: int, n: int, k: int, interpret: bool, fmt: str = "f32"):
     """Resolve (bm, bn, bk, g) for a problem shape from the autotune table."""
-    return _autotune.tile_params("pam_matmul", (m, n, k), interpret)
+    return _autotune.tile_params("pam_matmul", (m, n, k), interpret, fmt)
 
 
 def _fit(bm, bn, bk, g, m, n, k, *, group_dim: str = "k"):
@@ -82,31 +87,41 @@ def _fit(bm, bn, bk, g, m, n, k, *, group_dim: str = "k"):
 # Forward kernel: out[b] = A[b] ·̂ B[b]   (batched grid).
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(a_ref, b_ref, o_ref, acc_ref, *, g: int, nk: int):
+def _fwd_kernel(a_ref, b_ref, o_ref, acc_ref, *, g: int, nk: int,
+                fmt_name: str = "f32", lmul: bool = False):
+    pp = get_prims(fmt_name, lmul)
+
     @pl.when(pl.program_id(3) == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[0]                                   # (bm, bk) f32 in VMEM
+    a = a_ref[0]                                   # (bm, bk) fmt dtype, VMEM
     b = b_ref[0]                                   # (bk, bn)
-    acc_ref[...] += _grouped_pam_sum(*_prep_tiles(a, b), g)
+    acc_ref[...] += pp.grouped_pam_sum(*pp.prep_tiles(a, b), g)
 
     @pl.when(pl.program_id(3) == nk - 1)
     def _out():
-        o_ref[0] = acc_ref[...]
+        # Narrow formats round the f32 accumulator back to the operand
+        # dtype on the single output store (a no-op cast on the f32 path).
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "bk", "g", "interpret"))
+                   static_argnames=("bm", "bn", "bk", "g", "interpret",
+                                    "fmt_name", "lmul"))
 def pam_matmul_batched(a, b, *, bm: int, bn: int, bk: int, g: int,
-                       interpret: bool):
+                       interpret: bool, fmt_name: str = "f32",
+                       lmul: bool = False):
     """(Ba, M, K) ·̂ (Bb, K, N) -> (max(Ba,Bb), M, N), one pallas_call.
 
     Ba/Bb must be equal or 1 (a size-1 batch is broadcast through its index
     map — the operand is never materialised B times). Pads M/N/K to tile
     multiples; PAM(0, x) == 0 under the sentinel scheme, so zero padding is
-    exact.
+    exact. ``fmt_name`` selects the operand FloatFormat: "bf16" streams
+    bf16 operands and output through HBM (half the bytes of f32) with int16
+    carrier bit math; the VMEM accumulator stays f32.
     """
+    fmt = _fb.FORMATS[fmt_name]
     Ba, m, k = a.shape
     Bb, k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
@@ -116,8 +131,8 @@ def pam_matmul_batched(a, b, *, bm: int, bn: int, bk: int, g: int,
     mp = -(-m // bm_) * bm_
     np_ = -(-n // bn_) * bn_
     kp = -(-k // bk_) * bk_
-    a = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, mp - m), (0, kp - k)))
-    b = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, kp - k), (0, np_ - n)))
+    a = jnp.pad(a.astype(fmt.dtype), ((0, 0), (0, mp - m), (0, kp - k)))
+    b = jnp.pad(b.astype(fmt.dtype), ((0, 0), (0, kp - k), (0, np_ - n)))
     nk = kp // bk_
 
     a_idx = ((lambda bi, i, j, kk: (bi, i, kk)) if Ba > 1
@@ -126,14 +141,15 @@ def pam_matmul_batched(a, b, *, bm: int, bn: int, bk: int, g: int,
              else (lambda bi, i, j, kk: (0, kk, j)))
 
     out = pl.pallas_call(
-        functools.partial(_fwd_kernel, g=g_, nk=nk),
+        functools.partial(_fwd_kernel, g=g_, nk=nk, fmt_name=fmt_name,
+                          lmul=lmul),
         grid=(B, mp // bm_, np_ // bn_, nk),
         in_specs=[
             pl.BlockSpec((1, bm_, bk_), a_idx),
             pl.BlockSpec((1, bk_, bn_), b_idx),
         ],
         out_specs=pl.BlockSpec((1, bm_, bn_), lambda bi, i, j, kk: (bi, i, j)),
-        out_shape=jax.ShapeDtypeStruct((B, mp, np_), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, mp, np_), fmt.dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
     )(a, b)
@@ -141,10 +157,12 @@ def pam_matmul_batched(a, b, *, bm: int, bn: int, bk: int, g: int,
 
 
 def pam_matmul_2d(a, b, *, bm: int = 128, bn: int = 128, bk: int = 512,
-                  g: int = 8, interpret: bool = True):
-    """Bit-exact PAM matmul for 2D f32 operands (thin batched-grid wrapper)."""
+                  g: int = 8, interpret: bool = True, fmt_name: str = "f32",
+                  lmul: bool = False):
+    """Bit-exact PAM matmul for 2D operands (thin batched-grid wrapper)."""
     return pam_matmul_batched(a[None], b[None], bm=bm, bn=bn, bk=bk, g=g,
-                              interpret=interpret)[0]
+                              interpret=interpret, fmt_name=fmt_name,
+                              lmul=lmul)[0]
 
 
 # ---------------------------------------------------------------------------

@@ -18,12 +18,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import floatbits as _fb
+
 from .._backend import use_interpret
 from . import kernel as _k
 
 
-def _resolve(m, n, k, bm, bn, bk, g, interpret):
-    abm, abn, abk, ag = _k.tile_params(m, n, k, interpret)
+def _resolve(m, n, k, bm, bn, bk, g, interpret, fmt_name="f32"):
+    abm, abn, abk, ag = _k.tile_params(m, n, k, interpret, fmt_name)
     return (bm or abm, bn or abn, bk or abk, g or ag)
 
 
@@ -53,10 +55,20 @@ def _fold_batches(a, b):
 
 
 def pam_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
-               bk: int | None = None, g: int | None = None):
-    """Bit-exact PAM matmul, jnp.matmul-shaped, one Pallas launch."""
-    a = jnp.asarray(a, jnp.float32)
-    b = jnp.asarray(b, jnp.float32)
+               bk: int | None = None, g: int | None = None,
+               fmt_name: str | None = None, lmul: bool = False):
+    """Bit-exact PAM matmul, jnp.matmul-shaped, one Pallas launch.
+
+    ``fmt_name`` picks the operand FloatFormat ("f32"/"bf16"); when omitted
+    it is inferred from the operand dtypes (bf16 operands run the native
+    int16-carrier kernel, anything else takes the historical f32 path).
+    """
+    if fmt_name is None:
+        fmt_name = ("bf16" if jnp.asarray(a).dtype == jnp.bfloat16
+                    and jnp.asarray(b).dtype == jnp.bfloat16 else "f32")
+    dt = _fb.FORMATS[fmt_name].dtype
+    a = jnp.asarray(a, dt)
+    b = jnp.asarray(b, dt)
     interpret = use_interpret()
 
     if b.ndim == 2:
@@ -67,17 +79,19 @@ def pam_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
         for d in lead:
             m *= d
         bm_, bn_, bk_, g_ = _resolve(m, b.shape[-1], a.shape[-1],
-                                     bm, bn, bk, g, interpret)
+                                     bm, bn, bk, g, interpret, fmt_name)
         out = _k.pam_matmul_batched(
             a.reshape(1, m, a.shape[-1]), b[None],
-            bm=bm_, bn=bn_, bk=bk_, g=g_, interpret=interpret)
+            bm=bm_, bn=bn_, bk=bk_, g=g_, interpret=interpret,
+            fmt_name=fmt_name, lmul=lmul)
         return out.reshape(*lead, b.shape[-1])
 
     a3, b3, batch = _fold_batches(a, b)
     m, k, n = a3.shape[-2], a3.shape[-1], b3.shape[-1]
-    bm_, bn_, bk_, g_ = _resolve(m, n, k, bm, bn, bk, g, interpret)
+    bm_, bn_, bk_, g_ = _resolve(m, n, k, bm, bn, bk, g, interpret, fmt_name)
     out = _k.pam_matmul_batched(a3, b3, bm=bm_, bn=bn_, bk=bk_, g=g_,
-                                interpret=interpret)
+                                interpret=interpret, fmt_name=fmt_name,
+                                lmul=lmul)
     return out.reshape(batch + (m, n))
 
 

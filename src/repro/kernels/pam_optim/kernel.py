@@ -28,16 +28,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import floatbits as _fb
 from .ref import pa_adamw_math
 
 
 def _kernel(s_ref, p_ref, g_ref, m_ref, v_ref, op_ref, om_ref, ov_ref, *,
-            b1, b2, eps, wd, apply_scale):
+            b1, b2, eps, wd, apply_scale, fmt_name="f32"):
+    cdt = _fb.FORMATS[fmt_name].dtype
     t, lr, scale = s_ref[0], s_ref[1], s_ref[2]
-    pf = p_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    m32 = m_ref[...].astype(jnp.float32)     # bf16 moment decode
-    v32 = v_ref[...].astype(jnp.float32)
+    pf = p_ref[...].astype(cdt)
+    g = g_ref[...].astype(cdt)
+    m32 = m_ref[...].astype(cdt)             # bf16 moment decode (f32 mode)
+    v32 = v_ref[...].astype(cdt)
     new_p, m_new, v_new = pa_adamw_math(pf, g, m32, v32, t, lr, scale,
                                         b1=b1, b2=b2, eps=eps, wd=wd,
                                         apply_scale=apply_scale)
@@ -47,22 +49,28 @@ def _kernel(s_ref, p_ref, g_ref, m_ref, v_ref, op_ref, om_ref, ov_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "b1", "b2", "eps", "wd", "apply_scale", "rows", "cols", "interpret"))
+    "b1", "b2", "eps", "wd", "apply_scale", "rows", "cols", "interpret",
+    "fmt_name"))
 def pa_adamw_leaf_pallas(p, g, m, v, scalars, *, b1, b2, eps, wd,
                          apply_scale, rows: int = 8, cols: int = 1024,
-                         interpret: bool = True):
+                         interpret: bool = True, fmt_name: str = "f32"):
     """Fused PA AdamW update of one parameter leaf.
 
-    p: any shape/dtype; g: same shape (decoded to f32); m/v: moment leaves
-    (f32 or bf16); scalars: (3,) f32 = [t, lr, clip_scale]. Returns
-    (new_p, new_m, new_v) with the input dtypes. Zero-padding is inert:
-    a padded element has g = m = v = p = 0, and the PA chain maps it to 0.
+    p: any shape/dtype; g: same shape (decoded to the compute format); m/v:
+    moment leaves (f32 or bf16); scalars: (3,) f32 = [t, lr, clip_scale].
+    Returns (new_p, new_m, new_v) with the input dtypes. Zero-padding is
+    inert: a padded element has g = m = v = p = 0, and the PA chain maps it
+    to 0. ``fmt_name="bf16"`` runs the whole chain in the int16 carrier:
+    ``pa_adamw_math``'s value ops dispatch on the decoded dtype, and the
+    gradient plane streams through HBM at bf16 width.
     """
+    gdt = jnp.float32 if fmt_name == "f32" else _fb.FORMATS[fmt_name].dtype
     shape, n = p.shape, p.size
     # Clamp the row-block to what the leaf needs (small leaves would
     # otherwise pad to a full default plane), sublane-aligned: 16 covers
-    # bf16 moment tiles, 8 suffices when everything is f32.
-    sub = 8 if all(jnp.dtype(x.dtype).itemsize >= 4 for x in (p, m, v)) else 16
+    # bf16 moment/gradient tiles, 8 suffices when everything is f32.
+    sub = (8 if all(jnp.dtype(x).itemsize >= 4
+                    for x in (p.dtype, m.dtype, v.dtype, gdt)) else 16)
     rows = max(sub, min(rows, -(-max(n, 1) // cols)))
     rows = -(-rows // sub) * sub
     tile = rows * cols
@@ -73,14 +81,14 @@ def pa_adamw_leaf_pallas(p, g, m, v, scalars, *, b1, b2, eps, wd,
         return jnp.pad(flat, (0, npad - n)).reshape(-1, cols)
 
     pv = plane(p, p.dtype)
-    gv = plane(g, jnp.float32)
+    gv = plane(g, gdt)
     mv = plane(m, m.dtype)
     vv = plane(v, v.dtype)
     rtot = npad // cols
 
     new_p, new_m, new_v = pl.pallas_call(
         functools.partial(_kernel, b1=b1, b2=b2, eps=eps, wd=wd,
-                          apply_scale=apply_scale),
+                          apply_scale=apply_scale, fmt_name=fmt_name),
         grid=(rtot // rows,),
         in_specs=[pl.BlockSpec((3,), lambda i: (0,)),
                   pl.BlockSpec((rows, cols), lambda i: (i, 0)),

@@ -28,10 +28,12 @@ def tree_unzip3(out):
 
 
 def pa_adamw_update(params, grads, m, v, t, lr, scale, *, b1, b2, eps,
-                    weight_decay, impl: str = "jnp"):
+                    weight_decay, impl: str = "jnp", fmt: str = "f32"):
     """Fused PA AdamW step over pytrees. ``scale`` is the traced clip scale
     or None (grad_clip == 0: gradients enter the chain unscaled, matching
-    the value-level seed bit for bit). Returns (new_params, new_m, new_v)."""
+    the value-level seed bit for bit). ``fmt="bf16"`` runs the elementwise
+    chain natively in the int16 carrier (both engines). Returns
+    (new_params, new_m, new_v)."""
     apply_scale = scale is not None
     hyp = dict(b1=float(b1), b2=float(b2), eps=float(eps),
                wd=float(weight_decay), apply_scale=apply_scale)
@@ -46,12 +48,14 @@ def pa_adamw_update(params, grads, m, v, t, lr, scale, *, b1, b2, eps,
 
         def upd(p, g, mm, vv):
             rows, cols = autotune.tile_params("pam_optim", (p.size,),
-                                              interpret)
+                                              interpret, fmt)
             return pa_adamw_leaf_pallas(p, g, mm, vv, scalars,
                                         rows=int(rows), cols=int(cols),
-                                        interpret=interpret, **hyp)
+                                        interpret=interpret, fmt_name=fmt,
+                                        **hyp)
     else:
         def upd(p, g, mm, vv):
-            return pa_adamw_leaf_ref(p, g, mm, vv, t, lr, scale_, **hyp)
+            return pa_adamw_leaf_ref(p, g, mm, vv, t, lr, scale_,
+                                     fmt_name=fmt, **hyp)
 
     return tree_unzip3(jax.tree.map(upd, params, grads, m, v))

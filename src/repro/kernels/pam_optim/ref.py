@@ -20,6 +20,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import floatbits as _fb
 from repro.core.pam import (pam_value, padiv_value, paexp2_value,
                             palog2_value, pasqrt_value)
 
@@ -48,19 +49,22 @@ def pa_adamw_math(pf, g, m32, v32, t, lr, scale, *, b1, b2, eps, wd,
                                             pam_value(g, g))
     mhat = padiv_value(m_new, bc1)
     vhat = padiv_value(v_new, bc2)
-    upd = padiv_value(mhat, pasqrt_value(vhat) + np.float32(eps))
+    den = pasqrt_value(vhat)
+    upd = padiv_value(mhat, den + jnp.asarray(np.float32(eps), den.dtype))
     new_p = pf - pam_value(lr, upd) - pam_value(pam_value(lr, np.float32(wd)),
                                                 pf)
     return new_p, m_new, v_new
 
 
 def pa_adamw_leaf_ref(p, g, m, v, t, lr, scale, *, b1, b2, eps, wd,
-                      apply_scale):
-    """jnp engine for one leaf: decode to f32, shared math, encode back to
-    the storage dtypes (bf16 moments round-to-nearest-even, as the kernel's
-    in-VMEM encode does)."""
-    pf, g32, m32, v32 = (jnp.asarray(x).astype(jnp.float32)
-                         for x in (p, g, m, v))
+                      apply_scale, fmt_name="f32"):
+    """jnp engine for one leaf: decode to the compute format, shared math,
+    encode back to the storage dtypes (bf16 moments round-to-nearest-even,
+    as the kernel's in-VMEM encode does). ``fmt_name="bf16"`` runs the
+    whole chain natively in the int16 carrier — every ``*_value`` op in
+    ``pa_adamw_math`` dispatches on the operand dtype."""
+    cdt = _fb.FORMATS[fmt_name].dtype
+    pf, g32, m32, v32 = (jnp.asarray(x).astype(cdt) for x in (p, g, m, v))
     new_p, m_new, v_new = pa_adamw_math(pf, g32, m32, v32, t, lr, scale,
                                         b1=b1, b2=b2, eps=eps, wd=wd,
                                         apply_scale=apply_scale)

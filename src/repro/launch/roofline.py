@@ -34,6 +34,76 @@ PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
 HBM_BW = 819e9           # B/s / chip
 ICI_BW = 50e9            # B/s / link
 
+# ---------------------------------------------------------------------------
+# Energy / ops cost model (ROADMAP item 4).
+#
+# Per-op switching energy, picojoules, 45nm estimates from Horowitz,
+# "Computing's energy problem (and what we can do about it)", ISSCC 2014 —
+# the standard reference both L-Mul ("Addition is All You Need") and the
+# ultra-low-precision multiplication-free line cite for the headline claim.
+# Absolute numbers shift with process node; the RATIOS (fp-mul ≈ 4x fp-add,
+# int-add ≈ 30-70x cheaper than fp-mul, halving width ≈ halves add energy)
+# are what the model reports.
+# ---------------------------------------------------------------------------
+
+ENERGY_PJ = {
+    "fp32_mul": 3.7, "fp32_add": 0.9,
+    "fp16_mul": 1.1, "fp16_add": 0.4,
+    "int32_add": 0.1, "int16_add": 0.05, "int8_add": 0.03,
+}
+
+# DRAM access dwarfs compute: ~1.3-2.6 nJ per 64-bit access at 45nm
+# (Horowitz) -> order 20 pJ/byte. Used for the HBM-traffic energy term.
+HBM_PJ_PER_BYTE = 20.0
+
+# Per FloatFormat: the float add used for accumulation, the integer
+# carrier add that replaces each multiply under PAM/L-Mul, and the native
+# float multiply it displaces. bf16 shares fp16's width class (16-bit
+# datapath, shorter mantissa -> the fp16 row is a conservative ceiling).
+_FMT_OPS = {
+    "f32":  {"mul": "fp32_mul", "add": "fp32_add", "carrier_add": "int32_add"},
+    "bf16": {"mul": "fp16_mul", "add": "fp16_add", "carrier_add": "int16_add"},
+    "f16":  {"mul": "fp16_mul", "add": "fp16_add", "carrier_add": "int16_add"},
+}
+
+
+def mac_energy_pj(fmt_name: str = "f32", engine: str = "native") -> float:
+    """Energy of one multiply-accumulate in picojoules under the model.
+
+    ``native``      fp multiply + fp accumulate add
+    ``pam``/``lmul`` the multiply is ONE integer add in the format's
+                    same-width carrier (sign-XOR / mantissa bookkeeping is
+                    wiring, not switching energy at this granularity); the
+                    accumulate stays a float add of the format.
+    """
+    ops = _FMT_OPS[fmt_name]
+    if engine == "native":
+        return ENERGY_PJ[ops["mul"]] + ENERGY_PJ[ops["add"]]
+    if engine in ("pam", "lmul"):
+        return ENERGY_PJ[ops["carrier_add"]] + ENERGY_PJ[ops["add"]]
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def energy_section(n_macs: int, fmt_name: str = "f32",
+                   hbm_bytes: Optional[int] = None) -> dict:
+    """Joules-style cost block for BENCH files: per-engine MAC energy for
+    ``n_macs`` multiply-accumulates in ``fmt_name``, win ratios vs the
+    native fp datapath, and (optionally) the HBM-traffic energy term."""
+    out = {"model": "horowitz_isscc14_45nm", "n_macs": int(n_macs),
+           "format": fmt_name, "engines": {}}
+    native = mac_energy_pj(fmt_name, "native") * n_macs * 1e-12
+    for eng in ("native", "pam", "lmul"):
+        j = mac_energy_pj(fmt_name, eng) * n_macs * 1e-12
+        out["engines"][eng] = {
+            "mac_pj": round(mac_energy_pj(fmt_name, eng), 3),
+            "compute_joules": j,
+            "win_vs_native": round(native / j, 2) if j else None,
+        }
+    if hbm_bytes is not None:
+        out["hbm_bytes"] = int(hbm_bytes)
+        out["hbm_joules"] = hbm_bytes * HBM_PJ_PER_BYTE * 1e-12
+    return out
+
 _LAYERS = {  # scanned layer count per arch (superblocks for vision)
     "llama3.2-1b": 16, "olmo-1b": 16, "smollm-135m": 30,
     "h2o-danube-3-4b": 24, "rwkv6-7b": 32, "whisper-tiny": 4,
@@ -98,6 +168,16 @@ def analyse_cell(cell: dict, pam_speedup: float = 2.0) -> Optional[dict]:
         "pam_dominant": max((compute / pam_speedup, "compute"),
                             (memory, "memory"),
                             (collective, "collective"))[1],
+        # Joules-style view (ENERGY_PJ model): HLO flops as bf16 MACs
+        # (flops/2) plus the HBM traffic term, native vs PAM datapath.
+        "energy": {
+            "native_j": mac_energy_pj("bf16", "native") * (flops / 2) * 1e-12
+                        + bytes_ * HBM_PJ_PER_BYTE * 1e-12,
+            "pam_j": mac_energy_pj("bf16", "pam") * (flops / 2) * 1e-12
+                     + bytes_ * HBM_PJ_PER_BYTE * 1e-12,
+            "mac_win_vs_native": round(mac_energy_pj("bf16", "native")
+                                       / mac_energy_pj("bf16", "pam"), 2),
+        },
     }
 
 

@@ -108,10 +108,13 @@ class ModelConfig:
 
     @property
     def cdtype(self):
-        # Bit-exact PA modes operate on float32 (the bit algorithm's domain;
-        # narrow formats are simulated by mantissa_bits, Appendix D).
+        # Bit-exact PA modes operate in their FloatFormat's storage dtype:
+        # f32 is the historical domain (narrow formats can still be
+        # SIMULATED there via mantissa_bits, Appendix D); fmt="bf16" runs
+        # the native int16-carrier engines, so activations flow as bf16.
         if self.pa.matmul_is_pa and self.pa.impl != "hw":
-            return jnp.float32
+            from repro.core import floatbits as _fb
+            return _fb.FORMATS[self.pa.fmt].dtype
         return jnp.dtype(self.compute_dtype)
 
     @property
@@ -263,8 +266,10 @@ def apply_rope(x, cos, sin, cfg: ModelConfig):
     """x: (B, S, H, Dh). Rotation multiplies are PA ops in full mode."""
     b, s, h, dh = x.shape
     x1, x2 = jnp.split(x, 2, axis=-1)
-    c = cos[:, :, None, :]
-    sn = sin[:, :, None, :]
+    # Tables are built in f32; round to the activation format so the PA
+    # rotation multiplies see one format (no-op when x is f32).
+    c = cos[:, :, None, :].astype(x.dtype)
+    sn = sin[:, :, None, :].astype(x.dtype)
     r1 = emul(x1, c, cfg) - emul(x2, sn, cfg)
     r2 = emul(x2, c, cfg) + emul(x1, sn, cfg)
     return jnp.concatenate([r1, r2], axis=-1)

@@ -111,7 +111,7 @@ def adamw_update(params, grads, state, cfg: OptConfig,
         new_p, new_m, new_v = pa_adamw_update(
             params, grads, state["m"], state["v"], t, lr, scale,
             b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
-            weight_decay=cfg.weight_decay, impl=pa.impl)
+            weight_decay=cfg.weight_decay, impl=pa.impl, fmt=pa.fmt)
         return (new_p, {"m": new_m, "v": new_v, "step": step},
                 {"grad_norm": gn, "lr": lr})
 

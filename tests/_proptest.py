@@ -1,0 +1,236 @@
+"""Seeded fallback property-test driver (satellite of DESIGN.md §11).
+
+The container does not ship ``hypothesis`` (a dev-only extra,
+requirements-dev.txt) and the tier must not pip-install, so the two
+property suites (``test_property_hypothesis.py``, ``test_absint_property.py``)
+used to silently skip here. This module implements the small strategy
+surface those files actually use — ``floats / integers / sampled_from /
+builds / one_of / just / lists / tuples / data`` plus ``given`` /
+``settings`` — as a DETERMINISTIC seeded random driver: each test's
+example stream is seeded from its qualname, so failures reproduce exactly
+and CI runs are stable.
+
+This is NOT hypothesis: no shrinking, no example database, no adaptive
+search. When the real package is installed the test files import it
+instead and this module is inert. Example counts are capped at
+``PROPTEST_MAX_EXAMPLES`` (default 100) to bound tier-1 time; set the env
+var higher for a deeper sweep.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("PROPTEST_MAX_EXAMPLES", "100"))
+_FILTER_TRIES = 1000
+
+
+class _Strategy:
+    def draw(self, rng):
+        raise NotImplementedError
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+
+class _Filtered(_Strategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def draw(self, rng):
+        for _ in range(_FILTER_TRIES):
+            v = self.base.draw(rng)
+            if self.pred(v):
+                return v
+        raise RuntimeError("filter rejected too many examples")
+
+
+class _Floats(_Strategy):
+    """Float draws biased like hypothesis's: endpoints, zero, uniform
+    spread, and log-uniform magnitudes (the regime PA bit tricks care
+    about)."""
+
+    def __init__(self, min_value, max_value, width=64):
+        self.lo, self.hi, self.width = float(min_value), float(max_value), width
+
+    def _clip(self, v):
+        v = min(max(v, self.lo), self.hi)
+        if self.width == 32:
+            v = float(np.float32(v))
+            # f32 rounding may step past an exactly-representable bound
+            if v < self.lo or v > self.hi:
+                v = float(np.float32(np.nextafter(
+                    np.float32(v), np.float32((self.lo + self.hi) / 2))))
+        return v
+
+    def draw(self, rng):
+        u = rng.random()
+        if u < 0.05:
+            return self._clip(self.lo)
+        if u < 0.10:
+            return self._clip(self.hi)
+        if u < 0.15 and self.lo <= 0.0 <= self.hi:
+            return 0.0
+        if u < 0.55:
+            return self._clip(rng.uniform(self.lo, self.hi))
+        # log-uniform magnitude with a sign that stays in range
+        max_mag = max(abs(self.lo), abs(self.hi))
+        if max_mag == 0.0:
+            return 0.0
+        min_mag = max(min(abs(self.lo), abs(self.hi)) if self.lo * self.hi > 0
+                      else 1e-30, 1e-300)
+        e = rng.uniform(np.log2(min_mag), np.log2(max_mag))
+        mag = 2.0 ** e
+        signs = [s for s in (-1.0, 1.0)
+                 if self.lo <= s * mag <= self.hi]
+        if not signs:
+            return self._clip(rng.uniform(self.lo, self.hi))
+        return self._clip(float(rng.choice(signs)) * mag)
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def draw(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def draw(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class _Builds(_Strategy):
+    def __init__(self, fn, *strats):
+        self.fn, self.strats = fn, strats
+
+    def draw(self, rng):
+        return self.fn(*(s.draw(rng) for s in self.strats))
+
+
+class _OneOf(_Strategy):
+    def __init__(self, strats):
+        self.strats = strats
+
+    def draw(self, rng):
+        return self.strats[int(rng.integers(len(self.strats)))].draw(rng)
+
+
+class _Just(_Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def draw(self, rng):
+        return self.value
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size=0, max_size=10):
+        self.elem, self.lo, self.hi = elem, min_size, max_size
+
+    def draw(self, rng):
+        n = int(rng.integers(self.lo, self.hi + 1))
+        return [self.elem.draw(rng) for _ in range(n)]
+
+
+class _Tuples(_Strategy):
+    def __init__(self, strats):
+        self.strats = strats
+
+    def draw(self, rng):
+        return tuple(s.draw(rng) for s in self.strats)
+
+
+class _DataStrategy(_Strategy):
+    pass
+
+
+class _Data:
+    """Interactive draws inside the test body (st.data())."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy):
+        return strategy.draw(self._rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` for the used subset."""
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, allow_nan=None,
+               allow_infinity=None, width=64):
+        del allow_nan, allow_infinity     # never generated here
+        return _Floats(min_value, max_value, width)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def builds(fn, *strats):
+        return _Builds(fn, *strats)
+
+    @staticmethod
+    def one_of(*strats):
+        return _OneOf(list(strats))
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Tuples(list(strats))
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def given(**strat_kwargs):
+    def deco(fn):
+        def runner():
+            n = min(getattr(runner, "_max_examples", 100), _MAX_EXAMPLES_CAP)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                kw = {}
+                for name, strat in strat_kwargs.items():
+                    kw[name] = (_Data(rng) if isinstance(strat, _DataStrategy)
+                                else strat.draw(rng))
+                try:
+                    fn(**kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on seeded example {i}: "
+                        f"{ {k: v for k, v in kw.items() if not isinstance(v, _Data)} }"
+                    ) from e
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._max_examples = 100
+        return runner
+    return deco
+
+
+def settings(max_examples=100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -10,7 +10,7 @@
   * collective wire-bytes model — tuple operands, iota replica_groups,
     async -start/-done dedup, group-size-1 skip;
   * AUDIT.json schema validation (benchmarks.check_bench_schema);
-  * the deprecation shim in repro.launch.hlo_stats.
+  * removal of the retired repro.launch.hlo_stats shim.
 """
 import re
 
@@ -220,16 +220,24 @@ def test_lint_wrap_risk_literal():
 
 def test_lint_bitcast_width_mismatch():
     def bad(x):
-        return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.int16)
+        # f32 -> int16 splits the word across a trailing dim: a cross-width
+        # bitcast can never be a PA carrier view.
+        return jax.lax.bitcast_convert_type(x, jnp.int16)
 
     out = contract_lint(_jx(bad, X))
     assert out["counts"].get("bitcast_width_mismatch") == 1
-    assert "f32 layout" in out["errors"][0]["detail"]
+    assert "carrier" in out["errors"][0]["detail"]
 
     def good(x):
         return jax.lax.bitcast_convert_type(x, jnp.int32)
 
+    def good_bf16(x):
+        # width-matched narrow-format carrier view: the bf16-native engine's
+        # bread and butter, allowed since the FloatFormat refactor.
+        return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.int16)
+
     assert not contract_lint(_jx(good, X))["errors"]
+    assert not contract_lint(_jx(good_bf16, X))["errors"]
 
 
 def test_lint_scalar_mul_in_scan_warns():
@@ -416,6 +424,15 @@ def _mini_audit_report():
     targets["decoder/full/train@hlo"] = {
         "kind": "hlo", "tensor_total": 0,
         "contract": {"errors": 0, "warnings": 0}, "pow2": 3}
+    for kind in ("train", "decode"):
+        targets[f"decoder/full_bf16/{kind}"] = {
+            "kind": "jaxpr", "tensor_total": 0,
+            "contract": {"errors": 0, "warnings": 0}, "pow2": 3,
+            "absint_twin": "f32",
+            "bf16_native": {"within_certificate": True,
+                            "ops": {"pam": {"measured_rel_worst": 0.11,
+                                            "static_rel_bound": 0.1268}}},
+            **_mini_absint()}
     return {"kind": "audit", "schema_version": 2,
             "generated_utc": "2026-08-08T00:00:00Z", "backend": "cpu",
             "device_count": 4, "families": list(_AUDIT_FAMILIES),
@@ -445,6 +462,12 @@ def test_audit_schema_accepts_clean_report():
      "vacuous"),
     (lambda r: r["targets"].pop("decoder/full/train@hlo"),
      "no compiled-HLO-verified target"),
+    (lambda r: r["targets"].pop("decoder/full_bf16/decode"),
+     "bf16-native engines"),
+    (lambda r: r["targets"]["decoder/full_bf16/train"].pop("bf16_native"),
+     "measured-error block"),
+    (lambda r: r["targets"]["decoder/full_bf16/train"]["bf16_native"]
+     .update(within_certificate=False), "exceeds"),
     (lambda r: r["targets"]["decoder/full/train"]["contract"].update(
         errors=1), "PA-contract errors"),
     (lambda r: r["totals"].update(tensor_total=5), "!= sum over targets"),
@@ -485,32 +508,12 @@ def test_audit_file_staleness_detected(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shim.
+# Shim removal (the launch/hlo_stats deprecation shim shipped its
+# DeprecationWarning for one PR and is now gone).
 # ---------------------------------------------------------------------------
 
-def test_launch_hlo_stats_shim_reexports():
-    from repro.launch import hlo_stats
-    from repro.analysis import audit as _audit, hlo_audit as _hlo
-    assert hlo_stats.jaxpr_mul_stats is _audit.jaxpr_mul_stats
-    assert hlo_stats.collective_stats is _hlo.collective_stats
-    assert hlo_stats.MUL_FAMILY == _audit.MUL_FAMILY
-
-
-def test_launch_hlo_stats_shim_deprecation_fires_once():
+def test_launch_hlo_stats_shim_removed():
     import importlib
-    import warnings
-    from repro.analysis import audit as _audit
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        import repro.launch.hlo_stats as shim
-        shim = importlib.reload(shim)  # re-executes the module body
-        deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
-                and "hlo_stats is deprecated" in str(w.message)]
-    assert len(deps) == 1, [str(w.message) for w in rec]
-    # reload keeps the re-exports identical
-    assert shim.jaxpr_mul_stats is _audit.jaxpr_mul_stats
-    with warnings.catch_warnings(record=True) as rec2:
-        warnings.simplefilter("always")
-        import repro.launch.hlo_stats  # noqa: F401 — cached: no re-exec
-    assert not [w for w in rec2
-                if issubclass(w.category, DeprecationWarning)], rec2
+    import pytest as _pytest
+    with _pytest.raises(ImportError):
+        importlib.import_module("repro.launch.hlo_stats")

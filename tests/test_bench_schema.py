@@ -50,6 +50,44 @@ def test_rejects_unreadable(tmp_path):
     assert any("unreadable" in e for e in validate_file(str(p)))
 
 
+def _mini_formats(size_key="operand_bytes"):
+    """Minimal valid per-FloatFormat section (DESIGN.md §11)."""
+    def sec(f32):
+        return {"engines": {"jnp": 1.0, "pallas": 2.0},
+                size_key: 4096 if f32 else 2048,
+                "hbm_bytes_accessed": 1000 if f32 else 600,
+                "energy": {"engines": {"pam": {"win_vs_native": 4.6}}}}
+    return {"f32": sec(True), "bf16": sec(False)}
+
+
+def test_format_sections_gates():
+    """The bf16 row must halve the operand/state bytes everywhere; the
+    measured HBM reduction is gated on the matmul bench only (the CPU jnp
+    streaming engines pay f32-accumulation cast traffic the schema does
+    not hold against attention/optim)."""
+    from benchmarks.check_bench_schema import _validate_formats
+    rep = {"formats": _mini_formats()}
+    assert _validate_formats(rep, "BENCH_pam_attention.json") == []
+    assert _validate_formats(rep, "BENCH_pam_matmul.json") == []
+
+    swollen = _mini_formats()
+    swollen["bf16"]["hbm_bytes_accessed"] = 2000
+    assert _validate_formats({"formats": swollen},
+                             "BENCH_pam_attention.json") == []
+    errs = _validate_formats({"formats": swollen}, "BENCH_pam_matmul.json")
+    assert any("not reduced" in e for e in errs)
+
+    fat = _mini_formats()
+    fat["bf16"]["operand_bytes"] = fat["f32"]["operand_bytes"]
+    errs = _validate_formats({"formats": fat}, "BENCH_pam_attention.json")
+    assert any("operand_bytes" in e for e in errs)
+
+    noenergy = _mini_formats()
+    del noenergy["bf16"]["energy"]
+    errs = _validate_formats({"formats": noenergy}, "BENCH_pam_matmul.json")
+    assert any("energy" in e for e in errs)
+
+
 def test_attention_requires_v2_backward_fields():
     """BENCH_pam_attention.json is schema v2: backward-engine provenance,
     the vs-unfused-live backward ratio, GQA KV accounting and the kernel
@@ -62,19 +100,21 @@ def test_attention_requires_v2_backward_fields():
             "forward_speedup_vs_seed": {"a": 1.0},
             "slowdown_vs_native": {"a": 1.0}}
     errs = validate_report(base, "BENCH_pam_attention.json")
-    assert any("schema_version must be 2" in e for e in errs)
-    base["schema_version"] = 2
+    assert any("schema_version must be 3" in e for e in errs)
+    base["schema_version"] = 3
     errs = validate_report(base, "BENCH_pam_attention.json")
     assert any("backward" in e for e in errs)
     assert any("fwd_bwd_speedup_vs_unfused_live" in e for e in errs)
     assert any("gqa" in e for e in errs)
     assert any("flash_attention_fingerprint" in e for e in errs)
+    assert any("'formats' section" in e for e in errs)
     base.update({
         "backward": {"engine": "two_sweep_recompute", "sweeps": 2},
         "fwd_bwd_speedup_vs_unfused_live": {"a": 1.0},
         "gqa": {"kv_bytes_fused": 1, "kv_bytes_repeat": 2,
                 "kv_repeat_free": True},
         "flash_attention_fingerprint": "abc",
+        "formats": _mini_formats(),
     })
     assert validate_report(base, "BENCH_pam_attention.json") == []
 
@@ -123,6 +163,8 @@ def test_pam_optim_requires_fingerprint_gates_and_audit():
     errs = validate_report(base, "BENCH_pam_optim.json")
     assert any("tensor_total must be 0" in e for e in errs)
     base["multiplication_audit"] = {"tensor_total": 0}
+    base["schema_version"] = 2
+    base["formats"] = _mini_formats(size_key="state_bytes")
     assert validate_report(base, "BENCH_pam_optim.json") == []
 
 
